@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks (CPU timings are for the pure-jnp reference path;
+Pallas kernels run in interpret mode here — TPU perf comes from the roofline
+analysis, not wall-clock on this host).
+
+Reports, per kernel: reference-path us/call and the STRUCTURAL cost of the
+kernel on TPU v5e (bytes moved, flops, roofline-bound time).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc
+from repro.kernels import ref
+
+PEAK_BW = 819e9        # v5e HBM B/s
+PEAK_FLOPS = 197e12    # v5e bf16 FLOP/s
+PEAK_INT8 = 394e12
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def bench_decode(n_weights=2 ** 22):
+    rng = np.random.default_rng(0)
+    w = rng.integers(-64, 64, size=(n_weights // 8, 8)).astype(np.int8)
+    enc = ecc.encode64(jnp.asarray(w.view(np.uint8)))
+    f = jax.jit(ref.ecc_decode_ref)
+    us = _time(f, enc)
+    # structural: reads n bytes, writes n bytes + n/8 flags
+    bytes_moved = 2 * n_weights + n_weights // 8
+    roof_us = bytes_moved / PEAK_BW * 1e6
+    return us, bytes_moved, roof_us
+
+
+def bench_qmatmul(m=512, k=1024, n=1024):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+    w = rng.integers(-64, 64, size=(k, n)).astype(np.int8)
+    enc = jnp.asarray(np.asarray(ecc.encode64(jnp.asarray(
+        w.view(np.uint8).reshape(k, n // 8, 8)))).reshape(k, n))
+    f = jax.jit(ref.ecc_qmatmul_ref)
+    us = _time(f, a, enc)
+    flops = 2 * m * k * n
+    bytes_moved = m * k + k * n + m * n * 4
+    roof_us = max(flops / PEAK_INT8, bytes_moved / PEAK_BW) * 1e6
+    return us, flops, roof_us
+
+
+def bench_throttle(n=2 ** 22):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.integers(-128, 128, size=(n // 8, 8)).astype(np.int8))
+    f = jax.jit(ref.throttle_ref)
+    us = _time(f, q)
+    roof_us = 2 * n / PEAK_BW * 1e6
+    return us, 2 * n, roof_us
+
+
+def main():
+    us, b, r = bench_decode()
+    print(f"kernel_ecc_decode,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
+    us, fl, r = bench_qmatmul()
+    print(f"kernel_ecc_qmatmul,{us:.0f},tpu_roofline_us={r:.1f}_flops={fl}")
+    us, b, r = bench_throttle()
+    print(f"kernel_throttle,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
+
+
+if __name__ == "__main__":
+    main()

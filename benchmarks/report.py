@@ -1,0 +1,59 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONL files."""
+from __future__ import annotations
+
+import json
+import sys
+
+from . import roofline
+
+
+def table(path: str, caption: str) -> str:
+    rows = []
+    skips = []
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] == "ok":
+            a = roofline.analyze(r)
+            a["_peak"] = r.get("memory", {}).get("peak_memory_in_bytes", 0)
+            a["_compile"] = r.get("compile_s", 0)
+            rows.append(a)
+        elif r["status"] == "skipped":
+            skips.append((r["arch"], r["shape"]))
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    out = [f"**{caption}** ({len(rows)} cells ok, {len(skips)} skipped)\n"]
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | MODEL_FLOPS | useful | roofline frac | peak GB |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+            f"{r['_peak'] / 1e9:.1f} |")
+    if skips:
+        out.append("")
+        out.append("Skipped (per assignment — long_500k on pure "
+                   "full-attention archs): " +
+                   ", ".join(f"{a}/{s}" for a, s in skips))
+    return "\n".join(out)
+
+
+def main():
+    for path, cap in [("results/dryrun_16x16.jsonl",
+                       "Baseline, single-pod 16x16 (256 chips)"),
+                      ("results/dryrun_2x16x16.jsonl",
+                       "Baseline, multi-pod 2x16x16 (512 chips)"),
+                      ("results/dryrun_16x16_opt.jsonl",
+                       "Optimized, single-pod 16x16 (256 chips)"),
+                      ("results/dryrun_2x16x16_opt.jsonl",
+                       "Optimized, multi-pod 2x16x16 (512 chips)")]:
+        try:
+            print(table(path, cap))
+            print()
+        except FileNotFoundError:
+            pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Roofline analysis from the dry-run JSONL (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s)
+  collective = wire_bytes / (chips * 50 GB/s/link ... per-device program, so
+               per-chip wire bytes / 50 GB/s)
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-compute
+ratio. HLO numbers come from the trip-count-aware HLO parser (per-device
+program), so terms are already per-chip.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from repro import configs
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12   # bf16/chip
+HBM_BW = 819e9        # B/s/chip
+LINK_BW = 50e9        # B/s/link ICI
+
+
+def param_counts(cfg):
+    """(total_params, active_params) analytic."""
+    d, v = cfg.d_model, cfg.vocab_padded
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    per_layer_total = per_layer_active = 0
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        attn = d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim \
+            + cfg.n_heads * cfg.head_dim * d
+        mlp = 3 * d * cfg.d_ff
+        per_layer_total = per_layer_active = attn + mlp
+        n_layers = cfg.n_layers
+    elif f == "moe":
+        r, qr, qn, vd, h = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                            cfg.v_head_dim, cfg.n_heads)
+        attn = d * (r + qr) + r * h * qn + r * h * vd + h * vd * d
+        attn += (d * cfg.q_lora_rank + cfg.q_lora_rank * h * (qn + qr)) \
+            if cfg.q_lora_rank else d * h * (qn + qr)
+        experts = cfg.n_experts * 3 * d * cfg.moe_d_ff
+        active = cfg.top_k * 3 * d * cfg.moe_d_ff
+        shared = cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        router = d * cfg.n_experts
+        per_layer_total = attn + experts + shared + router
+        per_layer_active = attn + active + shared + router
+        n_layers = cfg.n_layers
+    elif f == "ssm":
+        di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+        h = di // hd
+        per_layer_total = per_layer_active = \
+            d * (2 * di + 2 * n + h) + di * d
+        n_layers = cfg.n_layers
+    elif f == "hybrid":
+        w = cfg.lru_width or d
+        rg = d * w * 2 + 2 * w * w + w * d
+        attn = d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim \
+            + cfg.n_heads * cfg.head_dim * d
+        mlp = 3 * d * cfg.d_ff
+        per_layer_total = per_layer_active = \
+            (2 * (rg + mlp) + attn + mlp) / 3  # per-layer average
+        n_layers = cfg.n_layers
+    elif f == "encdec":
+        attn = 4 * d * d
+        per_layer_total = per_layer_active = attn * 2 + 2 * d * cfg.d_ff
+        n_layers = cfg.n_layers + cfg.enc_layers
+    total = emb + n_layers * per_layer_total
+    active = emb + n_layers * per_layer_active
+    return total, active
+
+
+def model_flops(cfg, shape):
+    total, active = param_counts(cfg)
+    non_emb = active - cfg.vocab_padded * cfg.d_model * \
+        (1 if cfg.tie_embeddings else 2)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * active * tokens
+    return 2 * active * shape.global_batch  # decode: one token per seq
+
+
+def analyze(rec):
+    cfg = configs.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec.get("n_devices", 256)
+    flops = rec.get("hlo_flops", 0.0)           # per-device program
+    bytes_ = rec.get("hlo_buffer_bytes", 0.0)
+    wire = rec.get("collectives", {}).get("total_wire_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / chips / flops if flops else 0.0
+    bound_time = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / bound_time if bound_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf, "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(frac, 4),
+    }
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_16x16.jsonl"
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("status") != "ok":
+                if rec.get("status") == "skipped":
+                    print(f"roofline_{rec['arch']}_{rec['shape']},0,skipped")
+                continue
+            r = analyze(rec)
+            rows.append(r)
+            print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                  f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.0f},"
+                  f"dom={r['dominant']}_frac={r['roofline_fraction']}"
+                  f"_useful={r['useful_flops_ratio']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

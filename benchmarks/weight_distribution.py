@@ -1,0 +1,60 @@
+"""Paper Table 1 + Figure 1: weight distribution of 8-bit quantized CNNs.
+
+Trains the paper's three CNNs (reduced scale, synthetic data; Adam pretrain
+standing in for ImageNet pretraining) and reports
+(a) % of |q| in [0,32) / [32,64) / [64,128]  (Table 1 'Percentage' rows)
+(b) the position histogram of large values within 8-byte blocks (Figure 1)
+(c) accuracy float32 vs int8 (Table 1 'Accuracy' rows).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import quant, wot
+from repro.training.cnn_experiments import accuracy, pretrain
+
+
+def weight_stats(params):
+    qs = []
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            q, _ = quant.quantize(leaf)
+            qs.append(np.asarray(q).reshape(-1))
+    q = np.concatenate(qs)
+    import jax.numpy as jnp
+    pct = wot.range_percentages(q)
+    hist = np.asarray(wot.large_position_histogram(jnp.asarray(q)))
+    return q.size, pct, hist
+
+
+def run(steps=100, verbose=True):
+    rows = []
+    for name in ("vgg16", "resnet18", "squeezenet"):
+        t0 = time.time()
+        params, fwd, tmpl = pretrain(name, steps=steps)
+        acc_f32 = accuracy(params, fwd, tmpl, quantized=False)
+        acc_int8 = accuracy(params, fwd, tmpl, quantized=True)
+        n, pct, hist = weight_stats(params)
+        us = (time.time() - t0) * 1e6 / max(steps, 1)
+        rows.append((name, us, n, acc_f32, acc_int8, pct, hist))
+        if verbose:
+            print(f"# {name}: {n} weights, acc f32={acc_f32:.3f} "
+                  f"int8={acc_int8:.3f}")
+            print(f"#   |q| pct (Table 1): {pct}")
+            print(f"#   large-value position histogram (Fig 1): "
+                  f"{hist.tolist()}")
+    return rows
+
+
+def main():
+    for name, us, n, a32, a8, pct, hist in run():
+        print(f"table1_{name},{us:.0f},"
+              f"acc_f32={a32:.3f}_int8={a8:.3f}_small_pct="
+              f"{pct['[0,32)'] + pct['[32,64)']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Figures 3 & 4: WOT/QATT convergence.
+
+Tracks, per WOT iteration: (a) # of large values in protected positions
+BEFORE throttling (Fig 3 — falls toward 0), and (b) accuracy before vs after
+throttling (Fig 4 — the gap closes, recovering the quantized baseline)."""
+from __future__ import annotations
+
+import time
+
+from repro.training.cnn_experiments import (accuracy, large_count, pretrain,
+                                            wot_finetune)
+
+
+def run(name="resnet18", pre_steps=100, wot_steps=40, verbose=True):
+    params, fwd, tmpl = pretrain(name, steps=pre_steps)
+    acc_base = accuracy(params, fwd, tmpl, quantized=True)
+    n_large0 = large_count(params)
+
+    t0 = time.time()
+    params, tmpl, curve = wot_finetune(params, fwd, tmpl, steps=wot_steps,
+                                       track=True)
+    us = (time.time() - t0) * 1e6 / wot_steps
+    final_acc = accuracy(params, fwd, tmpl, quantized=True)
+
+    if verbose:
+        print(f"# {name} baseline int8 accuracy: {acc_base:.3f}, "
+              f"initial large values: {n_large0}")
+        print("# iter  large_before_throttle  acc_before  acc_after (Fig3/4)")
+        for s, pre, a, b in curve:
+            if a is not None:
+                print(f"#  {s:3d}  {pre:6d}  {a:.3f}  {b:.3f}")
+        print(f"# final WOT accuracy: {final_acc:.3f} "
+              f"(baseline {acc_base:.3f})")
+    assert large_count(params) == 0, "WOT constraint violated"
+    return us, acc_base, final_acc, curve, n_large0
+
+
+def main():
+    us, acc_base, final_acc, curve, n0 = run()
+    print(f"fig3_fig4_wot,{us:.0f},final_acc={final_acc:.3f}"
+          f"_baseline={acc_base:.3f}_large_init={n0}_large_final=0")
+
+
+if __name__ == "__main__":
+    main()

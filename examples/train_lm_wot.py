@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+full production stack — QAT + WOT, SGD momentum, grad accumulation, async
+ECC-protected checkpointing — then verify the deployable int8 weights satisfy
+the WOT constraint and serve them under injected faults.
+
+  PYTHONPATH=src python examples/train_lm_wot.py [--steps 200]
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import quant, wot
+from repro.data import synthetic
+from repro.models import lm
+from repro.serving import protected
+from repro.training import checkpoint, optim, train
+from repro.launch.serve import inject_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: qwen-family reduced width
+    cfg = configs.get("qwen1.5-4b").with_(
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+        d_ff=1536, vocab=16384, microbatch=2, remat=False)
+    n_params = sum(np.prod(l.shape) for l in
+                   jax.tree.leaves(lm.param_specs(cfg)))
+    print(f"[lm] {cfg.name}-reduced: {n_params / 1e6:.1f}M params")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.sgd_init(params)
+    ckpt = checkpoint.AsyncCheckpointer(args.ckpt, protected=True)
+    step_fn = jax.jit(train.make_train_step(cfg, lr=3e-3, chunk=64))
+
+    t0 = time.time()
+    B, S = 8, 128
+    for step in range(args.steps):
+        b = synthetic.token_batch(cfg.vocab_padded, B, S, seed=0, step=step)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step_fn(params, opt, b)
+        if step % 20 == 0:
+            tok_s = B * S * (step + 1) / (time.time() - t0)
+            print(f"  step {step:4d} loss {float(loss):.4f} ({tok_s:.0f} tok/s)")
+        if (step + 1) % 100 == 0:
+            ckpt.save((params, opt), step + 1)
+    ckpt.wait()
+
+    # deployable weights satisfy WOT
+    bad = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            q, _ = quant.quantize(leaf)
+            bad += int(wot.count_large_in_protected(q.reshape(-1)))
+    print(f"[lm] WOT violations in deployable int8 weights: {bad}")
+
+    # protected serving under faults
+    enc = protected.encode_tree(params)
+    enc_faulty = inject_tree(enc, 1e-4, seed=1)
+    serve = jax.jit(protected.make_serve_step(cfg))
+    cache = lm.init_cache(cfg, 2, 64)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    for t in range(8):
+        logits, cache = serve(enc_faulty, cache, toks,
+                              jnp.full((2,), t, jnp.int32))
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"[lm] served 8 tokens from fault-injected encoded weights: "
+          f"{np.isfinite(np.asarray(logits, np.float32)).all()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Architecture registry: one module per assigned arch (+ paper's CNNs).
+
+``get(name)`` returns the full-size ArchConfig; ``get_smoke(name)`` a reduced
+same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig, SHAPES, ShapeConfig  # noqa: F401
+
+ARCH_IDS = [
+    "paligemma-3b", "minitron-4b", "phi3-medium-14b", "qwen1.5-4b",
+    "deepseek-7b", "mamba2-2.7b", "whisper-base", "deepseek-v2-236b",
+    "deepseek-v3-671b", "recurrentgemma-2b",
+]
+
+CNN_IDS = ["vgg16", "resnet18", "squeezenet"]
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+
+
+def get(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE

@@ -1,0 +1,12 @@
+"""Mamba2-2.7B (SSD, attention-free) [arXiv:2405.21060]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560,
+    n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=128,
+    microbatch=8,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=64, vocab=512, ssm_state=16,
+                     ssm_head_dim=16, ssm_chunk=32, microbatch=1)

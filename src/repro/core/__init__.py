@@ -1,0 +1,2 @@
+"""Core: in-place zero-space ECC, WOT training co-design, fault injection."""
+from . import ecc, faults, protect, quant, wot  # noqa: F401

@@ -1,0 +1,233 @@
+"""SEC-DED codecs for in-place zero-space memory protection (paper §4).
+
+Implements three codecs:
+
+* ``inplace (64,57,1)`` — the paper's contribution. A Hsiao-style SEC-DED code
+  whose 7 check bits are stored *in place*, in the non-informative bit (bit 6)
+  of the first seven bytes of every 8-byte block. Works on WOT-regularized
+  int8 weights where bytes 0..6 of each block are in [-64, 63] (so bit 6 ==
+  bit 7 and carries no information).
+* ``secded72 (72,64,1)`` — the industry-standard baseline: 8 check bits per
+  64-bit block, stored out-of-place (12.5% overhead).
+* ``parity8`` — one parity bit per byte (the paper's "Parity Zero" baseline).
+
+Code construction (64,57,1): GF(2)^7 has exactly 64 odd-weight vectors. Use
+them all as parity-check columns — one per bit of the 64-bit code word. The
+seven weight-1 columns sit at the in-place check positions (bit 6 of bytes
+0..6). Properties: all columns distinct & nonzero -> single-error correction;
+all columns odd weight -> any double-error syndrome is even weight, hence
+never equal to a column -> detected, never miscorrected.
+
+Everything is vectorised over a leading block axis: arrays of shape
+``(..., nblk, 8)`` uint8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# (64, 57, 1) in-place code tables
+# ---------------------------------------------------------------------------
+
+BLOCK_BYTES = 8
+CHECK_BIT = 6  # bit index inside a byte that holds a check bit (bytes 0..6)
+
+
+def _odd_weight_values(width: int) -> list[int]:
+    return [v for v in range(1, 1 << width) if bin(v).count("1") % 2 == 1]
+
+
+def _build_cols64() -> np.ndarray:
+    """COLS[g] = 7-bit parity-check column of global bit g (g = byte*8 + bit)."""
+    cols = np.zeros(64, dtype=np.uint8)
+    check_positions = [i * 8 + CHECK_BIT for i in range(7)]
+    for i, g in enumerate(check_positions):
+        cols[g] = 1 << i  # weight-1 column => check bit i
+    rest = [v for v in _odd_weight_values(7) if bin(v).count("1") >= 3]
+    assert len(rest) == 57
+    data_positions = [g for g in range(64) if g not in check_positions]
+    for g, v in zip(data_positions, rest):
+        cols[g] = v
+    return cols
+
+
+COLS64 = _build_cols64()  # (64,) uint8, values in [1, 127], all odd weight
+
+# ROWMASK64[k, i]: byte mask for byte i of row k — bit b set iff COLS64[i*8+b]
+# has bit k set. Row-k parity of (word & ROWMASK64[k]) == syndrome bit k.
+ROWMASK64 = np.zeros((7, 8), dtype=np.uint8)
+for k in range(7):
+    for g in range(64):
+        if (COLS64[g] >> k) & 1:
+            ROWMASK64[k, g // 8] |= np.uint8(1 << (g % 8))
+
+# COLS64 reshaped per byte for flip-mask computation: (8 bytes, 8 bits)
+COLS64_BYBYTE = COLS64.reshape(8, 8)
+
+_SIGN_KEEP = np.uint8(0xFF ^ (1 << CHECK_BIT))  # 0xBF
+
+
+def _syndrome64(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Syndrome of each 8-byte block. blocks: (..., 8) uint8 -> (...,) uint8."""
+    rowmask = jnp.asarray(ROWMASK64)  # (7, 8)
+    masked = blocks[..., None, :] & rowmask  # (..., 7, 8)
+    pc = jax.lax.population_count(masked).astype(jnp.uint32)
+    parity = (jnp.sum(pc, axis=-1) & 1).astype(jnp.uint8)  # (..., 7)
+    weights = jnp.asarray([1 << k for k in range(7)], dtype=jnp.uint8)
+    return jnp.sum(parity * weights, axis=-1).astype(jnp.uint8)
+
+
+def restore_sign_bits(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Copy bit7 -> bit6 for bytes 0..6 of each block (paper Fig. 2 wiring)."""
+    sign6 = (blocks >> 1) & np.uint8(1 << CHECK_BIT)
+    restored = (blocks & _SIGN_KEEP) | sign6
+    keep_last = jnp.arange(8, dtype=jnp.int32) == 7
+    return jnp.where(keep_last, blocks, restored)
+
+
+def encode64(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Encode WOT-compliant blocks: overwrite bit6 of bytes 0..6 with check bits.
+
+    blocks: (..., 8) uint8 (int8 weights viewed as bytes). Bytes 0..6 must be
+    WOT-small ([-64,63]); their bit 6 is overwritten in place.
+    """
+    blocks = blocks.astype(jnp.uint8)
+    keep_last = jnp.arange(8, dtype=jnp.int32) == 7
+    zeroed = jnp.where(keep_last, blocks, blocks & _SIGN_KEEP)
+    syn = _syndrome64(zeroed)  # (...,) — equals required check bits
+    # scatter syndrome bit i into bit6 of byte i
+    i = jnp.arange(8, dtype=jnp.uint8)
+    checks = ((syn[..., None] >> i) & 1).astype(jnp.uint8) << CHECK_BIT
+    checks = jnp.where(keep_last, jnp.uint8(0), checks)
+    return zeroed | checks
+
+
+def decode64(blocks: jnp.ndarray):
+    """Decode in-place SEC-DED blocks.
+
+    Returns (weights_bytes, single_corrected, double_detected):
+      weights_bytes: (..., 8) uint8 — corrected, sign bits restored.
+      single_corrected / double_detected: (...,) bool per block.
+    """
+    blocks = blocks.astype(jnp.uint8)
+    syn = _syndrome64(blocks)  # (...,)
+    syn_pc = jax.lax.population_count(syn)
+    single = (syn_pc & 1) == 1  # odd-weight syndrome -> single-bit error
+    double = jnp.logical_and(syn != 0, jnp.logical_not(single))
+    cols = jnp.asarray(COLS64_BYBYTE)  # (8, 8)
+    match = (syn[..., None, None] == cols).astype(jnp.uint8)  # (..., 8, 8)
+    bitval = jnp.asarray([1 << b for b in range(8)], dtype=jnp.uint8)
+    flip = jnp.sum(match * bitval, axis=-1).astype(jnp.uint8)  # (..., 8)
+    corrected = jnp.where(single[..., None], blocks ^ flip, blocks)
+    return restore_sign_bits(corrected), single, double
+
+
+# ---------------------------------------------------------------------------
+# (72, 64, 1) standard SEC-DED baseline
+# ---------------------------------------------------------------------------
+
+
+def _build_cols72() -> np.ndarray:
+    """COLS72[g] = 8-bit column for data bit g (g in [0,64)). Check columns
+    are implicitly the 8 weight-1 vectors (stored in a separate check byte)."""
+    vals = [v for v in _odd_weight_values(8) if bin(v).count("1") >= 3]
+    assert len(vals) >= 64
+    return np.asarray(vals[:64], dtype=np.uint8)
+
+
+COLS72 = _build_cols72()
+ROWMASK72 = np.zeros((8, 8), dtype=np.uint8)
+for k in range(8):
+    for g in range(64):
+        if (COLS72[g] >> k) & 1:
+            ROWMASK72[k, g // 8] |= np.uint8(1 << (g % 8))
+COLS72_BYBYTE = COLS72.reshape(8, 8)
+
+
+def _syndrome72(blocks: jnp.ndarray) -> jnp.ndarray:
+    rowmask = jnp.asarray(ROWMASK72)
+    masked = blocks[..., None, :] & rowmask  # (..., 8, 8)
+    pc = jax.lax.population_count(masked).astype(jnp.uint32)
+    parity = (jnp.sum(pc, axis=-1) & 1).astype(jnp.uint8)
+    weights = jnp.asarray([1 << k for k in range(8)], dtype=jnp.uint8)
+    return jnp.sum(parity * weights, axis=-1).astype(jnp.uint8)
+
+
+def encode72(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Returns the check byte for each 8-byte data block: (..., 8) -> (...,)."""
+    return _syndrome72(blocks.astype(jnp.uint8))
+
+
+def decode72(blocks: jnp.ndarray, checks: jnp.ndarray):
+    """Standard SEC-DED decode. Returns (data, single, double)."""
+    blocks = blocks.astype(jnp.uint8)
+    syn = _syndrome72(blocks) ^ checks.astype(jnp.uint8)
+    syn_pc = jax.lax.population_count(syn)
+    single = (syn_pc & 1) == 1
+    double = jnp.logical_and(syn != 0, jnp.logical_not(single))
+    cols = jnp.asarray(COLS72_BYBYTE)
+    match = (syn[..., None, None] == cols).astype(jnp.uint8)
+    bitval = jnp.asarray([1 << b for b in range(8)], dtype=jnp.uint8)
+    flip = jnp.sum(match * bitval, axis=-1).astype(jnp.uint8)
+    corrected = jnp.where(single[..., None], blocks ^ flip, blocks)
+    return corrected, single, double
+
+
+# ---------------------------------------------------------------------------
+# parity-per-byte ("Parity Zero") baseline
+# ---------------------------------------------------------------------------
+
+
+def encode_parity8(data: jnp.ndarray) -> jnp.ndarray:
+    """One parity bit per byte, packed 8 bytes' parities -> 1 check byte.
+
+    data: (..., n) uint8 with n % 8 == 0 -> (..., n // 8) uint8.
+    """
+    data = data.astype(jnp.uint8)
+    parity = (jax.lax.population_count(data) & 1).astype(jnp.uint8)
+    grouped = parity.reshape(*parity.shape[:-1], -1, 8)
+    weights = jnp.asarray([1 << k for k in range(8)], dtype=jnp.uint8)
+    return jnp.sum(grouped * weights, axis=-1).astype(jnp.uint8)
+
+
+def decode_parity8(data: jnp.ndarray, checks: jnp.ndarray):
+    """Detect parity mismatches; zero out mismatching bytes (paper's 'zero').
+
+    Returns (corrected_data, error_mask) with error_mask (..., n) bool.
+    """
+    data = data.astype(jnp.uint8)
+    expected = encode_parity8(data)
+    diff = expected ^ checks.astype(jnp.uint8)  # (..., n//8)
+    i = jnp.arange(8, dtype=jnp.uint8)
+    bad = ((diff[..., None] >> i) & 1).astype(bool)  # (..., n//8, 8)
+    bad = bad.reshape(*data.shape)
+    return jnp.where(bad, jnp.uint8(0), data), bad
+
+
+# ---------------------------------------------------------------------------
+# helpers: int8 tensor <-> padded block view
+# ---------------------------------------------------------------------------
+
+
+def to_blocks(flat_bytes: jnp.ndarray) -> jnp.ndarray:
+    """(n,) uint8 (n % 8 == 0) -> (n // 8, 8) uint8."""
+    return flat_bytes.reshape(-1, BLOCK_BYTES)
+
+
+def pad_to_block_multiple(flat: np.ndarray) -> tuple[np.ndarray, int]:
+    n = flat.shape[0]
+    pad = (-n) % BLOCK_BYTES
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
+    return flat, pad
+
+
+@functools.partial(jax.jit, static_argnames=())
+def inplace_roundtrip(blocks: jnp.ndarray) -> jnp.ndarray:
+    """encode -> decode with no faults (identity on WOT weights); for tests."""
+    dec, _, _ = decode64(encode64(blocks))
+    return dec

@@ -1,0 +1,61 @@
+"""Memory fault injection (paper §5.3).
+
+Fault model: random bit flips in the *stored byte image* of the weights.
+``#faulty bits = round(#weight bits * fault_rate)``; each experiment draws
+distinct bit positions uniformly. Host-side numpy (experiment harness) plus a
+jax scatter-XOR path for on-device injection inside jitted eval loops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_faults(n_bits: int, rate: float) -> int:
+    return int(round(n_bits * rate))
+
+
+def sample_positions(n_bits: int, rate: float, seed: int) -> np.ndarray:
+    """Distinct uniform bit positions. Resample-until-unique (n << n_bits)."""
+    n = n_faults(n_bits, rate)
+    rng = np.random.default_rng(seed)
+    if n == 0:
+        return np.zeros((0,), dtype=np.int64)
+    pos = np.unique(rng.integers(0, n_bits, size=n))
+    while pos.size < n:
+        extra = rng.integers(0, n_bits, size=n - pos.size)
+        pos = np.unique(np.concatenate([pos, extra]))
+    return pos[:n]
+
+
+def flip_bits_np(stored: np.ndarray, positions: np.ndarray) -> np.ndarray:
+    """XOR-flip the given global bit positions of a uint8 byte image."""
+    out = np.array(stored, dtype=np.uint8, copy=True).reshape(-1)
+    byte_idx = positions // 8
+    bit = (np.uint8(1) << (positions % 8).astype(np.uint8))
+    np.bitwise_xor.at(out, byte_idx, bit)
+    return out.reshape(stored.shape)
+
+
+def inject(stored: np.ndarray, rate: float, seed: int) -> np.ndarray:
+    """Inject random bit flips at `rate` into a uint8 byte image."""
+    flat = np.asarray(stored, dtype=np.uint8).reshape(-1)
+    pos = sample_positions(flat.size * 8, rate, seed)
+    return flip_bits_np(flat, pos).reshape(stored.shape)
+
+
+def inject_jax(stored: jnp.ndarray, rate: float, key) -> jnp.ndarray:
+    """On-device injection (jit-safe). Sampling is with replacement; repeated
+    hits cancel in XOR parity, matching physical double-flips. Builds a
+    per-bit parity vector, so intended for test/eval-scale tensors."""
+    flat = stored.reshape(-1).astype(jnp.uint8)
+    n_bits = flat.size * 8
+    n = n_faults(n_bits, rate)
+    if n == 0:
+        return stored
+    pos = jax.random.randint(key, (n,), 0, n_bits)
+    parity = jnp.zeros((n_bits,), jnp.uint8).at[pos].add(1) & 1
+    bitval = jnp.asarray([1 << b for b in range(8)], dtype=jnp.uint8)
+    mask = jnp.sum(parity.reshape(-1, 8) * bitval, axis=-1).astype(jnp.uint8)
+    return (flat ^ mask).reshape(stored.shape)

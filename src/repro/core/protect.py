@@ -1,0 +1,121 @@
+"""Protection-strategy API (paper §5.1 counterparts + the contribution).
+
+A scheme turns a flat int8 weight vector into a *stored byte image* (what
+lives in fault-prone memory) and back. Faults are injected into the full
+stored image — including out-of-place check bytes, exactly as DRAM faults
+would hit ECC bits too.
+
+  none      : raw bytes, no protection                       (paper "faulty")
+  parity8   : byte parity, detected-faulty weight -> 0       (paper "zero")
+  secded72  : standard SEC-DED (72,64,1), 12.5% overhead     (paper "ecc")
+  inplace   : in-place zero-space SEC-DED (64,57,1), 0%      (paper "in-place")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ecc, faults
+
+
+@dataclasses.dataclass
+class Stored:
+    """Byte image of one protected flat weight vector."""
+    data: np.ndarray                      # (n,) uint8 — weight bytes
+    checks: np.ndarray | None             # out-of-place check bytes or None
+    n_weights: int                        # original length (pre-padding)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.data.size + (self.checks.size if self.checks is not None else 0)
+
+
+class Scheme:
+    name: str = "none"
+    needs_ecc_hw: bool = False
+
+    def encode(self, q_flat: np.ndarray) -> Stored:
+        q = np.asarray(q_flat, dtype=np.int8).reshape(-1)
+        data, _ = ecc.pad_to_block_multiple(q.view(np.uint8))
+        return Stored(data=data.copy(), checks=None, n_weights=q.size)
+
+    def decode(self, s: Stored) -> np.ndarray:
+        return s.data[: s.n_weights].view(np.int8).copy()
+
+    def space_overhead(self, s: Stored) -> float:
+        return (s.total_bytes - s.n_weights) / s.n_weights
+
+    def inject(self, s: Stored, rate: float, seed: int) -> Stored:
+        """Flip bits across the whole stored image (data + check bytes)."""
+        if s.checks is None:
+            return Stored(faults.inject(s.data, rate, seed), None, s.n_weights)
+        image = np.concatenate([s.data, s.checks])
+        flipped = faults.inject(image, rate, seed)
+        return Stored(flipped[: s.data.size], flipped[s.data.size:], s.n_weights)
+
+
+class Parity8(Scheme):
+    name = "zero"
+
+    def encode(self, q_flat: np.ndarray) -> Stored:
+        s = super().encode(q_flat)
+        checks = np.asarray(ecc.encode_parity8(jnp.asarray(s.data)))
+        return Stored(s.data, checks, s.n_weights)
+
+    def decode(self, s: Stored) -> np.ndarray:
+        data, _bad = ecc.decode_parity8(jnp.asarray(s.data), jnp.asarray(s.checks))
+        return np.asarray(data)[: s.n_weights].view(np.int8).copy()
+
+
+class Secded72(Scheme):
+    name = "ecc"
+    needs_ecc_hw = True
+
+    def encode(self, q_flat: np.ndarray) -> Stored:
+        s = super().encode(q_flat)
+        checks = np.asarray(ecc.encode72(jnp.asarray(ecc.to_blocks(jnp.asarray(s.data)))))
+        return Stored(s.data, checks, s.n_weights)
+
+    def decode(self, s: Stored) -> np.ndarray:
+        blocks = ecc.to_blocks(jnp.asarray(s.data))
+        data, _single, _double = ecc.decode72(blocks, jnp.asarray(s.checks))
+        return np.asarray(data).reshape(-1)[: s.n_weights].view(np.int8).copy()
+
+
+class InPlace(Scheme):
+    """The paper's contribution. Requires WOT-compliant weights."""
+    name = "in-place"
+    needs_ecc_hw = True
+
+    def encode(self, q_flat: np.ndarray) -> Stored:
+        q = np.asarray(q_flat, dtype=np.int8).reshape(-1)
+        data, _ = ecc.pad_to_block_multiple(q.view(np.uint8))
+        blocks = jnp.asarray(data.reshape(-1, ecc.BLOCK_BYTES))
+        enc = np.asarray(ecc.encode64(blocks)).reshape(-1)
+        return Stored(enc, None, q.size)
+
+    def decode(self, s: Stored) -> np.ndarray:
+        blocks = jnp.asarray(s.data.reshape(-1, ecc.BLOCK_BYTES))
+        dec, _single, _double = ecc.decode64(blocks)
+        return np.asarray(dec).reshape(-1)[: s.n_weights].view(np.int8).copy()
+
+
+SCHEMES: dict[str, Callable[[], Scheme]] = {
+    "faulty": Scheme,
+    "zero": Parity8,
+    "ecc": Secded72,
+    "in-place": InPlace,
+}
+
+
+def get_scheme(name: str) -> Scheme:
+    return SCHEMES[name]()
+
+
+def run_fault_trial(scheme: Scheme, q_flat: np.ndarray, rate: float, seed: int) -> np.ndarray:
+    """encode -> inject faults -> decode: the per-trial pipeline of Table 2."""
+    stored = scheme.encode(q_flat)
+    return scheme.decode(scheme.inject(stored, rate, seed))

@@ -1,0 +1,54 @@
+"""Symmetric range-based linear 8-bit quantization (paper §3, Eq. 1).
+
+``X^q = round(X * (2^(n-1) - 1) / max|X|)`` with n = 8 -> q in [-127, 127].
+Biases are quantized to int32 (paper: 32-bit accumulation / biases).
+Fake-quant with straight-through estimator (STE) drives QAT (paper §4.1 QATT).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127  # 2**(8-1) - 1
+
+
+def compute_scale(x: jnp.ndarray, axis=None, eps: float = 1e-12) -> jnp.ndarray:
+    """scale s.t. q = round(x / scale). Per-tensor (axis=None) or per-channel."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / QMAX
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray | None = None, axis=None):
+    """-> (q int8 in [-127,127], scale)."""
+    if scale is None:
+        scale = compute_scale(x, axis=axis)
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(scale.dtype if hasattr(scale, "dtype") else jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Quantize-dequantize with STE: gradients flow as identity."""
+    scale = jax.lax.stop_gradient(compute_scale(x, axis=axis))
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX)
+    fq = q * scale
+    return x + jax.lax.stop_gradient(fq - x)
+
+
+def quantize_bias(b: jnp.ndarray, scale: jnp.ndarray):
+    """Biases -> int32 at the accumulator scale (paper §3)."""
+    q = jnp.round(b / scale).astype(jnp.int32)
+    return q, scale
+
+
+def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, a_scale, w_scale,
+                preferred=jnp.int32) -> jnp.ndarray:
+    """Quantized matmul with int32 accumulation -> float output."""
+    acc = jax.lax.dot_general(
+        a_q.astype(jnp.int8), w_q.astype(jnp.int8),
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred)
+    return acc.astype(jnp.float32) * (a_scale * w_scale)

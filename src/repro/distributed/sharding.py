@@ -1,0 +1,113 @@
+"""Sharding rules: DP + FSDP over 'data' (and 'pod'), TP/EP over 'model'.
+
+Parameter rules are path-based over the pytrees produced by ``models.lm``.
+Conventions (2-D matmul weights, layer-stacked with a leading L axis):
+
+  in-projections  (D_in, D_out)  -> P(data, model)   (column parallel + FSDP)
+  out-projections (D_in, D_out)  -> P(model, data)   (row parallel + FSDP)
+  expert weights  (E, D, F)      -> P(model, data, None)   (EP + FSDP)
+  embeddings      (V, D)         -> P(model, data)
+  1-D params / norms / convs     -> replicated
+
+KV caches shard sequence over 'model' (every arch's head count need not
+divide 16; S always does) and batch over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+IN_PROJ = {"wq", "wk", "wv", "w_gate", "w_up", "w_y_gate", "w_input_gate",
+           "w_a_gate", "w_dkv", "w_dq", "w_uq", "w_uk", "w_uv", "router",
+           "ws_gate", "ws_up"}
+OUT_PROJ = {"wo", "w_down", "w_out", "ws_down"}
+EXPERT_IN = {"we_gate", "we_up"}
+EXPERT_OUT = {"we_down"}
+PACKED_IN = {"w_in"}  # mamba2 packed projection: model-sharding would split
+                      # the [x,z,B,C,dt] concat across shards -> data only
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_spec(path, leaf, *, data="data", model="model",
+               fsdp: bool = True) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    d = data if fsdp else None
+    base: Optional[tuple]
+
+    if name in ("embed",):
+        base = (model, d)
+    elif name in ("head",):
+        base = (d, model)
+    elif name in EXPERT_IN:
+        base = (model, d, None)
+    elif name in EXPERT_OUT:
+        base = (model, None, d)
+    elif name in PACKED_IN:
+        base = (d, None)
+    elif name in IN_PROJ:
+        base = (d, model)
+    elif name in OUT_PROJ:
+        base = (model, d)
+    else:
+        base = ()  # norms, biases, convs, scalars -> replicated
+
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    if base and ndim == len(base) + 1:   # stacked layer axis
+        base = (None, *base)
+    elif base and ndim != len(base):     # unexpected rank -> replicate
+        base = ()
+    return P(*base)
+
+
+def param_specs(params, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, **kw), params)
+
+
+def cache_spec(path, leaf, *, data="data", model="model") -> P:
+    names = _path_names(path)
+    name = names[-1]
+    ndim = leaf.ndim
+    if name in ("k", "v", "cross_k", "cross_v"):       # (L,B,S,kv,hd)
+        return P(None, data, model, None, None)
+    if name in ("latent", "k_rope"):                   # (L,B,S,r)
+        return P(None, data, model, None)
+    if name == "state":                                # (L,B,h,p,n)
+        return P(None, data, None, None, None)
+    if name.endswith("_h") or name == "h":             # (L,B,w)
+        return P(None, data, None)
+    if name.endswith("conv"):                          # (L,B,k-1,c)
+        return P(None, data, None, None)
+    return P(*([None] * ndim))
+
+
+def cache_specs(cache, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: cache_spec(p, l, **kw), cache)
+
+
+def batch_spec(name: str, leaf, *, dp) -> P:
+    ndim = leaf.ndim
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def batch_specs(batch, *, multi_pod: bool = False):
+    dp = ("pod", "data") if multi_pod else "data"
+    return {k: batch_spec(k, v, dp=dp) for k, v in batch.items()}
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

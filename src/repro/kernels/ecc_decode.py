@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: in-place SEC-DED (64,57,1) decode.
+
+Streams ECC-encoded int8 weight blocks HBM->VMEM, computes the 7-bit Hsiao
+syndrome per 64-bit block with VPU popcounts, corrects single-bit errors,
+restores the non-informative sign bits, and writes decoded weights back — the
+software analogue of the paper's Fig. 2 "swizzle + standard ECC logic" path.
+
+Tiling: operand viewed as (nblk, 8) uint8. Block shape (BLK_N, 8): BLK_N
+blocks per VMEM tile => BLK_N*8 bytes (default 4096 blocks = 32 KiB/tile,
+well inside VMEM; bump for production). The two code tables (ROWMASK64,
+COLS64) ride along as tiny replicated operands (Pallas forbids captured
+consts). All ops are elementwise/reduction on the VPU — no MXU use, so this
+kernel is purely memory-bound (see roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import ecc
+
+DEFAULT_BLK_N = 4096
+
+
+def _decode_tile(blocks, rowmask, cols):
+    """Decode a (bn, 8) uint8 tile. Mirrors core.ecc.decode64 elementwise.
+
+    rowmask: (7, 8) uint8 = ecc.ROWMASK64; cols: (8, 8) uint8 = COLS64_BYBYTE.
+    """
+    masked = blocks[:, None, :] & rowmask  # (bn, 7, 8)
+    pc = jax.lax.population_count(masked).astype(jnp.uint32)
+    parity = (jnp.sum(pc, axis=-1) & 1).astype(jnp.uint8)  # (bn, 7)
+    rowval = (jnp.uint8(1) << jax.lax.broadcasted_iota(jnp.uint8, (7,), 0))
+    syn = jnp.sum(parity * rowval, axis=-1).astype(jnp.uint8)  # (bn,)
+
+    syn_pc = jax.lax.population_count(syn)
+    single = (syn_pc & 1) == 1
+    double = jnp.logical_and(syn != 0, jnp.logical_not(single))
+
+    match = (syn[:, None, None] == cols).astype(jnp.uint8)  # (bn, 8, 8)
+    bitval = (jnp.uint8(1) << jax.lax.broadcasted_iota(jnp.uint8, (8,), 0))
+    flip = jnp.sum(match * bitval, axis=-1).astype(jnp.uint8)  # (bn, 8)
+    corrected = jnp.where(single[:, None], blocks ^ flip, blocks)
+
+    # sign-bit restore: bit6 := bit7 for bytes 0..6
+    sign6 = (corrected >> 1) & np.uint8(1 << ecc.CHECK_BIT)
+    restored = (corrected & np.uint8(0xBF)) | sign6
+    keep_last = jax.lax.broadcasted_iota(jnp.int32, (8,), 0) == 7
+    dec = jnp.where(keep_last, corrected, restored)
+
+    flags = single.astype(jnp.uint8) | (double.astype(jnp.uint8) << 1)
+    return dec, flags
+
+
+def _kernel(enc_ref, rowmask_ref, cols_ref, dec_ref, flags_ref):
+    dec, flags = _decode_tile(enc_ref[...], rowmask_ref[...], cols_ref[...])
+    dec_ref[...] = dec
+    flags_ref[...] = flags
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret"))
+def ecc_decode(enc: jnp.ndarray, *, blk_n: int = DEFAULT_BLK_N,
+               interpret: bool = True):
+    """(nblk, 8) uint8 -> (decoded (nblk, 8) uint8, flags (nblk,) uint8)."""
+    nblk = enc.shape[0]
+    blk_n = min(blk_n, nblk)
+    assert nblk % blk_n == 0, (nblk, blk_n)
+    grid = (nblk // blk_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, 8), lambda i: (i, 0)),
+            pl.BlockSpec((7, 8), lambda i: (0, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_n, 8), lambda i: (i, 0)),
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, 8), jnp.uint8),
+            jax.ShapeDtypeStruct((nblk,), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(enc, jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE))

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused quantize + WOT-throttle (the QATT inner step).
+
+After every optimizer update, QATT quantizes the fp32 masters and clamps
+protected positions. Unfused, that's 3 HBM round-trips (read w, write q,
+read q / write clamped); fused it is one read + one write. The scale
+(max|w|/127) is computed in a first reduction pass (also a kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import quant, wot
+
+DEFAULT_BLK = 4096
+
+
+def _absmax_kernel(w_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0] = jnp.maximum(out_ref[0], jnp.max(jnp.abs(w_ref[...])))
+
+
+def _qt_kernel(w_ref, scale_ref, q_ref):
+    w = w_ref[...]                       # (bn, 8) f32
+    scale = scale_ref[0]
+    q = jnp.clip(jnp.round(w / scale), -quant.QMAX, quant.QMAX)
+    pos = jax.lax.broadcasted_iota(jnp.int32, w.shape, dimension=1)
+    clamped = jnp.clip(q, wot.WOT_LO, wot.WOT_HI)
+    q = jnp.where(pos == 7, q, clamped)
+    q_ref[...] = q.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def quantize_throttle(w_blocks: jnp.ndarray, *, blk: int = DEFAULT_BLK,
+                      interpret: bool = True):
+    """(nblk, 8) f32 -> (int8 q (nblk, 8) WOT-compliant, scale f32 ()).
+
+    Deployment-exact: equals quantize() then throttle_q()."""
+    nblk = w_blocks.shape[0]
+    blk = min(blk, nblk)
+    assert nblk % blk == 0
+    absmax = pl.pallas_call(
+        _absmax_kernel,
+        grid=(nblk // blk,),
+        in_specs=[pl.BlockSpec((blk, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=interpret,
+    )(w_blocks.astype(jnp.float32))
+    scale = jnp.maximum(absmax, 1e-12) / quant.QMAX
+    q = pl.pallas_call(
+        _qt_kernel,
+        grid=(nblk // blk,),
+        in_specs=[pl.BlockSpec((blk, 8), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((blk, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, 8), jnp.int8),
+        interpret=interpret,
+    )(w_blocks.astype(jnp.float32), scale)
+    return q, scale[0]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecc, wot
+
+
+def ecc_decode_ref(enc_blocks: jnp.ndarray):
+    """(nblk, 8) uint8 encoded -> (decoded uint8 (nblk,8), flags uint8 (nblk,)).
+
+    flags bit0 = single-corrected, bit1 = double-detected.
+    """
+    dec, single, double = ecc.decode64(enc_blocks)
+    flags = single.astype(jnp.uint8) | (double.astype(jnp.uint8) << 1)
+    return dec, flags
+
+
+def ecc_qmatmul_ref(a_q: jnp.ndarray, w_enc: jnp.ndarray) -> jnp.ndarray:
+    """Decode-then-matmul oracle.
+
+    a_q:   (M, K) int8 activations
+    w_enc: (K, N) uint8 in-place-ECC-encoded int8 weights (blocks along N)
+    -> (M, N) int32 accumulator.
+    """
+    k_dim, n_dim = w_enc.shape
+    blocks = w_enc.reshape(k_dim, n_dim // ecc.BLOCK_BYTES, ecc.BLOCK_BYTES)
+    dec, _, _ = ecc.decode64(blocks)
+    w_q = jax.lax.bitcast_convert_type(dec.reshape(k_dim, n_dim), jnp.int8)
+    return jax.lax.dot_general(
+        a_q, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def throttle_ref(q_blocks: jnp.ndarray) -> jnp.ndarray:
+    """(nblk, 8) int8 -> WOT-throttled (positions 0..6 clamped to [-64, 63])."""
+    pos = jnp.arange(ecc.BLOCK_BYTES)
+    clamped = jnp.clip(q_blocks, wot.WOT_LO, wot.WOT_HI)
+    return jnp.where(pos == ecc.BLOCK_BYTES - 1, q_blocks, clamped).astype(jnp.int8)

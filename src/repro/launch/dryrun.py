@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+512 placeholder host devices stand in for 2 pods x 256 TPU v5e chips. For
+each cell we jit the real step function with production in/out shardings,
+``.lower().compile()``, and record memory_analysis + cost_analysis + parsed
+collective traffic to JSONL for the roofline (§Roofline in EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+
+
+def _mem_analysis(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            if hasattr(ma, f):
+                out[f] = int(getattr(ma, f))
+    except Exception as e:  # noqa: BLE001 — record, don't die
+        out["error"] = str(e)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
+             sp=True, decode_per_step=True, chunk=2048,
+             save_hlo: str | None = None, microbatch=None) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "fsdp": fsdp, "sp": sp}
+    ok, why = specs.cell_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        kw = ({"decode_per_step": decode_per_step} if shape.kind == "decode"
+              else {"chunk": chunk})
+        if shape.kind == "train" and microbatch is not None:
+            kw["microbatch"] = microbatch
+        if shape.kind == "train":
+            kw["sp"] = sp  # prefill uses its own default (sp off)
+        step, args, in_sh, out_sh = specs.cell(cfg, shape, mesh, fsdp=fsdp, **kw)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        as_named = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            tree, is_leaf=lambda x: isinstance(x, P))
+        # donate the big state buffers (params+opt for train, cache for
+        # decode) so update-in-place aliases instead of doubling HBM
+        donate = (0, 1) if shape.kind == "train" else \
+            ((1,) if shape.kind == "decode" else ())
+        with mesh:
+            jitted = jax.jit(step, in_shardings=as_named(in_sh),
+                             out_shardings=as_named(out_sh),
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        hlo = compiled.as_text()
+        stats = hlo_analysis.compute_stats(hlo)
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=_mem_analysis(compiled), cost=_cost_analysis(compiled),
+            hlo_flops=stats["flops"], hlo_buffer_bytes=stats["buffer_bytes"],
+            collectives={"total_wire_bytes": stats["total_wire_bytes"],
+                         **stats["collectives"]},
+            n_devices=int(np.prod(mesh.devices.shape)),
+        )
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   elapsed_s=round(time.time() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--no-decode-per-step", action="store_true")
+    ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already recorded ok in --out")
+    args = ap.parse_args()
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    for a, s, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (a, s, mesh_name) in done:
+            print(f"[skip-done] {a} {s} {mesh_name}", flush=True)
+            continue
+        print(f"[cell] {a} {s} {mesh_name} ...", flush=True)
+        fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+        rec = run_cell(a, s, mp, fsdp=fsdp, sp=not args.no_sp,
+                       decode_per_step=not args.no_decode_per_step,
+                       chunk=args.chunk, save_hlo=args.save_hlo,
+                       microbatch=args.microbatch)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        status = rec["status"]
+        extra = rec.get("reason") or rec.get("error", "")
+        flops = rec.get("cost", {}).get("flops", 0)
+        print(f"  -> {status} flops={flops:.3g} "
+              f"coll={rec.get('collectives', {}).get('total_wire_bytes', 0):.3g}B"
+              f" {extra[:120]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Structural analysis of compiled (post-SPMD) HLO text for the roofline.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified), so for
+scan-over-layers programs it under-counts by ~L x n_micro. This module walks
+the HLO module properly:
+
+* per-computation symbol table (%name -> shape) so operand shapes resolve,
+* dot/convolution FLOPs from shapes + contracting dims,
+* buffer-traffic bytes (result + operand bytes of materializing ops),
+* collective wire bytes per device with ring-algorithm factors:
+    all-gather          (n-1)/n * result_bytes
+    all-reduce          2*(n-1)/n * operand_bytes
+    reduce-scatter      (n-1)/n * operand_bytes
+    all-to-all          (n-1)/n * operand_bytes
+    collective-permute  operand_bytes
+* call-graph aggregation with while trip-count multipliers
+  (backend_config known_trip_count, else condition-constant inference).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+"?n"?\s*:?\s*"?(\d+)')
+_CALLS_RE = re.compile(r"(?:to_apply|calls|body|branch_computations)="
+                       r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops whose result+operand buffers we count as memory traffic
+_TRAFFIC_OPS = {"dot", "convolution", "fusion", "copy", "gather", "scatter",
+                "dynamic-slice", "dynamic-update-slice", "concatenate",
+                "pad", "transpose", "broadcast", "reduce", "reduce-window",
+                "sort", "select-and-scatter", "slice", "reverse", "add",
+                "multiply", "subtract", "divide", "exponential", "tanh",
+                "maximum", "minimum", "compare", "select", "convert",
+                "rsqrt", "negate", "and", "or", "xor", "popcnt",
+                "shift-left", "shift-right-logical", "iota"} | set(COLLECTIVES)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    return [int(d) for d in m.group(2).split(",") if d] if m else []
+
+
+def _group_size(tail: str) -> int:
+    m = _GROUPS_RE.search(tail)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS2_RE.search(tail)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire(kind: str, ob: float, rb: float, n: int) -> float:
+    frac = (n - 1) / max(n, 1)
+    if kind == "all-gather":
+        return frac * rb
+    if kind == "all-reduce":
+        return 2 * frac * ob
+    if kind in ("reduce-scatter", "all-to-all"):
+        return frac * ob
+    return float(ob)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+class _CompStats:
+    __slots__ = ("flops", "bytes", "coll", "children")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = defaultdict(lambda: [0, 0.0])
+        self.children: list[tuple[str, int]] = []
+
+
+def _parse_computation(lines: list[str], comp_names) -> _CompStats:
+    st = _CompStats()
+    table: dict[str, str] = {}  # %name -> type text
+    parsed = []
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            # parameter lines: "%p = f32[..] parameter(0)" match too; others skip
+            continue
+        name, typ, opcode, rest = m.groups()
+        table[name] = typ
+        parsed.append((name, typ, opcode, rest, line))
+
+    for name, typ, opcode, rest, line in parsed:
+        base = opcode.replace("-start", "").replace("-done", "")
+        if opcode.endswith("-done"):
+            continue
+        # operand byte resolution (first segment of rest, up to "), ")
+        op_names = _OPERAND_RE.findall(rest.split("), ")[0] if ")," in rest
+                                       else rest)
+        ob = sum(_shape_bytes(table.get(o, "")) for o in op_names)
+        rb = _shape_bytes(typ)
+
+        if base in _TRAFFIC_OPS:
+            st.bytes += rb + (ob if base in ("dot", "convolution", "fusion",
+                                             "gather", "scatter", "copy",
+                                             "dynamic-update-slice",
+                                             "concatenate") else 0)
+        if base == "dot":
+            lhs = table.get(op_names[0], "") if op_names else ""
+            lhs_dims = _first_dims(lhs)
+            cm = _DOT_CDIMS.search(line)
+            cdims = [int(x) for x in cm.group(1).split(",") if x] if cm else []
+            contract = 1
+            for c in cdims:
+                if c < len(lhs_dims):
+                    contract *= lhs_dims[c]
+            res = 1
+            for d in _first_dims(typ):
+                res *= d
+            st.flops += 2.0 * res * contract
+        elif base == "convolution":
+            ker = _first_dims(table.get(op_names[1], "")) if len(op_names) > 1 \
+                else []
+            k = 1
+            for d in ker[:-1]:
+                k *= d
+            res = 1
+            for d in _first_dims(typ):
+                res *= d
+            st.flops += 2.0 * res * k
+        elif base in COLLECTIVES:
+            n = _group_size(line)
+            st.coll[base][0] += 1
+            st.coll[base][1] += _wire(base, ob, rb, n)
+
+        if base == "while":
+            bm = _WHILE_BODY.search(line)
+            if bm and bm.group(1) in comp_names:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                st.children.append((bm.group(1), trips))
+        elif base in ("fusion", "call", "conditional", "reduce",
+                      "reduce-window", "scatter", "sort", "map",
+                      "select-and-scatter", "all-reduce", "reduce-scatter",
+                      "custom-call", "async-start"):
+            cm2 = _CALLS_RE.search(line)
+            if cm2:
+                for callee in re.findall(r"[\w.\-]+", cm2.group(1)):
+                    if callee in comp_names and base in ("call", "conditional",
+                                                         "fusion"):
+                        # fusion subcomputations already counted via traffic;
+                        # only real calls multiply
+                        if base in ("call", "conditional"):
+                            st.children.append((callee, 1))
+    return st
+
+
+def compute_stats(hlo_text: str) -> dict:
+    """{"flops", "buffer_bytes", "collectives": {kind: {count, wire_bytes}},
+    "total_wire_bytes"} for one device's program, loop-trip aware."""
+    comps = _split_computations(hlo_text)
+    if not comps:
+        comps = {"__all__": hlo_text.splitlines()}
+    names = set(comps)
+    stats = {n: _parse_computation(ls, names) for n, ls in comps.items()}
+
+    called = {c for s in stats.values() for c, _ in s.children}
+    roots = [n for n in comps if n not in called]
+    # prefer the ENTRY computation if identifiable; else all uncalled
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry in names:
+        roots = [entry]
+
+    memo: dict[str, tuple] = {}
+
+    def agg(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 100:
+            return (0.0, 0.0, {})
+        s = stats[name]
+        f, b = s.flops, s.bytes
+        coll = {k: list(v) for k, v in s.coll.items()}
+        for callee, trips in s.children:
+            cf, cb, cc = agg(callee, depth + 1)
+            f += cf * trips
+            b += cb * trips
+            for kind, (c, w) in cc.items():
+                coll.setdefault(kind, [0, 0.0])
+                coll[kind][0] += c * trips
+                coll[kind][1] += w * trips
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    t_f = t_b = 0.0
+    t_coll: dict = {}
+    for r in roots:
+        f, b, coll = agg(r)
+        t_f += f
+        t_b += b
+        for kind, (c, w) in coll.items():
+            t_coll.setdefault(kind, [0, 0.0])
+            t_coll[kind][0] += c
+            t_coll[kind][1] += w
+    collectives = {k: {"count": v[0], "wire_bytes": v[1]}
+                   for k, v in t_coll.items()}
+    return {"flops": t_f, "buffer_bytes": t_b, "collectives": collectives,
+            "total_wire_bytes": sum(v[1] for v in t_coll.values())}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    s = compute_stats(hlo_text)
+    out = dict(s["collectives"])
+    out["total_wire_bytes"] = s["total_wire_bytes"]
+    return out

@@ -1,0 +1,24 @@
+"""Production mesh builders (functions, never module-level constants — the
+dry-run must set XLA_FLAGS before any jax device initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the same axis names (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def axis_names(multi_pod: bool):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,77 @@
+"""Protected-serving driver: batched decode with ECC-encoded weights.
+
+Demonstrates the full serving path at local scale: quantize + throttle +
+in-place-ECC-encode the weights, inject memory faults at a chosen rate, and
+decode-serve batched requests — faults are corrected on the fly.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
+      --fault-rate 1e-4 --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import faults
+from repro.models import lm
+from repro.serving import protected
+
+
+def inject_tree(enc_params, rate: float, seed: int):
+    """Flip random bits in every encoded weight image (memory fault model)."""
+    i = 0
+
+    def inj(x):
+        nonlocal i
+        if isinstance(x, dict) and set(x) == {"enc", "scale"}:
+            i += 1
+            return {"enc": jnp.asarray(
+                faults.inject(np.asarray(x["enc"]), rate, seed + i)),
+                "scale": x["scale"]}
+        return x
+
+    return jax.tree.map(inj, enc_params,
+                        is_leaf=lambda x: isinstance(x, dict) and
+                        set(x) == {"enc", "scale"})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--fault-rate", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    print(f"[serve] {cfg.name} smoke config, fault_rate={args.fault_rate}")
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    enc = protected.encode_tree(params)
+    if args.fault_rate:
+        enc = inject_tree(enc, args.fault_rate, args.seed)
+        print("[serve] injected faults into the resident weight images")
+
+    serve_step = jax.jit(protected.make_serve_step(cfg))
+    cache = lm.init_cache(cfg, args.batch, max(64, args.tokens * 2))
+    tokens = jnp.zeros((args.batch, 1), jnp.int32)
+    t0 = time.time()
+    out = []
+    for t in range(args.tokens):
+        pos = jnp.full((args.batch,), t, jnp.int32)
+        logits, cache = serve_step(enc, cache, tokens, pos)
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(int(tokens[0, 0]))
+    dt = time.time() - t0
+    print(f"[serve] {args.tokens} steps x batch {args.batch} in {dt:.2f}s "
+          f"({args.tokens * args.batch / dt:.1f} tok/s)")
+    print(f"[serve] sample continuation: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell (no allocation).
+
+``cell_specs(cfg, shape, multi_pod)`` returns (step_fn, arg_specs,
+in_shardings, out_shardings, meta) ready for
+``jax.jit(step_fn, ...).lower(*arg_specs).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models import lm
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.serving import protected
+from repro.training import optim, train
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig, *, micro: bool = True):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "targets": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                      jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _sanitize(spec_tree, sds_tree, mesh):
+    """Drop mesh axes from dims they don't divide (B=1 cells, odd head
+    counts, enc_seq=1500, ...)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        if not isinstance(spec, P):
+            return spec
+        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
+        out = []
+        for dim_size, entry in zip(sds.shape, dims):
+            if entry is None:
+                out.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = int(np.prod([sizes[n] for n in names]))
+            out.append(entry if dim_size % prod == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_gib(cfg: ArchConfig) -> float:
+    """Analytic total param size in GiB at cfg.param_dtype."""
+    import numpy as np
+    specs = lm.param_specs(cfg, jnp.dtype(cfg.param_dtype))
+    return float(sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree.leaves(specs))) / 2**30
+
+
+def train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
+               sp=True, chunk=2048, seqs_per_shard=8, microbatch=None):
+    """Training step cell: (step_fn, args, in_shardings, out_shardings).
+
+    Perf defaults (see EXPERIMENTS.md §Perf): few microbatches (FSDP param
+    all-gathers and grad reductions repeat per microbatch, so fewer micros =
+    proportionally less collective traffic), FSDP auto-off when
+    params+momentum fit model-sharded-only (< 5 GiB/chip)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dp_size = sizes.get("pod", 1) * sizes["data"]
+    if microbatch is None:
+        n_micro = max(1, shape.global_batch // (dp_size * seqs_per_shard))
+    else:
+        n_micro = microbatch
+    cfg = cfg.with_(microbatch=n_micro)
+    if fsdp is None:
+        # params + momentum, model-axis sharded only
+        fsdp = 2 * param_gib(cfg) / sizes["model"] > 5.0
+    lm.set_sharding_ctx({"dp": dp, "model": "model", "sp": sp,
+                         "model_size": sizes["model"]})
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = lm.param_specs(cfg, dtype)
+    opt = optim.SgdState(params)
+    batch = batch_struct(cfg, shape)
+
+    pspec = sh.param_specs(params, fsdp=fsdp)
+    pspec = _sanitize(pspec, params, mesh)
+    ospec = optim.SgdState(pspec)
+    bspec = _sanitize(sh.batch_specs(batch, multi_pod="pod" in mesh.axis_names),
+                      batch, mesh)
+
+    step = train.make_train_step(cfg, chunk=chunk)
+    in_sh = (pspec, ospec, bspec)
+    out_sh = (pspec, ospec, P())
+    return step, (params, opt, batch), in_sh, out_sh
+
+
+def _serving_fsdp_auto(cfg, mesh) -> bool:
+    """int8 weight images: shard over 'data' too only when model-axis-only
+    sharding would blow HBM (count GiB / model_shards > 5)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    count_gib = param_gib(cfg.with_(param_dtype="float32")) / 4
+    return count_gib / sizes["model"] > 5.0
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
+                decode_per_step=True):
+    """Protected-serving decode cell (one new token, KV cache of seq_len)."""
+    lm.set_sharding_ctx(None)
+    if fsdp is None:
+        fsdp = _serving_fsdp_auto(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    enc = jax.eval_shape(
+        lambda: protected.encode_tree(lm.init_params(cfg, jax.random.PRNGKey(0),
+                                                     jnp.float32)))
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((b,), jnp.int32)
+
+    espec = protected.spec_tree(enc, functools.partial(sh.param_spec, fsdp=fsdp))
+    espec = _sanitize(espec, enc, mesh)
+    cspec = _sanitize(sh.cache_specs(cache), cache, mesh)
+    tspec, posspec = _sanitize((P("data", None), P("data")),
+                               (tokens, pos), mesh)
+
+    step_inner = protected.make_serve_step(cfg, decode_per_step=decode_per_step)
+
+    def step(enc_params, cache, tokens, pos):
+        return step_inner(enc_params, cache, tokens, pos)
+
+    in_sh = (espec, cspec, tspec, posspec)
+    out_sh = (P("data", None, "model") if b % 16 == 0 else P(None, None, "model"),
+              cspec)
+    return step, (enc, cache, tokens, pos), in_sh, out_sh
+
+
+def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
+                 chunk=2048, sp=None):
+    """Protected-serving prefill cell: full-sequence forward -> logits.
+
+    sp auto: OFF when head-sharded attention can engage (n_heads divides the
+    model axis — enables the triangle-unrolled chunk loop too; measured
+    1.66x on deepseek-7b prefill_32k) or for attention-free archs; ON
+    otherwise (non-divisible head counts regress 1.5-2x without SP)."""
+    if fsdp is None:
+        fsdp = _serving_fsdp_auto(cfg, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if sp is None:
+        heads_ok = cfg.n_heads and cfg.n_heads % sizes["model"] == 0
+        sp = not (heads_ok or cfg.family == "ssm")
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    lm.set_sharding_ctx({"dp": dp, "model": "model", "sp": sp,
+                         "model_size": dict(zip(mesh.axis_names,
+                                                mesh.devices.shape))["model"]})
+    b, s = shape.global_batch, shape.seq_len
+    enc = jax.eval_shape(
+        lambda: protected.encode_tree(lm.init_params(cfg, jax.random.PRNGKey(0),
+                                                     jnp.float32)))
+    tokens = _sds((b, s), jnp.int32)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["prefix_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+    if cfg.family == "encdec":
+        extras["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+
+    espec = protected.spec_tree(enc, functools.partial(sh.param_spec, fsdp=fsdp))
+    espec = _sanitize(espec, enc, mesh)
+    tspec = _sanitize(P(dp, None), tokens, mesh)
+    xspec = _sanitize({k: sh.batch_spec(k, v, dp=dp) for k, v in extras.items()},
+                      extras, mesh)
+
+    prefill = protected.make_prefill(cfg, chunk=chunk)
+
+    def step(enc_params, tokens, extras):
+        return prefill(enc_params, tokens, extras)
+
+    in_sh = (espec, tspec, xspec)
+    s_out = s + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits_sds = _sds((b, s_out, cfg.vocab_padded), jnp.bfloat16)
+    out_sh = _sanitize(P(dp, None, "model"), logits_sds, mesh)
+    return step, (enc, tokens, extras), in_sh, out_sh
+
+
+def cell(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw):
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh, **kw)
+    return decode_cell(cfg, shape, mesh, **{k: v for k, v in kw.items()
+                                            if k in ("fsdp", "decode_per_step")})
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch (O(S^2) " \
+                      "attention / O(S) KV cache at 524k is not deployable)"
+    return True, ""

@@ -1,0 +1,1 @@
+from . import cnn, config, layers, lm  # noqa: F401

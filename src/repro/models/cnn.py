@@ -1,0 +1,204 @@
+"""CNNs from the paper's evaluation (VGG16, ResNet18, SqueezeNet) in JAX.
+
+Full ImageNet-scale definitions plus a ``scale``/``img_size`` reduction knob
+so the WOT + fault-injection experiments run at CPU scale (the paper's claims
+we validate — weight-distribution statistics, WOT convergence to the
+constraint, protection ordering — are mechanism-level, not dataset-level).
+
+Params are dicts; convs use NHWC / HWIO layouts. ``wt`` hooks QAT fake-quant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Identity = lambda w: w
+
+
+def conv(p, x, *, stride=1, padding="SAME", wt=Identity):
+    y = jax.lax.conv_general_dilated(
+        x, wt(p["w"]).astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype) if "b" in p else y
+
+
+def _conv_init(key, kh, kw, cin, cout, bias=True):
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / (kh * kw * cin))
+    p = {"w": w.astype(jnp.float32)}
+    if bias:
+        p["b"] = jnp.zeros((cout,), jnp.float32)
+    return p
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------- VGG16 ----
+
+_VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+               512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def init_vgg16(key, *, n_classes=1000, scale=1.0, img_size=224):
+    keys = iter(jax.random.split(key, 32))
+    params, cin = {"convs": []}, 3
+    for item in _VGG16_PLAN:
+        if item == "M":
+            continue
+        cout = max(8, int(item * scale))
+        params["convs"].append(_conv_init(next(keys), 3, 3, cin, cout))
+        cin = cout
+    spatial = img_size // 32
+    fc1 = max(32, int(4096 * scale))
+    params["fc1"] = {"w": jax.random.normal(next(keys), (cin * spatial * spatial,
+                                                         fc1)) * 0.01,
+                     "b": jnp.zeros((fc1,))}
+    params["fc2"] = {"w": jax.random.normal(next(keys), (fc1, fc1)) * 0.01,
+                     "b": jnp.zeros((fc1,))}
+    params["fc3"] = {"w": jax.random.normal(next(keys), (fc1, n_classes)) * 0.01,
+                     "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def vgg16(params, x, wt=Identity):
+    ci = 0
+    for item in _VGG16_PLAN:
+        if item == "M":
+            x = maxpool(x)
+        else:
+            x = jax.nn.relu(conv(params["convs"][ci], x, wt=wt))
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ wt(params["fc1"]["w"]).astype(x.dtype) + params["fc1"]["b"])
+    x = jax.nn.relu(x @ wt(params["fc2"]["w"]).astype(x.dtype) + params["fc2"]["b"])
+    return x @ wt(params["fc3"]["w"]).astype(x.dtype) + params["fc3"]["b"]
+
+
+# -------------------------------------------------------------- ResNet18 ---
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(p, x, training=False, eps=1e-5):
+    if training:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mu, var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + eps) * p["scale"]
+    return (x - mu) * inv + p["bias"]
+
+
+def init_resnet18(key, *, n_classes=1000, scale=1.0, img_size=224):
+    widths = [max(8, int(w * scale)) for w in (64, 128, 256, 512)]
+    keys = iter(jax.random.split(key, 64))
+    p = {"stem": _conv_init(next(keys), 7, 7, 3, widths[0], bias=False),
+         "stem_bn": _bn_init(widths[0]), "stages": []}
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        stage = []
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {"c1": _conv_init(next(keys), 3, 3, cin, w, bias=False),
+                   "bn1": _bn_init(w),
+                   "c2": _conv_init(next(keys), 3, 3, w, w, bias=False),
+                   "bn2": _bn_init(w)}
+            if stride != 1 or cin != w:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, w, bias=False)
+                blk["proj_bn"] = _bn_init(w)
+            stage.append(blk)
+            cin = w
+        p["stages"].append(stage)
+    p["fc"] = {"w": jax.random.normal(next(keys), (cin, n_classes)) * 0.01,
+               "b": jnp.zeros((n_classes,))}
+    return p
+
+
+def resnet18(p, x, wt=Identity, training=False):
+    x = jax.nn.relu(batchnorm(p["stem_bn"], conv(p["stem"], x, stride=2, wt=wt),
+                              training))
+    x = maxpool(x, 3, 2)
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            idn = x
+            y = jax.nn.relu(batchnorm(blk["bn1"],
+                                      conv(blk["c1"], x, stride=stride,
+                                           wt=wt), training))
+            y = batchnorm(blk["bn2"], conv(blk["c2"], y, wt=wt), training)
+            if "proj" in blk:
+                idn = batchnorm(blk["proj_bn"],
+                                conv(blk["proj"], x, stride=stride, wt=wt),
+                                training)
+            x = jax.nn.relu(y + idn)
+    x = avgpool_global(x)
+    return x @ wt(p["fc"]["w"]).astype(x.dtype) + p["fc"]["b"]
+
+
+# ------------------------------------------------------------ SqueezeNet ---
+
+
+def _fire_init(key, cin, squeeze, expand):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"squeeze": _conv_init(k1, 1, 1, cin, squeeze),
+            "e1": _conv_init(k2, 1, 1, squeeze, expand),
+            "e3": _conv_init(k3, 3, 3, squeeze, expand)}
+
+
+def fire(p, x, wt=Identity):
+    s = jax.nn.relu(conv(p["squeeze"], x, wt=wt))
+    return jnp.concatenate([jax.nn.relu(conv(p["e1"], s, wt=wt)),
+                            jax.nn.relu(conv(p["e3"], s, wt=wt))], axis=-1)
+
+
+_FIRE_PLAN = [(16, 64), (16, 64), (32, 128), "M", (32, 128), (48, 192),
+              (48, 192), (64, 256), "M", (64, 256)]
+
+
+def init_squeezenet(key, *, n_classes=1000, scale=1.0, img_size=224):
+    keys = iter(jax.random.split(key, 16))
+    sc = lambda c: max(4, int(c * scale))
+    p = {"stem": _conv_init(next(keys), 3, 3, 3, sc(64)), "fires": []}
+    cin = sc(64)
+    for item in _FIRE_PLAN:
+        if item == "M":
+            continue
+        sq, ex = item
+        p["fires"].append(_fire_init(next(keys), cin, sc(sq), sc(ex)))
+        cin = 2 * sc(ex)
+    p["head"] = _conv_init(next(keys), 1, 1, cin, n_classes)
+    return p
+
+
+def squeezenet(p, x, wt=Identity):
+    x = jax.nn.relu(conv(p["stem"], x, stride=2, wt=wt))
+    x = maxpool(x, 3, 2)
+    fi = 0
+    for item in _FIRE_PLAN:
+        if item == "M":
+            x = maxpool(x, 3, 2)
+        else:
+            x = fire(p["fires"][fi], x, wt=wt)
+            fi += 1
+    x = conv(p["head"], x, wt=wt)
+    return avgpool_global(x)
+
+
+CNNS: dict[str, tuple[Callable, Callable]] = {
+    "vgg16": (init_vgg16, vgg16),
+    "resnet18": (init_resnet18, resnet18),
+    "squeezenet": (init_squeezenet, squeezenet),
+}

@@ -1,0 +1,746 @@
+"""Model building blocks (pure functions over param dicts).
+
+Conventions:
+* activations bf16 (configurable), params fp32 masters during training.
+* ``wt`` is a weight-transform hook: QAT fake-quant during training
+  (``core.quant.fake_quant``), identity for plain eval, or the int8
+  decode+dequant path for protected serving.
+* all attention is chunked (online-softmax over KV chunks) so 32k prefill
+  fits HBM; decode paths take explicit KV caches.
+* every block is shape-polymorphic over batch; layers carry no state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Identity = lambda w: w
+
+# --------------------------------------------------------------------------
+# sharding context: set by the launcher/dry-run; None => no constraints
+# (plain CPU smoke tests). Layers use it to pin internals XLA would
+# otherwise replicate (MoE dispatch buffers, residual stream).
+# --------------------------------------------------------------------------
+
+SHARDING_CTX: dict | None = None
+
+
+def set_sharding_ctx(ctx: dict | None):
+    global SHARDING_CTX
+    SHARDING_CTX = ctx
+
+
+def constrain(x, *spec):
+    if SHARDING_CTX is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def ctx_dp():
+    return SHARDING_CTX.get("dp") if SHARDING_CTX else None
+
+
+def constrain_heads(t):
+    """(B, H, S, D) attention tensor -> shard heads over 'model' when the
+    head count divides the axis. Keeps softmax/scores fully local per shard
+    instead of replicating O(S^2) score buffers. DISABLED when sequence
+    parallelism is active: S already owns the 'model' axis there, and the
+    conflicting constraints force XLA into full rematerialization
+    (measured: v3 train collective 48TB -> 160TB with both on)."""
+    if SHARDING_CTX is None or SHARDING_CTX.get("sp"):
+        return t
+    msize = SHARDING_CTX.get("model_size", 1)
+    if t.shape[1] % msize == 0:
+        return constrain(t, ctx_dp(), "model", None, None)
+    return t
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def apply_norm(x, p, kind):
+    return rms_norm(x, p["w"]) if kind == "rms" else layer_norm(x, p["w"], p["b"])
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# chunked (flash-style) attention
+# --------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, mask, scale):
+    """q (B,H,Sq,D) k/v (B,H,Sk,D[v]) mask (Sq,Sk) or None -> (o, m, l)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)                       # (B,H,Sq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                       # (B,H,Sq)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int = 2048,
+                             window: int = 0) -> jnp.ndarray:
+    """Online-softmax causal attention.
+
+    q,k,v: (B, H, S, D) (k/v already GQA-broadcast). window > 0 restricts to a
+    sliding local window (must equal `chunk` for the fast path used here).
+    Returns (B, H, S, Dv).
+    """
+    b, h, s, d = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(d)
+    if window:
+        if window >= s:
+            window = 0      # window covers everything -> plain causal
+        else:
+            chunk = window  # fast path: one previous chunk == the window
+    chunk = min(chunk, s)
+    if s % chunk:  # zero-pad tail; padded keys are causally invisible to real
+        pad = chunk - s % chunk  # queries, padded query rows are sliced off
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = chunked_causal_attention(qp, kp, vp, chunk=chunk, window=window)
+        return out[:, :, :s]
+    nq = s // chunk
+    if window:
+        assert window == chunk, "fast path assumes window == chunk"
+
+    qc = q.reshape(b, h, nq, chunk, d)
+    kc = k.reshape(b, h, nq, chunk, d)
+    vc = v.reshape(b, h, nq, chunk, dv)
+    idx = jnp.arange(chunk)
+    # mask within the diagonal chunk / against the previous chunk
+    diag_mask = idx[:, None] >= idx[None, :]
+    prev_mask = (idx[:, None] + chunk) >= (idx[None, :] + 1) if not window else \
+        (idx[:, None] < idx[None, :])  # window: only strictly-newer prev keys
+
+    def q_block(i, qi):
+        """attend query chunk i over kv chunks 0..i (or i-1..i if windowed)."""
+        oi, mi, li = _attend_chunk(qi, kc[:, :, i], vc[:, :, i], diag_mask, scale)
+
+        def merge(carry, j):
+            o, m, l = carry
+            kj = jax.lax.dynamic_index_in_dim(kc, j, axis=2, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, axis=2, keepdims=False)
+            valid = j >= 0
+            if window:
+                mask = prev_mask
+            else:
+                mask = None
+            o2, m2, l2 = _attend_chunk(qi, kj, vj, mask, scale)
+            m2 = jnp.where(valid, m2, -jnp.inf)
+            mnew = jnp.maximum(m, m2)
+            a1 = jnp.exp(m - mnew)
+            a2 = jnp.where(valid, jnp.exp(m2 - mnew), 0.0)
+            o = o * a1[..., None].astype(o.dtype) + \
+                jnp.where(valid, o2 * a2[..., None].astype(o.dtype), 0)
+            l = l * a1 + l2 * a2
+            return (o, mnew, l), None
+
+        if window:
+            (oi, mi, li), _ = merge((oi, mi, li), i - 1)
+        else:
+            js = jnp.arange(nq)  # j < i valid; others masked by `valid`
+            (oi, mi, li), _ = jax.lax.scan(
+                lambda c, j: merge(c, jnp.where(j < i, j, -1)), (oi, mi, li), js)
+        return oi / jnp.maximum(li, 1e-30)[..., None].astype(oi.dtype)
+
+    sp_active = SHARDING_CTX is not None and SHARDING_CTX.get("sp")
+    if nq == 1:
+        out = q_block(0, qc[:, :, 0])[:, :, None]
+    elif not window and nq <= 64 and not sp_active:
+        # TRIANGLE-UNROLLED path: q chunk i touches only kv chunks 0..i, so
+        # the masked upper half of the S^2 score matrix is never computed
+        # (~47% attention flops+bytes saved vs the scan-all-chunks path).
+        # Disabled under sequence parallelism: per-chunk S slices would land
+        # on single shards and force replication (measured 10x regression).
+        def merge_nomask(carry, j):
+            # qi travels in the carry: jax.lax.scan caches traced bodies by
+            # (function id, avals), so a closure over the loop's qi would
+            # bake iteration 0's query chunk into every later scan. KV chunks
+            # are dynamically indexed from the full buffers — slicing a
+            # per-i prefix copy would materialize O(nq^2) chunk copies.
+            o, m, l, qi = carry
+            kj = jax.lax.dynamic_index_in_dim(kc, j, axis=2, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, axis=2, keepdims=False)
+            o2, m2, l2 = _attend_chunk(qi, kj, vj, None, scale)
+            mnew = jnp.maximum(m, m2)
+            a1, a2 = jnp.exp(m - mnew), jnp.exp(m2 - mnew)
+            o = o * a1[..., None].astype(o.dtype) + \
+                o2 * a2[..., None].astype(o.dtype)
+            return (o, mnew, l * a1 + l2 * a2, qi), None
+
+        outs = []
+        for i in range(nq):
+            qi = qc[:, :, i]
+            oi, mi, li = _attend_chunk(qi, kc[:, :, i], vc[:, :, i],
+                                       diag_mask, scale)
+            if i > 0:  # static trip count i: only the causal triangle runs
+                (oi, mi, li, _), _ = jax.lax.scan(
+                    merge_nomask, (oi, mi, li, qi), jnp.arange(i))
+            outs.append(oi / jnp.maximum(li, 1e-30)[..., None].astype(oi.dtype))
+        out = jnp.stack(outs, axis=2)
+    else:
+        out = jax.vmap(q_block, in_axes=(0, 2), out_axes=2)(jnp.arange(nq), qc)
+    return out.reshape(b, h, s, dv)
+
+
+def decode_attention(q, k_cache, v_cache, length_mask=None):
+    """q: (B,H,1,D); caches: (B,H,Skv,D). Full-cache single-token attention."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    if length_mask is not None:
+        s = jnp.where(length_mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v_cache)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+
+
+def gqa_params_shape(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": (d, h * hd), "wk": (d, kv * hd), "wv": (d, kv * hd),
+        "wo": (h * hd, d),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": (h * hd,), "bk": (kv * hd,), "bv": (kv * hd,)})
+    return p
+
+
+def _proj(x, w, b=None, wt=Identity):
+    y = x @ wt(w).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def gqa_attention(p, x, cfg, *, positions, wt=Identity, causal=True,
+                  window=0, chunk=2048):
+    """Training/prefill attention over a full sequence. x: (B,S,D)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq"), wt).reshape(b, s, h, hd)
+    k = _proj(x, p["wk"], p.get("bk"), wt).reshape(b, s, kv, hd)
+    v = _proj(x, p["wv"], p.get("bv"), wt).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # GQA broadcast kv -> h
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    q, k, v = (constrain_heads(t.transpose(0, 2, 1, 3)) for t in (q, k, v))
+    if causal:
+        o = chunked_causal_attention(q, k, v, chunk=chunk, window=window)
+    else:  # bidirectional (whisper encoder)
+        o, m, l = _attend_chunk(q, k, v, None, 1.0 / np.sqrt(hd))
+        o = o / jnp.maximum(l, 1e-30)[..., None].astype(o.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return _proj(o, p["wo"], None, wt)
+
+
+def gqa_decode(p, x, cfg, cache, *, pos, wt=Identity, window=0):
+    """Single-token decode. x: (B,1,D); cache: {"k","v": (B, Smax, kv, hd)}.
+
+    pos: (B,) current position. Returns (out, new_cache).
+    """
+    b, _, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(x, p["wq"], p.get("bq"), wt).reshape(b, 1, h, hd)
+    k = _proj(x, p["wk"], p.get("bk"), wt).reshape(b, 1, kv, hd)
+    v = _proj(x, p["wv"], p.get("bv"), wt).reshape(b, 1, kv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    smax = cache["k"].shape[1]
+    slot = (pos % smax) if window else pos  # ring buffer for windowed caches
+    kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice_in_dim(c, kk, i, 0)
+                  )(cache["k"], k, slot)
+    vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice_in_dim(c, vv, i, 0)
+                  )(cache["v"], v, slot)
+    rep = h // kv
+    kh = jnp.repeat(kc, rep, axis=2).transpose(0, 2, 1, 3)  # (B,H,Smax,hd)
+    vh = jnp.repeat(vc, rep, axis=2).transpose(0, 2, 1, 3)
+    if window:  # ring buffer: all slots valid once wrapped, else <= pos
+        valid = jnp.logical_or(jnp.arange(smax)[None, :] <= pos[:, None],
+                               (pos >= smax)[:, None])
+    else:
+        valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    o = decode_attention(q.transpose(0, 2, 1, 3), kh, vh, valid)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return _proj(o, p["wo"], None, wt), {"k": kc, "v": vc}
+
+
+# --------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# --------------------------------------------------------------------------
+
+
+def cross_params_shape(cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {"wq": (d, h * hd), "wk": (d, h * hd), "wv": (d, h * hd),
+            "wo": (h * hd, d)}
+
+
+def cross_kv(p, enc_out, cfg, wt=Identity):
+    """Precompute cross-attention K/V from encoder output: (B,Se,H,hd) x2."""
+    b, se, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    k = _proj(enc_out, p["wk"], None, wt).reshape(b, se, h, hd)
+    v = _proj(enc_out, p["wv"], None, wt).reshape(b, se, h, hd)
+    return k, v
+
+
+def cross_attention(p, x, kv, cfg, wt=Identity):
+    """x: (B,Sd,D); kv: (k, v) each (B,Se,H,hd). Bidirectional over encoder."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _proj(x, p["wq"], None, wt).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k, v = (t.transpose(0, 2, 1, 3) for t in kv)
+    o, _m, l = _attend_chunk(q, k, v, None, 1.0 / np.sqrt(hd))
+    o = o / jnp.maximum(l, 1e-30)[..., None].astype(o.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return _proj(o, p["wo"], None, wt)
+
+
+# --------------------------------------------------------------------------
+# MLA attention (deepseek v2/v3) — compressed KV cache
+# --------------------------------------------------------------------------
+
+
+def mla_params_shape(cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    r, qn, qr, vd = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": (d, r + qr),            # compress: kv latent + shared rope key
+        "w_uk": (r, h * qn),             # latent -> per-head nope keys
+        "w_uv": (r, h * vd),             # latent -> per-head values
+        "wo": (h * vd, d),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = (d, cfg.q_lora_rank)
+        p["w_uq"] = (cfg.q_lora_rank, h * (qn + qr))
+    else:
+        p["wq"] = (d, h * (qn + qr))
+    return p
+
+
+def _mla_q(p, x, cfg, wt):
+    b, s, _ = x.shape
+    h, qn, qr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = _proj(_proj(x, p["w_dq"], None, wt), p["w_uq"], None, wt)
+    else:
+        q = _proj(x, p["wq"], None, wt)
+    q = q.reshape(b, s, h, qn + qr)
+    return q[..., :qn], q[..., qn:]
+
+
+def mla_attention(p, x, cfg, *, positions, wt=Identity, chunk=2048):
+    b, s, _ = x.shape
+    h, qn, qr, vd, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope = _mla_q(p, x, cfg, wt)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = _proj(x, p["w_dkv"], None, wt)           # (B,S,r+qr)
+    latent, k_rope = dkv[..., :r], dkv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = _proj(latent, p["w_uk"], None, wt).reshape(b, s, h, qn)
+    v = _proj(latent, p["w_uv"], None, wt).reshape(b, s, h, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, qr))], axis=-1)
+    q, k, v = (constrain_heads(t.transpose(0, 2, 1, 3)) for t in (q, k, v))
+    o = chunked_causal_attention(q, k, v, chunk=chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * vd)
+    return _proj(o, p["wo"], None, wt)
+
+
+def mla_decode(p, x, cfg, cache, *, pos, wt=Identity):
+    """MLA decode with the *compressed* cache: {"latent": (B,Smax,r),
+    "k_rope": (B,Smax,qr)} — the memory win MLA exists for."""
+    b = x.shape[0]
+    h, qn, qr, vd, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope = _mla_q(p, x, cfg, wt)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    dkv = _proj(x, p["w_dkv"], None, wt)
+    latent, k_rope = dkv[..., :r], dkv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+    lat_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0)
+                     )(cache["latent"], latent, pos)
+    kr_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0)
+                    )(cache["k_rope"], k_rope, pos)
+    smax = lat_c.shape[1]
+    # absorb: score = q_nope . W_uk(latent) + q_rope . k_rope
+    k_nope = _proj(lat_c, p["w_uk"], None, wt).reshape(b, smax, h, qn)
+    v = _proj(lat_c, p["w_uv"], None, wt).reshape(b, smax, h, vd)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+    s2 = jnp.einsum("bqhd,bkd->bhqk", q_rope, kr_c)
+    s = (s1 + s2).astype(jnp.float32) / np.sqrt(qn + qr)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, v).reshape(b, 1, h * vd)
+    return _proj(o, p["wo"], None, wt), {"latent": lat_c, "k_rope": kr_c}
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def swiglu_params_shape(cfg, d_ff=None):
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+
+
+def swiglu(p, x, wt=Identity):
+    g = jax.nn.silu(_proj(x, p["w_gate"], None, wt))
+    return _proj(g * _proj(x, p["w_up"], None, wt), p["w_down"], None, wt)
+
+
+def gelu_mlp_params_shape(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_up": (d, f), "b_up": (f,), "w_down": (f, d), "b_down": (d,)}
+
+
+def gelu_mlp(p, x, wt=Identity):
+    h = jax.nn.gelu(_proj(x, p["w_up"], p["b_up"], wt))
+    return _proj(h, p["w_down"], p["b_down"], wt)
+
+
+# --------------------------------------------------------------------------
+# MoE (capacity-based gather/scatter dispatch; experts shard over 'model')
+# --------------------------------------------------------------------------
+
+
+def moe_params_shape(cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": (d, e),
+        "we_gate": (e, d, f), "we_up": (e, d, f), "we_down": (e, f, d),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        p.update({"ws_gate": (d, fs), "ws_up": (d, fs), "ws_down": (fs, d)})
+    return p
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe(p, x, cfg, wt=Identity):
+    """x: (B,S,D) -> (B,S,D). GShard-style GROUPED dispatch: each batch row
+    is a routing group that stays local to its data shard — position
+    computation is a per-group sort (O(S k log Sk) scalar work, no (n,E)
+    cumsum), dispatch/combine are group-local scatters, and only the
+    (group, expert) buffer crosses shards (the EP all-to-all). Per-expert
+    capacity is per group; overflow rides the residual path."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(cfg, s)                                  # per group
+    nk = s * k
+
+    logits = jnp.einsum("gsd,de->gse", x,
+                        wt(p["router"]).astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                     # (g, s, e)
+    topw, topi = jax.lax.top_k(gates, k)                        # (g, s, k)
+    topw = (topw / jnp.sum(topw, -1, keepdims=True)).astype(x.dtype)
+
+    # per-group positions within each expert queue, via stable sort.
+    # NOTE: dispatch and combine are GATHER-only — scatters with batched
+    # indices make XLA SPMD replicate (g, nk, d)-sized buffers (measured:
+    # +100 TB wire on deepseek-v3), gathers partition cleanly.
+    eid = topi.reshape(b, nk)
+    order = jnp.argsort(eid, axis=1, stable=True)               # (g, nk)
+    sorted_eid = jnp.take_along_axis(eid, order, 1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(e), side="left"))(sorted_eid)            # (g, e)
+    onehot_cnt = jnp.diff(jnp.concatenate(
+        [starts, jnp.full((b, 1), nk, starts.dtype)], axis=1), axis=1)
+    pos_sorted = jnp.arange(nk)[None, :] - \
+        jnp.take_along_axis(starts, sorted_eid, 1)              # (g, nk)
+    keep_sorted = pos_sorted < cap
+
+    # capacity grid: slot (e, c) <- sorted index starts[e] + c
+    c_idx = jnp.arange(cap)
+    grid_j = starts[:, :, None] + c_idx[None, None, :]          # (g, e, cap)
+    grid_valid = c_idx[None, None, :] < onehot_cnt[:, :, None]
+    grid_j = jnp.clip(grid_j, 0, nk - 1).reshape(b, e * cap)
+    src_tok = jnp.take_along_axis(
+        jnp.take_along_axis(jnp.arange(nk)[None, :] // k * jnp.ones(
+            (b, 1), jnp.int32), order, 1),                      # token of sorted j
+        grid_j, 1)                                              # (g, e*cap)
+    xe = jnp.take_along_axis(x, src_tok[..., None], axis=1)     # gather
+    xe = jnp.where(grid_valid.reshape(b, e * cap)[..., None], xe, 0)
+    xe = xe.reshape(b, e, cap, d)
+    xe = constrain(xe, ctx_dp(), "model", None, None)  # EP all-to-all here
+
+    # per-(token,k) slot for the combine gather
+    pos = jnp.zeros((b, nk), jnp.int32).at[
+        jnp.arange(b)[:, None], order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, eid * cap + pos, 0)                  # (g, nk)
+
+    # expert FFN over all groups (e shards over 'model')
+    g_ = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                                wt(p["we_gate"]).astype(xe.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xe, wt(p["we_up"]).astype(xe.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", g_ * u,
+                    wt(p["we_down"]).astype(xe.dtype))
+    ye = constrain(ye, ctx_dp(), "model", None, None)
+
+    # group-local combine: gather slots back, weight, sum over k
+    yflat = ye.reshape(b, e * cap, d)
+    safe = jnp.where(keep, slot, 0)
+    token_y = jnp.where(keep[..., None],
+                        jnp.take_along_axis(yflat, safe[..., None], 1), 0)
+    y = jnp.sum(token_y.reshape(b, s, k, d) *
+                topw[..., None].astype(x.dtype), axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu({"w_gate": p["ws_gate"], "w_up": p["ws_up"],
+                        "w_down": p["ws_down"]}, x, wt)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# --------------------------------------------------------------------------
+
+
+def mamba2_params_shape(cfg):
+    d, di, n, hd = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = di // hd
+    return {
+        "w_in": (d, 2 * di + 2 * n + h),   # [x, z, B, C, dt]
+        "conv_w": (cfg.ssm_conv_width, di + 2 * n),
+        "A_log": (h,), "D": (h,), "dt_bias": (h,),
+        "w_out": (di, d),
+    }
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk):
+    """SSD chunked scan. x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,n).
+    Returns y (b,l,h,p) and final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    da = dtc * A  # (b,nc,q,h) negative
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+    # intra-chunk: y_intra[t] = sum_{s<=t} C_t . B_s * exp(cum_t - cum_s) dt_s x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,q,q,h)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: non-causal entries have seg > 0 and overflow exp,
+    # poisoning gradients through the where (the where-grad trap)
+    seg = jnp.where(causal, seg, -jnp.inf)
+    decay = jnp.exp(seg).astype(x.dtype)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)       # (b,nc,q,q)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcsh,bcshp->bcqhp",
+                         cb.astype(x.dtype), decay, dtc.astype(x.dtype), xc)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) dt_s B_s x_s^T
+    last = cum[:, :, -1:, :]                          # (b,nc,1,h)
+    dec_s = jnp.exp(last - cum).astype(x.dtype)       # (b,nc,q,h)
+    S = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchpn",
+                   dec_s, dtc.astype(x.dtype), Bc, xc)  # per-chunk state contrib
+    chunk_decay = jnp.exp(last[:, :, 0, :])           # (b,nc,h)
+
+    def step(carry, inp):
+        s_prev = carry                                 # (b,h,p,n)
+        s_c, dk = inp                                  # (b,h,p,n), (b,h)
+        s_new = s_prev * dk[:, :, None, None].astype(s_prev.dtype) + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), x.dtype)
+    s_fin, s_prevs = jax.lax.scan(
+        step, s0, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)         # (b,nc,h,p,n)
+
+    # inter-chunk: y_inter[t] = C_t . exp(cum_t) S_prev
+    dec_q = jnp.exp(cum).astype(x.dtype)               # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, dec_q, s_prevs)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, s_fin
+
+
+def _causal_conv(x, w):
+    """depthwise causal conv. x: (b,l,c); w: (k,c)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    return out
+
+
+def mamba2_block(p, x, cfg, wt=Identity):
+    """Training/prefill SSD. x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = di // hd
+    zxbcdt = _proj(x, p["w_in"], None, wt)
+    xi, z, B, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], -1)
+    conv_in = jnp.concatenate([xi, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xi, B, C = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = _ssd_chunked(xi.reshape(b, s, h, hd), dt, A, B, C,
+                        min(cfg.ssm_chunk, s))
+    y = y + xi.reshape(b, s, h, hd) * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    return _proj(y, p["w_out"], None, wt)
+
+
+def mamba2_decode(p, x, cfg, cache, wt=Identity):
+    """Single-step SSD recurrence. cache: {"state": (B,h,hd,n),
+    "conv": (B, k-1, di+2n)}. x: (B,1,D)."""
+    b = x.shape[0]
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = di // hd
+    zxbcdt = _proj(x[:, 0], p["w_in"], None, wt)       # (B, ...)
+    xi, z, B, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], -1)
+    conv_in = jnp.concatenate([xi, B, C], axis=-1)      # (B, di+2n)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,k,c)
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w.astype(hist.dtype)))
+    xi, B, C = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)                                 # (B,h)
+    xh = xi.reshape(b, h, hd)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), xh, B)
+    state = cache["state"] * da[:, :, None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, di) * jax.nn.silu(z)
+    out = _proj(y, p["w_out"], None, wt)[:, None]
+    return out, {"state": state, "conv": hist[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (recurrentgemma) block
+# --------------------------------------------------------------------------
+
+
+def rglru_params_shape(cfg):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "w_x": (d, w), "w_y_gate": (d, w),            # linear in / output gate
+        "conv_w": (cfg.ssm_conv_width or 4, w),
+        "w_input_gate": (w, w), "w_a_gate": (w, w), "a_param": (w,),
+        "w_out": (w, d),
+    }
+
+
+_C_RGLRU = 8.0
+
+
+def _rglru_scan(x_in, i_gate, a_gate, a_param):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t); associative scan over L."""
+    log_a = -_C_RGLRU * jax.nn.softplus(a_param) * jax.nn.sigmoid(a_gate)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (i_gate * x_in).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * gated
+
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(x_in.dtype)
+
+
+def rglru_block(p, x, cfg, wt=Identity):
+    """Recurrent block (train/prefill). x: (B,S,D)."""
+    xw = _proj(x, p["w_x"], None, wt)
+    xw = jax.nn.silu(_causal_conv(xw, p["conv_w"]))
+    i_gate = jax.nn.sigmoid(xw @ wt(p["w_input_gate"]).astype(xw.dtype))
+    a_gate = xw @ wt(p["w_a_gate"]).astype(xw.dtype)
+    h = _rglru_scan(xw, i_gate, a_gate, p["a_param"])
+    y_gate = jax.nn.gelu(_proj(x, p["w_y_gate"], None, wt))
+    return _proj(h * y_gate, p["w_out"], None, wt)
+
+
+def rglru_decode(p, x, cfg, cache, wt=Identity):
+    """Single-step recurrence. cache: {"h": (B,w), "conv": (B,k-1,w)}."""
+    xw = _proj(x[:, 0], p["w_x"], None, wt)            # (B,w)
+    hist = jnp.concatenate([cache["conv"], xw[:, None]], axis=1)
+    xw = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(hist.dtype)))
+    i_gate = jax.nn.sigmoid(xw @ wt(p["w_input_gate"]).astype(xw.dtype))
+    a_gate = xw @ wt(p["w_a_gate"]).astype(xw.dtype)
+    log_a = -_C_RGLRU * jax.nn.softplus(p["a_param"]) * jax.nn.sigmoid(a_gate)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i_gate * xw).astype(jnp.float32)
+    h = (cache["h"].astype(jnp.float32) * a + b).astype(x.dtype)
+    y_gate = jax.nn.gelu(_proj(x[:, 0], p["w_y_gate"], None, wt))
+    out = _proj(h * y_gate, p["w_out"], None, wt)[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# embedding / logits
+# --------------------------------------------------------------------------
+
+
+def embed(tokens, emb, dtype=jnp.bfloat16):
+    return emb.astype(dtype)[tokens]
+
+
+def logits(x, head, wt=Identity):
+    return _proj(x, wt(head), None)  # (B,S,V)

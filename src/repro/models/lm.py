@@ -1,0 +1,452 @@
+"""Full model assembly for every assigned architecture family.
+
+Params are plain pytrees; per-layer params are stacked along a leading L axis
+and consumed with ``jax.lax.scan`` (compact HLO — essential for 512-device
+AOT compiles). ``wt`` hooks QAT fake-quant / protected-decode into every
+matmul weight.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from . import layers as L
+from .config import ArchConfig
+
+Identity = L.Identity
+
+# --------------------------------------------------------------------------
+# optional sharding context (set by the launcher / dry-run; None = no
+# constraints, e.g. CPU smoke tests without a mesh)
+# --------------------------------------------------------------------------
+
+# {"dp": ("pod","data")| "data", "model": "model", "sp": bool} — the state
+# itself lives in layers.py so layer internals (MoE dispatch) see it too.
+
+
+def set_sharding_ctx(ctx: dict | None):
+    L.set_sharding_ctx(ctx)
+
+
+def _constrain_residual(x):
+    """Sequence-parallel residual stream: (B, S, D) -> P(dp, model, None)."""
+    ctx = L.SHARDING_CTX
+    if ctx is None:
+        return x
+    dp, mdl = ctx["dp"], ctx["model"]
+    if ctx.get("sp") and x.shape[1] % ctx.get("model_size", 1) == 0:
+        return L.constrain(x, dp, mdl, None)
+    return L.constrain(x, dp, None, None)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_dict(key, shapes: dict, n_layers: int | None, dtype) -> dict:
+    """Init a dict of arrays; if n_layers, prepend the stacked layer dim."""
+    out = {}
+    ks = jax.random.split(key, len(shapes))
+    for k_, (name, shp) in zip(ks, sorted(shapes.items())):
+        full = (n_layers, *shp) if n_layers else shp
+        if name == "A_log":
+            v = jnp.log(jnp.broadcast_to(jnp.linspace(1.0, 16.0, shp[-1]), full))
+        elif name == "dt_bias":
+            v = jnp.full(full, 0.5)
+        elif name == "a_param":
+            v = jnp.full(full, 1.3)
+        elif name.startswith("b_") or name == "b":
+            v = jnp.zeros(full)
+        elif name == "w" or name == "D":
+            v = jnp.ones(full)
+        elif name.startswith("conv"):
+            v = jax.random.normal(k_, full) * 0.1
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            v = jax.random.normal(k_, full) * (0.02 if len(shp) < 2
+                                               else 1.0 / np.sqrt(fan_in))
+        out[name] = v.astype(dtype)
+    return out
+
+
+def _norm_shape(cfg):
+    return {"w": (cfg.d_model,)} if cfg.norm == "rms" else \
+        {"w": (cfg.d_model,), "b": (cfg.d_model,)}
+
+
+def _layer_shapes(cfg: ArchConfig) -> dict:
+    """Per-layer (pre-stacking) param shapes for the scanned decoder block."""
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        return {"attn": L.gqa_params_shape(cfg), "mlp": L.swiglu_params_shape(cfg),
+                "ln1": _norm_shape(cfg), "ln2": _norm_shape(cfg)}
+    if f == "moe":
+        return {"attn": L.mla_params_shape(cfg) if cfg.use_mla
+                else L.gqa_params_shape(cfg),
+                "moe": L.moe_params_shape(cfg),
+                "ln1": _norm_shape(cfg), "ln2": _norm_shape(cfg)}
+    if f == "ssm":
+        return {"mixer": L.mamba2_params_shape(cfg), "ln1": _norm_shape(cfg)}
+    if f == "hybrid":
+        # super-block of 3 layers: [rglru, rglru, local-attn], each + MLP
+        blk = {}
+        for i in range(2):
+            blk[f"rg{i}"] = L.rglru_params_shape(cfg)
+            blk[f"rg{i}_mlp"] = L.swiglu_params_shape(cfg)
+            blk[f"rg{i}_ln1"] = _norm_shape(cfg)
+            blk[f"rg{i}_ln2"] = _norm_shape(cfg)
+        blk["attn"] = L.gqa_params_shape(cfg)
+        blk["attn_mlp"] = L.swiglu_params_shape(cfg)
+        blk["attn_ln1"] = _norm_shape(cfg)
+        blk["attn_ln2"] = _norm_shape(cfg)
+        return blk
+    if f == "encdec":
+        return {"attn": L.gqa_params_shape(cfg), "cross": L.cross_params_shape(cfg),
+                "mlp": L.gelu_mlp_params_shape(cfg),
+                "ln1": _norm_shape(cfg), "ln2": _norm_shape(cfg),
+                "ln3": _norm_shape(cfg)}
+    raise ValueError(f)
+
+
+def _enc_layer_shapes(cfg):
+    return {"attn": L.gqa_params_shape(cfg), "mlp": L.gelu_mlp_params_shape(cfg),
+            "ln1": _norm_shape(cfg), "ln2": _norm_shape(cfg)}
+
+
+def n_scan_layers(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // 3          # super-blocks
+    return cfg.n_layers
+
+
+def hybrid_tail_layers(cfg: ArchConfig) -> int:
+    return cfg.n_layers - 3 * (cfg.n_layers // 3) if cfg.family == "hybrid" else 0
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    v, d = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * 0.02).astype(dtype),
+        "final_norm": _init_dict(keys[1], _norm_shape(cfg), None, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[2], (d, v)) *
+                          (1.0 / np.sqrt(d))).astype(dtype)
+    nl = n_scan_layers(cfg)
+    shapes = _layer_shapes(cfg)
+    params["layers"] = {name: _init_dict(k_, shp, nl, dtype)
+                        for (name, shp), k_ in
+                        zip(sorted(shapes.items()),
+                            jax.random.split(keys[3], len(shapes)))}
+    if cfg.family == "hybrid" and hybrid_tail_layers(cfg):
+        tail_shapes = {"rg0": L.rglru_params_shape(cfg),
+                       "rg0_mlp": L.swiglu_params_shape(cfg),
+                       "rg0_ln1": _norm_shape(cfg), "rg0_ln2": _norm_shape(cfg)}
+        params["tail"] = {name: _init_dict(k_, shp, hybrid_tail_layers(cfg), dtype)
+                          for (name, shp), k_ in
+                          zip(sorted(tail_shapes.items()),
+                              jax.random.split(keys[4], len(tail_shapes)))}
+    if cfg.family == "encdec":
+        eshapes = _enc_layer_shapes(cfg)
+        params["enc_layers"] = {name: _init_dict(k_, shp, cfg.enc_layers, dtype)
+                                for (name, shp), k_ in
+                                zip(sorted(eshapes.items()),
+                                    jax.random.split(keys[5], len(eshapes)))}
+        params["enc_final_norm"] = _init_dict(keys[6], _norm_shape(cfg), None, dtype)
+    return params
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.float32):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill): full-sequence
+# --------------------------------------------------------------------------
+
+
+def _take(i, tree):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _block_full(cfg: ArchConfig, lp, x, positions, wt, chunk):
+    f, nk = cfg.family, cfg.norm
+    if f in ("dense", "vlm"):
+        x = x + gqa_or_mla(cfg, lp["attn"], L.apply_norm(x, lp["ln1"], nk),
+                           positions, wt, chunk)
+        x = x + L.swiglu(lp["mlp"], L.apply_norm(x, lp["ln2"], nk), wt)
+    elif f == "moe":
+        x = x + gqa_or_mla(cfg, lp["attn"], L.apply_norm(x, lp["ln1"], nk),
+                           positions, wt, chunk)
+        x = x + L.moe(lp["moe"], L.apply_norm(x, lp["ln2"], nk), cfg, wt)
+    elif f == "ssm":
+        x = x + L.mamba2_block(lp["mixer"], L.apply_norm(x, lp["ln1"], nk), cfg, wt)
+    elif f == "hybrid":
+        for i in range(2):
+            x = x + L.rglru_block(lp[f"rg{i}"],
+                                  L.apply_norm(x, lp[f"rg{i}_ln1"], nk), cfg, wt)
+            x = x + L.swiglu(lp[f"rg{i}_mlp"],
+                             L.apply_norm(x, lp[f"rg{i}_ln2"], nk), wt)
+        x = x + L.gqa_attention(lp["attn"], L.apply_norm(x, lp["attn_ln1"], nk),
+                                cfg, positions=positions, wt=wt,
+                                window=cfg.attn_window,
+                                chunk=min(chunk, cfg.attn_window or chunk))
+        x = x + L.swiglu(lp["attn_mlp"], L.apply_norm(x, lp["attn_ln2"], nk), wt)
+    else:
+        raise ValueError(f)
+    return x
+
+
+def gqa_or_mla(cfg, p, x, positions, wt, chunk):
+    if cfg.use_mla:
+        return L.mla_attention(p, x, cfg, positions=positions, wt=wt, chunk=chunk)
+    return L.gqa_attention(p, x, cfg, positions=positions, wt=wt, chunk=chunk)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
+            enc_embeds=None, wt=Identity, dtype=jnp.bfloat16,
+            chunk: int = 2048, layer_transform=None):
+    """tokens: (B, S) int32 -> logits (B, S', V). For vlm, prefix_embeds
+    (B, P, D) is prepended; for encdec, enc_embeds (B, Se, D) feeds the
+    encoder (frontends are stubs per the assignment). layer_transform maps
+    each layer's param slice inside the scan (e.g. lazy ECC decode)."""
+    x = L.embed(tokens, params["embed"], dtype)
+    if cfg.family == "vlm" and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    if cfg.family in ("vlm", "hybrid"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)  # gemma convention
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, enc_embeds, wt=wt, dtype=dtype,
+                          layer_transform=layer_transform)
+
+    def blk(carry, lp):
+        x = carry
+        if layer_transform is not None:
+            lp = layer_transform(lp)
+        x = _constrain_residual(x)
+        if cfg.family == "encdec":
+            x = _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk)
+        else:
+            x = _block_full(cfg, lp, x, positions, wt, chunk)
+        return x, None
+
+    blk_fn = jax.checkpoint(blk) if cfg.remat else blk
+    x, _ = jax.lax.scan(blk_fn, x, params["layers"])
+
+    if cfg.family == "hybrid" and "tail" in params:
+        def tail_blk(carry, lp):
+            x = carry
+            x = x + L.rglru_block(lp["rg0"], L.apply_norm(x, lp["rg0_ln1"],
+                                                          cfg.norm), cfg, wt)
+            x = x + L.swiglu(lp["rg0_mlp"], L.apply_norm(x, lp["rg0_ln2"],
+                                                         cfg.norm), wt)
+            return x, None
+        x, _ = jax.lax.scan(jax.checkpoint(tail_blk) if cfg.remat else tail_blk,
+                            x, params["tail"])
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return L.logits(x, head, wt)
+
+
+def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
+    nk = cfg.norm
+    x = x + L.gqa_attention(lp["attn"], L.apply_norm(x, lp["ln1"], nk), cfg,
+                            positions=positions, wt=wt, chunk=chunk)
+    kv = L.cross_kv(lp["cross"], enc_out, cfg, wt)
+    x = x + L.cross_attention(lp["cross"], L.apply_norm(x, lp["ln2"], nk),
+                              kv, cfg, wt)
+    x = x + L.gelu_mlp(lp["mlp"], L.apply_norm(x, lp["ln3"], nk), wt)
+    return x
+
+
+def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None):
+    x = enc_embeds.astype(dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def blk(carry, lp):
+        x = carry
+        if layer_transform is not None:
+            lp = layer_transform(lp)
+        x = x + L.gqa_attention(lp["attn"], L.apply_norm(x, lp["ln1"], cfg.norm),
+                                cfg, positions=positions, wt=wt, causal=False)
+        x = x + L.gelu_mlp(lp["mlp"], L.apply_norm(x, lp["ln2"], cfg.norm), wt)
+        return x, None
+
+    blk_fn = jax.checkpoint(blk) if cfg.remat else blk
+    x, _ = jax.lax.scan(blk_fn, x, params["enc_layers"])
+    return L.apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, wt=Identity,
+            dtype=jnp.bfloat16, chunk: int = 2048):
+    """Causal-LM cross entropy. batch: {"tokens", "targets", [extras]}."""
+    logits = forward(cfg, params, batch["tokens"],
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     enc_embeds=batch.get("enc_embeds"),
+                     wt=wt, dtype=dtype, chunk=chunk)
+    targets = batch["targets"]
+    if cfg.family == "vlm":  # loss only over the text positions
+        logits = logits[:, -targets.shape[1]:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt_logit)
+
+
+# --------------------------------------------------------------------------
+# decode (serving): KV caches per family
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nl = n_scan_layers(cfg)
+    f = cfg.family
+
+    def z(*shp, dt=dtype):
+        return jnp.zeros(shp, dt)
+
+    if f in ("dense", "vlm"):
+        return {"k": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                "v": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim)}
+    if f == "moe":
+        if cfg.use_mla:
+            return {"latent": z(nl, batch, max_len, cfg.kv_lora_rank),
+                    "k_rope": z(nl, batch, max_len, cfg.qk_rope_dim)}
+        return {"k": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                "v": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim)}
+    if f == "ssm":
+        return {"state": z(nl, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state),
+                "conv": z(nl, batch, cfg.ssm_conv_width - 1,
+                          cfg.d_inner + 2 * cfg.ssm_state)}
+    if f == "hybrid":
+        w = cfg.lru_width or cfg.d_model
+        win = cfg.attn_window
+        cache = {}
+        for i in range(2):
+            cache[f"rg{i}_h"] = z(nl, batch, w)
+            cache[f"rg{i}_conv"] = z(nl, batch, (cfg.ssm_conv_width or 4) - 1, w)
+        cache["k"] = z(nl, batch, win, cfg.n_kv_heads, cfg.head_dim)
+        cache["v"] = z(nl, batch, win, cfg.n_kv_heads, cfg.head_dim)
+        if hybrid_tail_layers(cfg):
+            t = hybrid_tail_layers(cfg)
+            cache["tail_h"] = z(t, batch, w)
+            cache["tail_conv"] = z(t, batch, (cfg.ssm_conv_width or 4) - 1, w)
+        return cache
+    if f == "encdec":
+        return {"k": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                "v": z(nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                "cross_k": z(nl, batch, cfg.enc_seq, cfg.n_heads, cfg.head_dim),
+                "cross_v": z(nl, batch, cfg.enc_seq, cfg.n_heads, cfg.head_dim)}
+    raise ValueError(f)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
+                wt=Identity, dtype=jnp.bfloat16, layer_transform=None):
+    """One decode step. tokens: (B,1) int32; pos: (B,) int32.
+    Returns (logits (B,1,V), new_cache)."""
+    x = L.embed(tokens, params["embed"], dtype)
+    if cfg.family in ("vlm", "hybrid"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    f = cfg.family
+
+    def blk(x, lp_cache):
+        lp, lc = lp_cache
+        if layer_transform is not None:
+            lp = layer_transform(lp)
+        if f in ("dense", "vlm", "encdec"):
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            o, newkv = L.gqa_decode(lp["attn"], h, cfg,
+                                    {"k": lc["k"], "v": lc["v"]}, pos=pos, wt=wt)
+            x = x + o
+            nc = dict(newkv)
+            if f == "encdec":
+                h = L.apply_norm(x, lp["ln2"], cfg.norm)
+                x = x + L.cross_attention(lp["cross"], h,
+                                          (lc["cross_k"], lc["cross_v"]), cfg, wt)
+                x = x + L.gelu_mlp(lp["mlp"],
+                                   L.apply_norm(x, lp["ln3"], cfg.norm), wt)
+                nc.update({"cross_k": lc["cross_k"], "cross_v": lc["cross_v"]})
+            else:
+                x = x + L.swiglu(lp["mlp"], L.apply_norm(x, lp["ln2"], cfg.norm),
+                                 wt)
+            return x, nc
+        if f == "moe":
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            if cfg.use_mla:
+                o, newkv = L.mla_decode(lp["attn"], h, cfg,
+                                        {"latent": lc["latent"],
+                                         "k_rope": lc["k_rope"]}, pos=pos, wt=wt)
+            else:
+                o, newkv = L.gqa_decode(lp["attn"], h, cfg,
+                                        {"k": lc["k"], "v": lc["v"]},
+                                        pos=pos, wt=wt)
+            x = x + o
+            x = x + L.moe(lp["moe"], L.apply_norm(x, lp["ln2"], cfg.norm), cfg, wt)
+            return x, newkv
+        if f == "ssm":
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            o, nc = L.mamba2_decode(lp["mixer"], h, cfg,
+                                    {"state": lc["state"], "conv": lc["conv"]}, wt)
+            return x + o, nc
+        if f == "hybrid":
+            nc = {}
+            for i in range(2):
+                h = L.apply_norm(x, lp[f"rg{i}_ln1"], cfg.norm)
+                o, c2 = L.rglru_decode(lp[f"rg{i}"], h, cfg,
+                                       {"h": lc[f"rg{i}_h"],
+                                        "conv": lc[f"rg{i}_conv"]}, wt)
+                x = x + o
+                nc[f"rg{i}_h"], nc[f"rg{i}_conv"] = c2["h"], c2["conv"]
+                x = x + L.swiglu(lp[f"rg{i}_mlp"],
+                                 L.apply_norm(x, lp[f"rg{i}_ln2"], cfg.norm), wt)
+            h = L.apply_norm(x, lp["attn_ln1"], cfg.norm)
+            o, kv = L.gqa_decode(lp["attn"], h, cfg, {"k": lc["k"], "v": lc["v"]},
+                                 pos=pos, wt=wt, window=cfg.attn_window)
+            x = x + o
+            nc.update(kv)
+            x = x + L.swiglu(lp["attn_mlp"],
+                             L.apply_norm(x, lp["attn_ln2"], cfg.norm), wt)
+            return x, nc
+        raise ValueError(f)
+
+    layer_cache = {k_: v for k_, v in cache.items() if not k_.startswith("tail")}
+
+    def scan_blk(x, lp_lc):
+        return blk(x, lp_lc)
+
+    x, new_cache = jax.lax.scan(scan_blk, x, (params["layers"], layer_cache))
+
+    out_cache = dict(new_cache)
+    if f == "hybrid" and "tail" in params:
+        def tail_blk(x, lp_lc):
+            lp, lc = lp_lc
+            h = L.apply_norm(x, lp["rg0_ln1"], cfg.norm)
+            o, c2 = L.rglru_decode(lp["rg0"], h, cfg,
+                                   {"h": lc["tail_h"], "conv": lc["tail_conv"]},
+                                   wt)
+            x = x + o
+            x = x + L.swiglu(lp["rg0_mlp"],
+                             L.apply_norm(x, lp["rg0_ln2"], cfg.norm), wt)
+            return x, {"tail_h": c2["h"], "tail_conv": c2["conv"]}
+        tc = {"tail_h": cache["tail_h"], "tail_conv": cache["tail_conv"]}
+        x, new_tail = jax.lax.scan(tail_blk, x, (params["tail"], tc))
+        out_cache.update(new_tail)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return L.logits(x, head, wt), out_cache

@@ -1,0 +1,1 @@
+from . import protected  # noqa: F401

@@ -1,0 +1,108 @@
+"""Protected serving: weights live in memory as in-place-ECC-encoded int8.
+
+``encode_tree`` quantizes (+throttles, idempotent on WOT-trained weights) and
+ECC-encodes every protected tensor; the encoded image has the SAME shape as
+the weight (1 byte per int8 element, check bits in place) so it inherits the
+weight's sharding. ``serve_step`` decodes on read — every step — which is the
+honest cost model for at-rest protection (on TPU the fused
+``kernels/ecc_qmatmul`` does this in VMEM on the way to the MXU; at the XLA
+level here the decode appears as elementwise ops ahead of each matmul).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc, quant, wot
+from repro.models import lm
+from repro.models.config import ArchConfig
+
+
+def _protectable(path, leaf) -> bool:
+    return (wot.is_protected_weight(path, leaf) and
+            leaf.shape[-1] % 8 == 0)
+
+
+class Protected:
+    """Marker wrapper: {"enc": uint8 (same shape), "scale": f32 scalar}."""
+    __slots__ = ()
+
+
+def encode_leaf(w: jnp.ndarray) -> dict:
+    scale = quant.compute_scale(w)
+    q = jnp.clip(jnp.round(w / scale), -quant.QMAX, quant.QMAX).astype(jnp.int8)
+    q = wot.throttle_q(q.reshape(-1)).reshape(w.shape)  # idempotent post-WOT
+    blocks = jax.lax.bitcast_convert_type(q, jnp.uint8).reshape(
+        *w.shape[:-1], w.shape[-1] // 8, 8)
+    enc = ecc.encode64(blocks).reshape(w.shape)
+    return {"enc": enc, "scale": scale.astype(jnp.float32)}
+
+
+def decode_leaf(p: dict, dtype=jnp.bfloat16) -> jnp.ndarray:
+    enc = p["enc"]
+    blocks = enc.reshape(*enc.shape[:-1], enc.shape[-1] // 8, 8)
+    dec, _single, _double = ecc.decode64(blocks)
+    q = jax.lax.bitcast_convert_type(dec.reshape(enc.shape), jnp.int8)
+    return (q.astype(jnp.float32) * p["scale"]).astype(dtype)
+
+
+def _is_protected(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"enc", "scale"}
+
+
+def encode_tree(params) -> Any:
+    """fp32 params -> serving tree (protected leaves encoded, rest bf16)."""
+    def enc(path, leaf):
+        if _protectable(path, leaf):
+            return encode_leaf(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(enc, params)
+
+
+def decode_tree(enc_params, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: decode_leaf(x, dtype) if _is_protected(x) else x,
+        enc_params, is_leaf=_is_protected)
+
+
+def make_serve_step(cfg: ArchConfig, *, decode_per_step: bool = True,
+                    dtype=jnp.bfloat16):
+    """serve_step(enc_params, cache, tokens, pos) -> (logits, cache).
+
+    decode_per_step=True keeps weights encoded at rest (the paper's model);
+    False decodes once outside (baseline for the protection-cost ablation).
+    """
+    def serve_step(enc_params, cache, tokens, pos):
+        params = decode_tree(enc_params, dtype) if decode_per_step else enc_params
+        return lm.decode_step(cfg, params, cache, tokens, pos, dtype=dtype)
+
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig, *, dtype=jnp.bfloat16, chunk: int = 2048):
+    def prefill(enc_params, tokens, extras=None):
+        params = decode_tree(enc_params, dtype)
+        extras = extras or {}
+        return lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
+                          **extras)
+    return prefill
+
+
+def spec_tree(enc_params_or_params, param_spec_fn):
+    """Sharding specs for a serving tree: encoded image inherits the weight's
+    spec; scale replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(path, leaf):
+        names = [getattr(p_, "key", None) for p_ in path]
+        if names and names[-1] == "scale":
+            return P()
+        if names and names[-1] == "enc":
+            path = path[:-1]
+        return param_spec_fn(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(spec, enc_params_or_params)

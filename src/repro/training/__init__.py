@@ -1,0 +1,1 @@
+from . import admm, checkpoint, compress, optim, train  # noqa: F401

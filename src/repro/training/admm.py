@@ -1,0 +1,77 @@
+"""ADMM-based WOT training (paper §4.1, the evaluated-and-rejected variant).
+
+The paper formulates the WOT constraint via ADMM (Eqs. 5-9): alternate
+  1. W-step: SGD on f(W) + λ||W||_F² + γ||W - Z + U||_F²
+  2. Z-step: project W + U onto the constraint set S (clamp positions 0..6)
+  3. U-step: U += W - Z
+and reports that it fails to drive the large-value count to zero and needs a
+lossy final hard clamp. We implement it faithfully as the comparison
+baseline; `benchmarks/wot_admm_compare.py` reproduces the paper's finding
+that QATT dominates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, wot
+from . import optim, train
+
+
+class AdmmState(NamedTuple):
+    opt: optim.SgdState
+    z: dict
+    u: dict
+
+
+def _project(tree, iters: int = 4):
+    """Projection onto S in the float domain. Clamping can shrink the
+    per-tensor max and hence the quantization scale, re-exposing values at
+    the new scale — iterate to a fixed point (converges geometrically; 4
+    passes suffice at fp32)."""
+    for _ in range(iters):
+        tree = wot.throttle_tree(tree)
+    return tree
+
+
+def admm_init(params) -> AdmmState:
+    return AdmmState(optim.sgd_init(params),
+                     jax.tree.map(jnp.array, params),
+                     jax.tree.map(jnp.zeros_like, params))
+
+
+def make_admm_step(forward_loss, *, lr=1e-3, mu=0.9, wd=1e-4, gamma=1e-3,
+                   dual_every: int = 1):
+    """forward_loss(params, batch) -> scalar (QAT loss). Returns
+    admm_step(params, state, batch) -> (params, state, loss)."""
+
+    def aug_loss(params, z, u, batch):
+        base = forward_loss(params, batch)
+        pen = 0.0
+        for w, z_, u_ in zip(jax.tree.leaves(params), jax.tree.leaves(z),
+                             jax.tree.leaves(u)):
+            pen = pen + jnp.sum(jnp.square(w - z_ + u_))
+        return base + gamma * pen
+
+    @jax.jit
+    def admm_step(params, state: AdmmState, batch):
+        loss, grads = jax.value_and_grad(aug_loss)(params, state.z, state.u,
+                                                   batch)
+        params, opt = optim.sgd_update(params, grads, state.opt,
+                                       lr=lr, mu=mu, wd=wd)
+        # Z-step: project W + U onto S
+        wu = jax.tree.map(jnp.add, params, state.u)
+        z = _project(wu)
+        # U-step
+        u = jax.tree.map(lambda u_, w, z_: u_ + w - z_, state.u, params, z)
+        return params, AdmmState(opt, z, u), loss
+
+    return admm_step
+
+
+def finalize(params):
+    """Paper: after ADMM training the constraint still isn't met; remaining
+    large values in protected positions are hard-clamped (lossy)."""
+    return _project(params, iters=8)

@@ -1,0 +1,142 @@
+"""Shared CNN experiment harness for the paper's evaluation (used by the
+benchmarks, tests, and examples).
+
+Mirrors the paper's methodology: start from a *trained* fp32 model
+(paper: ImageNet-pretrained; here: Adam-pretrained on the synthetic task),
+then run WOT fine-tuning = QAT + throttling with SGD momentum (paper §5.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protect, quant, wot
+from repro.data import synthetic
+from repro.models import cnn
+from . import optim, train
+
+IMG_NORM = 3.0  # images have pixel std ~1.8; normalize into unit-ish range
+
+
+def _norm(x):
+    return x / IMG_NORM
+
+
+def pretrain(name: str, *, steps=80, lr=1e-3, scale=0.25, img=32,
+             n_classes=4, seed=0):
+    """Phase 1: fp32 Adam pretraining (stands in for ImageNet weights)."""
+    init, fwd = cnn.CNNS[name]
+    params = init(jax.random.PRNGKey(seed), n_classes=n_classes, scale=scale,
+                  img_size=img)
+
+    def loss_fn(p, batch):
+        lg = fwd(p, _norm(batch["images"])).astype(jnp.float32)
+        return jnp.mean(jax.nn.logsumexp(lg, -1) - jnp.take_along_axis(
+            lg, batch["labels"][:, None], 1)[:, 0])
+
+    st = optim.adam_init(params)
+
+    @jax.jit
+    def step(p, st, b):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p, st = optim.adam_update(p, g, st, lr=lr)
+        return p, st, l
+
+    tmpl = None
+    for s in range(steps):
+        b, tmpl = synthetic.image_batch(n_classes, 64, img, seed=seed, step=s,
+                                        templates=tmpl)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, st, _ = step(params, st, b)
+    return params, fwd, tmpl
+
+
+def wot_finetune(params, fwd, tmpl, *, steps=40, lr=1e-3, n_classes=4,
+                 img=32, seed=0, throttle=True, track=False):
+    """Phase 2: QATT (paper §4.1) — QAT fwd/bwd + SGD momentum + throttling.
+    With track=True returns the Fig 3/4 curves."""
+    step, _ = train.make_cnn_train_step(
+        lambda p, x, wt: fwd(p, _norm(x), wt=wt), qat=True,
+        wot_throttle=False, lr=lr)  # throttle applied explicitly for tracking
+    opt = optim.sgd_init(params)
+    curve = []
+    for s in range(steps):
+        b, tmpl = synthetic.image_batch(n_classes, 64, img, seed=seed,
+                                        step=1000 + s, templates=tmpl)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step(params, opt, b)
+        if track:
+            pre = large_count(params)
+            a_pre = accuracy(params, fwd, tmpl, quantized=True) \
+                if s % 10 == 0 else None
+        if throttle:
+            params = wot.throttle_tree(params)
+        if track:
+            a_post = accuracy(params, fwd, tmpl, quantized=True) \
+                if s % 10 == 0 else None
+            curve.append((s, pre, a_pre, a_post))
+    return params, tmpl, curve
+
+
+def train_cnn_wot(name: str, *, pre_steps=80, wot_steps=40, scale=0.25,
+                  img=32, n_classes=4, seed=0):
+    """Full paper pipeline -> (params, fwd, templates)."""
+    params, fwd, tmpl = pretrain(name, steps=pre_steps, scale=scale, img=img,
+                                 n_classes=n_classes, seed=seed)
+    params, tmpl, _ = wot_finetune(params, fwd, tmpl, steps=wot_steps,
+                                   n_classes=n_classes, img=img, seed=seed)
+    return params, fwd, tmpl
+
+
+def accuracy(params, fwd, tmpl, *, quantized=False, n_classes=4, img=32,
+             batch=256, seed=777):
+    b, _ = synthetic.image_batch(n_classes, batch, img, seed=seed, step=0,
+                                 templates=tmpl)
+    wt = train.qat_wt if quantized else (lambda w: w)
+    lg = fwd(params, _norm(jnp.asarray(b["images"])), wt=wt)
+    return float(np.mean(np.argmax(np.asarray(lg), -1) == b["labels"]))
+
+
+def large_count(params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            q, _ = quant.quantize(leaf)
+            total += int(wot.count_large_in_protected(q.reshape(-1)))
+    return total
+
+
+def eval_with_scheme(params, fwd, tmpl, scheme_name, rate, seed, *,
+                     n_classes=4, img=32):
+    """Quantize+throttle weights, encode/inject/decode, eval accuracy.
+    Returns (accuracy, space_overhead)."""
+    sch = protect.get_scheme(scheme_name)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out, stored_bytes, weight_bytes = [], 0, 0
+    for i, leaf in enumerate(leaves):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            scale = quant.compute_scale(leaf)
+            q = np.asarray(jnp.clip(jnp.round(leaf / scale), -127, 127),
+                           np.int8).reshape(-1)
+            q = np.asarray(wot.throttle_q(jnp.asarray(q)))
+            st = sch.encode(q)
+            stored_bytes += st.total_bytes
+            weight_bytes += q.size
+            dec = sch.decode(sch.inject(st, rate, seed + i)) if rate else \
+                sch.decode(st)
+            out.append(jnp.asarray(dec.reshape(leaf.shape),
+                                   jnp.float32) * scale)
+        else:
+            out.append(leaf)
+    faulty = jax.tree_util.tree_unflatten(treedef, out)
+    b, _ = synthetic.image_batch(n_classes, 256, img, seed=777, step=0,
+                                 templates=tmpl)
+    lg = cnn_forward_cached(faulty, fwd, b)
+    acc = float(np.mean(np.argmax(np.asarray(lg), -1) == b["labels"]))
+    ovh = (stored_bytes - weight_bytes) / max(weight_bytes, 1)
+    return acc, ovh
+
+
+def cnn_forward_cached(params, fwd, batch):
+    return fwd(params, _norm(jnp.asarray(batch["images"])))

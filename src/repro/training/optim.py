@@ -1,0 +1,59 @@
+"""Optimizers in pure JAX. SGD + momentum is the paper's WOT optimizer
+(§5.2: lr 1e-4, momentum 0.9, weight decay λ=1e-4 via the Frobenius
+regularizer); AdamW provided for the from-scratch pretraining examples."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SgdState(NamedTuple):
+    momentum: any
+
+
+def sgd_init(params) -> SgdState:
+    return SgdState(jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params, grads, state: SgdState, *, lr, mu=0.9, wd=1e-4):
+    """Paper-faithful: g += 2*wd*w (Frobenius term), m = mu*m + g, w -= lr*m."""
+    def upd(w, g, m):
+        g = g + 2.0 * wd * w
+        m = mu * m + g
+        return w - lr * m, m
+    out = jax.tree.map(upd, params, grads, state.momentum)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, SgdState(new_m)
+
+
+class AdamState(NamedTuple):
+    mu: any
+    nu: any
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(z, jax.tree.map(jnp.zeros_like, params),
+                     jnp.zeros((), jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, *, lr, b1=0.9, b2=0.95,
+                eps=1e-8, wd=0.0):
+    c = state.count + 1
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(w, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return w - lr * (step + wd * w), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    get = lambda i: jax.tree.map(lambda t: t[i], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return get(0), AdamState(get(1), get(2), c)

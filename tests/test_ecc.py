@@ -1,0 +1,121 @@
+"""ECC codec invariants — unit + hypothesis property tests."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecc
+
+
+def wot_blocks(rng, n):
+    w = rng.integers(-64, 64, size=(n, 8)).astype(np.int8)
+    w[:, 7] = rng.integers(-128, 128, size=n)
+    return w
+
+
+class TestInPlace64:
+    def test_code_tables(self):
+        # all 64 columns distinct, nonzero, odd weight; check cols = e_i
+        cols = ecc.COLS64
+        assert len(set(cols.tolist())) == 64
+        assert all(bin(int(c)).count("1") % 2 == 1 and c > 0 for c in cols)
+        for i in range(7):
+            assert cols[i * 8 + ecc.CHECK_BIT] == 1 << i
+
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        w = wot_blocks(rng, 2048)
+        enc = ecc.encode64(jnp.asarray(w.view(np.uint8)))
+        dec, single, double = ecc.decode64(enc)
+        assert not bool(single.any()) and not bool(double.any())
+        assert (np.asarray(dec).view(np.int8) == w).all()
+
+    def test_every_single_bit_flip_corrected(self):
+        rng = np.random.default_rng(1)
+        w = wot_blocks(rng, 4)
+        enc = np.asarray(ecc.encode64(jnp.asarray(w.view(np.uint8))))
+        for g in range(64):
+            f = enc.copy()
+            f[0, g // 8] ^= np.uint8(1 << (g % 8))
+            dec, single, double = ecc.decode64(jnp.asarray(f))
+            assert (np.asarray(dec)[0].view(np.int8) == w[0]).all(), g
+            assert bool(single[0]) and not bool(double[0])
+
+    def test_every_double_flip_detected_never_miscorrected(self):
+        rng = np.random.default_rng(2)
+        w = wot_blocks(rng, 1)
+        enc = np.asarray(ecc.encode64(jnp.asarray(w.view(np.uint8))))
+        pairs = list(itertools.combinations(range(64), 2))
+        f = np.repeat(enc, len(pairs), axis=0)
+        for i, (g1, g2) in enumerate(pairs):
+            f[i, g1 // 8] ^= np.uint8(1 << (g1 % 8))
+            f[i, g2 // 8] ^= np.uint8(1 << (g2 % 8))
+        dec, single, double = ecc.decode64(jnp.asarray(f))
+        assert bool(double.all()) and not bool(single.any())
+
+    def test_sign_restore_matches_wot_semantics(self):
+        # any WOT-small byte (in [-64,63]) has bit6 == bit7; encode then
+        # decode must reproduce it even though bit6 was overwritten
+        vals = np.arange(-64, 64, dtype=np.int8)
+        w = np.zeros((len(vals), 8), np.int8)
+        w[:, 3] = vals
+        enc = ecc.encode64(jnp.asarray(w.view(np.uint8)))
+        dec, _, _ = ecc.decode64(enc)
+        assert (np.asarray(dec).view(np.int8) == w).all()
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(0, 63))
+    def test_property_single_flip(self, seed, bitpos):
+        rng = np.random.default_rng(seed)
+        w = wot_blocks(rng, 8)
+        enc = np.asarray(ecc.encode64(jnp.asarray(w.view(np.uint8)))).copy()
+        enc[3, bitpos // 8] ^= np.uint8(1 << (bitpos % 8))
+        dec, single, double = ecc.decode64(jnp.asarray(enc))
+        assert (np.asarray(dec).view(np.int8) == w).all()
+        assert bool(single[3]) and not bool(double.any())
+
+
+class TestSecded72:
+    def test_roundtrip_and_single_correction(self):
+        rng = np.random.default_rng(3)
+        data = rng.integers(0, 256, size=(256, 8)).astype(np.uint8)
+        chk = ecc.encode72(jnp.asarray(data))
+        dec, s, d = ecc.decode72(jnp.asarray(data), chk)
+        assert not bool(s.any()) and (np.asarray(dec) == data).all()
+        for g in range(0, 64, 7):
+            f = data.copy()
+            f[0, g // 8] ^= np.uint8(1 << (g % 8))
+            dec, s, d = ecc.decode72(jnp.asarray(f), chk)
+            assert (np.asarray(dec)[0] == data[0]).all() and bool(s[0])
+
+    def test_check_byte_flip_harmless(self):
+        rng = np.random.default_rng(4)
+        data = rng.integers(0, 256, size=(16, 8)).astype(np.uint8)
+        chk = np.asarray(ecc.encode72(jnp.asarray(data))).copy()
+        chk[0] ^= 1  # fault in the stored check byte itself
+        dec, s, d = ecc.decode72(jnp.asarray(data), jnp.asarray(chk))
+        assert (np.asarray(dec)[0] == data[0]).all()  # data still intact
+
+
+class TestParity8:
+    def test_detect_and_zero(self):
+        rng = np.random.default_rng(5)
+        data = rng.integers(0, 256, size=(128,)).astype(np.uint8)
+        chk = ecc.encode_parity8(jnp.asarray(data))
+        f = data.copy()
+        f[17] ^= 0x10
+        dec, bad = ecc.decode_parity8(jnp.asarray(f), chk)
+        assert bool(bad[17]) and int(np.asarray(dec)[17]) == 0
+        assert int(np.asarray(bad).sum()) == 1
+
+    def test_double_flip_in_byte_escapes(self):
+        # parity limitation (documents why the paper needs SEC-DED)
+        rng = np.random.default_rng(6)
+        data = rng.integers(0, 256, size=(8,)).astype(np.uint8)
+        chk = ecc.encode_parity8(jnp.asarray(data))
+        f = data.copy()
+        f[2] ^= 0b00000110  # two flips, parity unchanged
+        dec, bad = ecc.decode_parity8(jnp.asarray(f), chk)
+        assert not bool(bad[2])

@@ -1,0 +1,84 @@
+"""Protection-scheme API: overheads, roundtrips, fault-trial pipeline."""
+import numpy as np
+import pytest
+
+from repro.core import protect, wot
+
+
+def wot_q(rng, n):
+    q = rng.integers(-64, 64, size=n).astype(np.int8)
+    q[7::8] = rng.integers(-128, 128, size=q[7::8].size)
+    return q
+
+
+@pytest.mark.parametrize("name,overhead,hw", [
+    ("faulty", 0.0, False), ("zero", 0.125, False),
+    ("ecc", 0.125, True), ("in-place", 0.0, True)])
+def test_scheme_metadata_and_roundtrip(name, overhead, hw):
+    rng = np.random.default_rng(0)
+    q = wot_q(rng, 4096)
+    sch = protect.get_scheme(name)
+    st = sch.encode(q)
+    assert abs(sch.space_overhead(st) - overhead) < 1e-9
+    assert sch.needs_ecc_hw == hw
+    assert (sch.decode(st) == q).all()
+
+
+def test_inplace_single_fault_per_block_fully_corrected():
+    rng = np.random.default_rng(1)
+    q = wot_q(rng, 8 * 512)
+    sch = protect.get_scheme("in-place")
+    st = sch.encode(q)
+    data = st.data.copy()
+    for blk in range(0, 512, 3):  # 1 flip in every 3rd block
+        data[blk * 8 + (blk % 8)] ^= np.uint8(1 << (blk % 8))
+    out = sch.decode(protect.Stored(data, None, st.n_weights))
+    assert (out == q).all()
+
+
+def test_ecc_vs_inplace_equivalent_correction_strength():
+    """Paper's headline: in-place == standard SEC-DED correction capability
+    (single error per 64-bit block), at 0 vs 12.5% overhead."""
+    rng = np.random.default_rng(2)
+    q = wot_q(rng, 80000)
+    rate = 1e-4
+    for seed in range(3):
+        bad_counts = {}
+        for name in ("ecc", "in-place"):
+            out = protect.run_fault_trial(protect.get_scheme(name), q, rate,
+                                          seed=seed)
+            bad_counts[name] = int((out != q).sum())
+        # both should correct the overwhelming majority of faults
+        n_flips = int(round(q.size * 8 * rate))
+        assert bad_counts["ecc"] <= n_flips * 0.2
+        assert bad_counts["in-place"] <= n_flips * 0.2
+
+
+def test_faulty_scheme_passes_faults_through():
+    rng = np.random.default_rng(3)
+    q = wot_q(rng, 8000)
+    out = protect.run_fault_trial(protect.get_scheme("faulty"), q, 1e-3, 0)
+    assert (out != q).sum() > 0
+
+
+def test_zero_scheme_zeroes_detected():
+    rng = np.random.default_rng(4)
+    q = wot_q(rng, 8000)
+    sch = protect.get_scheme("zero")
+    st = sch.encode(q)
+    data = st.data.copy()
+    data[100] ^= 0x80  # single flip -> parity catches it
+    out = sch.decode(protect.Stored(data, st.checks, st.n_weights))
+    assert out[100] == 0
+    assert (np.delete(out, 100) == np.delete(q, 100)).all()
+
+
+def test_encoded_weights_differ_only_in_checkbit_positions():
+    """In-place encoding touches ONLY bit 6 of bytes 0..6 per block."""
+    rng = np.random.default_rng(5)
+    q = wot_q(rng, 4096)
+    st = protect.get_scheme("in-place").encode(q)
+    diff = st.data ^ q.view(np.uint8)
+    pos = np.arange(diff.size) % 8
+    assert (diff[pos == 7] == 0).all()
+    assert np.isin(diff[pos != 7], [0, 0x40]).all()

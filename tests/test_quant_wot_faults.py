@@ -1,0 +1,109 @@
+"""Quantization, WOT throttling, and fault-injection invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import faults, quant, wot
+
+
+class TestQuant:
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+        q, s = quant.quantize(x)
+        err = jnp.abs(quant.dequantize(q, s) - x)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+        assert q.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(q))) <= 127
+
+    def test_paper_eq1(self):
+        # X^q = round(X * 127 / max|X|)
+        x = jnp.asarray([-2.0, -1.0, 0.0, 0.5, 4.0])
+        q, s = quant.quantize(x)
+        expected = np.round(np.asarray(x) * 127 / 4.0)
+        assert (np.asarray(q) == expected).all()
+
+    def test_fake_quant_gradient_is_identity(self):
+        x = jnp.asarray([0.3, -0.7, 1.2])
+        g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v) * 2.0))(x)
+        assert np.allclose(np.asarray(g), 2.0)
+
+    def test_per_channel(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(4, 64)) * np.array([[1], [10], [100], [1000]]))
+        q, s = quant.quantize(x, axis=1)
+        assert s.shape == (4, 1)
+        assert float(jnp.max(jnp.abs(quant.dequantize(q, s) - x) / s)) <= 0.5 + 1e-6
+
+
+class TestWot:
+    def test_throttle_q_invariant(self):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.integers(-128, 128, size=4096).astype(np.int8))
+        t = wot.throttle_q(q)
+        assert wot.satisfies_constraint(t)
+        # position 7 untouched
+        assert (np.asarray(t)[7::8] == np.asarray(q)[7::8]).all()
+        # idempotent
+        assert (np.asarray(wot.throttle_q(t)) == np.asarray(t)).all()
+
+    def test_throttle_only_moves_large(self):
+        q = jnp.asarray(np.array([10, -64, 63, 100, -100, 5, 0, 127], np.int8))
+        t = np.asarray(wot.throttle_q(q))
+        assert t.tolist() == [10, -64, 63, 63, -64, 5, 0, 127]
+
+    def test_deploy_pipeline_satisfies_constraint(self):
+        # quantize -> throttle == the deployable weights (always compliant)
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.normal(size=(333,)).astype(np.float32) * 7)
+        q, s = quant.quantize(w)
+        assert wot.satisfies_constraint(wot.throttle_q(q))
+
+    def test_census(self):
+        q = jnp.asarray(np.array([100, 0, 0, 0, 0, 0, 0, 0] * 10, np.int8))
+        assert int(wot.count_large_in_protected(q)) == 10
+        hist = np.asarray(wot.large_position_histogram(q))
+        assert hist[0] == 10 and hist[1:].sum() == 0
+
+    def test_range_percentages(self):
+        q = np.array([0, 10, 40, 70, -80, -5, 33, 64], np.int8)
+        p = wot.range_percentages(q)
+        assert abs(p["[0,32)"] - 37.5) < 1e-6
+        assert abs(p["[32,64)"] - 25.0) < 1e-6
+        assert abs(p["[64,128]"] - 37.5) < 1e-6
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 600))
+    def test_property_throttle(self, seed, n):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-128, 128, size=n).astype(np.int8))
+        t = wot.throttle_q(q)
+        assert t.shape == q.shape
+        assert wot.satisfies_constraint(t)
+
+
+class TestFaults:
+    def test_exact_flip_count(self):
+        stored = np.zeros(125000, np.uint8)  # 1e6 bits
+        out = faults.inject(stored, 1e-3, seed=0)
+        flipped = np.unpackbits(out).sum()
+        assert flipped == 1000
+
+    def test_deterministic(self):
+        stored = np.arange(256, dtype=np.uint8)
+        a = faults.inject(stored, 0.01, seed=7)
+        b = faults.inject(stored, 0.01, seed=7)
+        c = faults.inject(stored, 0.01, seed=8)
+        assert (a == b).all() and not (a == c).all()
+
+    def test_zero_rate_noop(self):
+        stored = np.arange(64, dtype=np.uint8)
+        assert (faults.inject(stored, 0.0, seed=0) == stored).all()
+
+    def test_jax_path_flips_expected_count(self):
+        stored = jnp.zeros(12500, jnp.uint8)
+        out = faults.inject_jax(stored, 1e-2, jax.random.PRNGKey(0))
+        n = int(np.unpackbits(np.asarray(out)).sum())
+        expected = faults.n_faults(12500 * 8, 1e-2)
+        assert 0.9 * expected <= n <= expected  # collisions only reduce

@@ -1,19 +1,22 @@
 """Paper Table 2: accuracy drop under memory faults, per protection scheme.
 
-{faulty, zero, ecc, in-place} x fault rates {1e-6..1e-3} (+ an amplified
-3e-3 row where small-model effects are visible), multiple trials, on
-WOT-trained CNNs. Reports the space-overhead column alongside."""
+{faulty, parity-zero, secded72, in-place} x fault rates {1e-6..1e-3} (+ an
+amplified 3e-3 row where small-model effects are visible), multiple trials,
+on WOT-trained CNNs. Each trial runs the ``repro.protection`` policy
+pipeline (encode -> inject into the stored image -> decode); the
+space-overhead column comes from the same encoded trees."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.training.cnn_experiments import (accuracy, eval_with_scheme,
+from repro import protection
+from repro.training.cnn_experiments import (eval_policy, eval_with_scheme,
                                             train_cnn_wot)
 
 RATES = (1e-6, 1e-5, 1e-4, 1e-3, 3e-3)
-SCHEMES = ("faulty", "zero", "ecc", "in-place")
+SCHEMES = ("faulty", "parity-zero", "secded72", "in-place")
 
 
 def run(models=("resnet18",), trials=5, rates=RATES, verbose=True):
@@ -22,8 +25,10 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True):
         params, fwd, tmpl = train_cnn_wot(name)
         clean, _ = eval_with_scheme(params, fwd, tmpl, "faulty", 0.0, 0)
         if verbose:
+            report = protection.coverage(params, eval_policy("in-place"))
             print(f"# {name}: clean int8+WOT accuracy {clean:.3f}")
-            print(f"# {'scheme':9s} {'ovh%':5s} " +
+            print("# " + report.summary().replace("\n", "\n# "))
+            print(f"# {'scheme':11s} {'ovh%':5s} " +
                   " ".join(f"{r:>13.0e}" for r in rates))
         for scheme in SCHEMES:
             row = []
@@ -38,7 +43,7 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True):
             if verbose:
                 cells = " ".join(f"{d * 100:6.2f}±{s * 100:4.1f}"
                                  for d, s in row)
-                print(f"# {scheme:9s} {ovh * 100:4.1f}%  {cells}")
+                print(f"# {scheme:11s} {ovh * 100:4.1f}%  {cells}")
     return results
 
 

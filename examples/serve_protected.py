@@ -1,5 +1,6 @@
 """Protected-serving example: batched decode with ECC-encoded weights under
-active memory faults, across architectures (dense / MoE / SSM / hybrid).
+active memory faults, across architectures (dense / MoE / SSM / hybrid),
+driven entirely through the ``repro.protection`` policy API.
 
   PYTHONPATH=src python examples/serve_protected.py
 """
@@ -10,20 +11,20 @@ sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
-from repro.launch.serve import inject_tree
+from repro import configs, protection
 from repro.models import lm
 from repro.serving import protected
 
 
 def main():
+    policy = protection.ProtectionPolicy(default_scheme="in-place")
     for arch in ("deepseek-7b", "deepseek-v2-236b", "mamba2-2.7b",
                  "recurrentgemma-2b"):
         cfg = configs.get_smoke(arch)
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
-        enc = protected.encode_tree(params)
+        report = policy.coverage(params)
+        enc = policy.encode_tree(params)
         serve = jax.jit(protected.make_serve_step(cfg))
         B = 4
         cache = lm.init_cache(cfg, B, 64)
@@ -33,12 +34,14 @@ def main():
         clean, _ = serve(enc, cache, tok, jnp.zeros((B,), jnp.int32))
 
         # serve with faults injected into the resident weight images
-        faulty_enc = inject_tree(enc, 1e-5, seed=42)
+        faulty_enc = protection.inject_tree(enc, 1e-5, seed=42)
         dirty, _ = serve(faulty_enc, cache, tok, jnp.zeros((B,), jnp.int32))
         err = float(jnp.max(jnp.abs(clean.astype(jnp.float32) -
                                     dirty.astype(jnp.float32))))
-        print(f"{arch:20s} batch={B}: fault-injected vs clean logits "
-              f"max|diff| = {err:.2e}  (singles corrected in-place)")
+        print(f"{arch:20s} batch={B}: {report.n_protected} tensors "
+              f"protected ({report.protected_bytes / 2**20:.1f} MiB, "
+              f"{report.n_unprotected} unprotected), fault-injected vs clean "
+              f"logits max|diff| = {err:.2e} (singles corrected in-place)")
 
 
 if __name__ == "__main__":

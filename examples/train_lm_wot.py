@@ -16,13 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, protection
 from repro.core import quant, wot
 from repro.data import synthetic
 from repro.models import lm
 from repro.serving import protected
 from repro.training import checkpoint, optim, train
-from repro.launch.serve import inject_tree
 
 
 def main():
@@ -66,8 +65,10 @@ def main():
     print(f"[lm] WOT violations in deployable int8 weights: {bad}")
 
     # protected serving under faults
+    print("[lm] " + protection.coverage(params).summary()
+          .replace("\n", "\n[lm] "))
     enc = protected.encode_tree(params)
-    enc_faulty = inject_tree(enc, 1e-4, seed=1)
+    enc_faulty = protection.inject_tree(enc, 1e-4, seed=1)
     serve = jax.jit(protected.make_serve_step(cfg))
     cache = lm.init_cache(cfg, 2, 64)
     toks = jnp.zeros((2, 1), jnp.int32)

@@ -1,2 +1,13 @@
-"""Core: in-place zero-space ECC, WOT training co-design, fault injection."""
-from . import ecc, faults, protect, quant, wot  # noqa: F401
+"""Core: in-place zero-space ECC, WOT training co-design, fault injection.
+
+``repro.core.protect`` is a deprecated shim over :mod:`repro.protection`;
+it is imported lazily so only code that still uses it sees the warning.
+"""
+from . import ecc, faults, quant, wot  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "protect":
+        import importlib
+        return importlib.import_module(".protect", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

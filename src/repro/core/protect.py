@@ -1,109 +1,58 @@
-"""Protection-strategy API (paper §5.1 counterparts + the contribution).
+"""DEPRECATED — use :mod:`repro.protection`.
 
-A scheme turns a flat int8 weight vector into a *stored byte image* (what
-lives in fault-prone memory) and back. Faults are injected into the full
-stored image — including out-of-place check bytes, exactly as DRAM faults
-would hit ECC bits too.
+This module is a compatibility shim over the unified protection API and will
+be removed after one release. The old host-side classes map onto
+``repro.protection.host``:
 
-  none      : raw bytes, no protection                       (paper "faulty")
-  parity8   : byte parity, detected-faulty weight -> 0       (paper "zero")
-  secded72  : standard SEC-DED (72,64,1), 12.5% overhead     (paper "ecc")
-  inplace   : in-place zero-space SEC-DED (64,57,1), 0%      (paper "in-place")
+  protect.Stored            -> protection.Stored      (same fields)
+  protect.get_scheme(name)  -> protection.get_host_scheme(name)
+  protect.run_fault_trial   -> protection.run_fault_trial
+  protect.Scheme()/Parity8()/Secded72()/InPlace()
+                            -> protection.get_host_scheme(
+                                   "faulty"/"parity-zero"/"secded72"/"in-place")
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
+import warnings
 
-import jax.numpy as jnp
-import numpy as np
+from repro.protection.host import (HostScheme, Stored,  # noqa: F401
+                                   get_host_scheme, run_fault_trial)
 
-from . import ecc, faults
-
-
-@dataclasses.dataclass
-class Stored:
-    """Byte image of one protected flat weight vector."""
-    data: np.ndarray                      # (n,) uint8 — weight bytes
-    checks: np.ndarray | None             # out-of-place check bytes or None
-    n_weights: int                        # original length (pre-padding)
-
-    @property
-    def total_bytes(self) -> int:
-        return self.data.size + (self.checks.size if self.checks is not None else 0)
+warnings.warn(
+    "repro.core.protect is deprecated; use repro.protection "
+    "(ProtectionPolicy / get_scheme / get_host_scheme) instead.",
+    DeprecationWarning, stacklevel=2)
 
 
-class Scheme:
-    name: str = "none"
-    needs_ecc_hw: bool = False
+class Scheme(HostScheme):
+    name = "none"  # the historical label; new code sees "faulty"
 
-    def encode(self, q_flat: np.ndarray) -> Stored:
-        q = np.asarray(q_flat, dtype=np.int8).reshape(-1)
-        data, _ = ecc.pad_to_block_multiple(q.view(np.uint8))
-        return Stored(data=data.copy(), checks=None, n_weights=q.size)
-
-    def decode(self, s: Stored) -> np.ndarray:
-        return s.data[: s.n_weights].view(np.int8).copy()
-
-    def space_overhead(self, s: Stored) -> float:
-        return (s.total_bytes - s.n_weights) / s.n_weights
-
-    def inject(self, s: Stored, rate: float, seed: int) -> Stored:
-        """Flip bits across the whole stored image (data + check bytes)."""
-        if s.checks is None:
-            return Stored(faults.inject(s.data, rate, seed), None, s.n_weights)
-        image = np.concatenate([s.data, s.checks])
-        flipped = faults.inject(image, rate, seed)
-        return Stored(flipped[: s.data.size], flipped[s.data.size:], s.n_weights)
+    def __init__(self):
+        super().__init__("faulty")
 
 
-class Parity8(Scheme):
+class Parity8(HostScheme):
     name = "zero"
 
-    def encode(self, q_flat: np.ndarray) -> Stored:
-        s = super().encode(q_flat)
-        checks = np.asarray(ecc.encode_parity8(jnp.asarray(s.data)))
-        return Stored(s.data, checks, s.n_weights)
-
-    def decode(self, s: Stored) -> np.ndarray:
-        data, _bad = ecc.decode_parity8(jnp.asarray(s.data), jnp.asarray(s.checks))
-        return np.asarray(data)[: s.n_weights].view(np.int8).copy()
+    def __init__(self):
+        super().__init__("parity-zero")
 
 
-class Secded72(Scheme):
+class Secded72(HostScheme):
     name = "ecc"
-    needs_ecc_hw = True
 
-    def encode(self, q_flat: np.ndarray) -> Stored:
-        s = super().encode(q_flat)
-        checks = np.asarray(ecc.encode72(jnp.asarray(ecc.to_blocks(jnp.asarray(s.data)))))
-        return Stored(s.data, checks, s.n_weights)
-
-    def decode(self, s: Stored) -> np.ndarray:
-        blocks = ecc.to_blocks(jnp.asarray(s.data))
-        data, _single, _double = ecc.decode72(blocks, jnp.asarray(s.checks))
-        return np.asarray(data).reshape(-1)[: s.n_weights].view(np.int8).copy()
+    def __init__(self):
+        super().__init__("secded72")
 
 
-class InPlace(Scheme):
-    """The paper's contribution. Requires WOT-compliant weights."""
+class InPlace(HostScheme):
     name = "in-place"
-    needs_ecc_hw = True
 
-    def encode(self, q_flat: np.ndarray) -> Stored:
-        q = np.asarray(q_flat, dtype=np.int8).reshape(-1)
-        data, _ = ecc.pad_to_block_multiple(q.view(np.uint8))
-        blocks = jnp.asarray(data.reshape(-1, ecc.BLOCK_BYTES))
-        enc = np.asarray(ecc.encode64(blocks)).reshape(-1)
-        return Stored(enc, None, q.size)
-
-    def decode(self, s: Stored) -> np.ndarray:
-        blocks = jnp.asarray(s.data.reshape(-1, ecc.BLOCK_BYTES))
-        dec, _single, _double = ecc.decode64(blocks)
-        return np.asarray(dec).reshape(-1)[: s.n_weights].view(np.int8).copy()
+    def __init__(self):
+        super().__init__("in-place")
 
 
-SCHEMES: dict[str, Callable[[], Scheme]] = {
+SCHEMES = {
     "faulty": Scheme,
     "zero": Parity8,
     "ecc": Secded72,
@@ -111,11 +60,5 @@ SCHEMES: dict[str, Callable[[], Scheme]] = {
 }
 
 
-def get_scheme(name: str) -> Scheme:
-    return SCHEMES[name]()
-
-
-def run_fault_trial(scheme: Scheme, q_flat: np.ndarray, rate: float, seed: int) -> np.ndarray:
-    """encode -> inject faults -> decode: the per-trial pipeline of Table 2."""
-    stored = scheme.encode(q_flat)
-    return scheme.decode(scheme.inject(stored, rate, seed))
+def get_scheme(name: str) -> HostScheme:
+    return SCHEMES[name]() if name in SCHEMES else get_host_scheme(name)

@@ -1,11 +1,12 @@
 """Protected-serving driver: batched decode with ECC-encoded weights.
 
-Demonstrates the full serving path at local scale: quantize + throttle +
-in-place-ECC-encode the weights, inject memory faults at a chosen rate, and
-decode-serve batched requests — faults are corrected on the fly.
+Demonstrates the full serving path at local scale: build a
+``ProtectionPolicy`` (scheme + backend selectable), encode the weights,
+report coverage, inject memory faults at a chosen rate, and decode-serve
+batched requests — faults are corrected on the fly.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
-      --fault-rate 1e-4 --tokens 32
+      --fault-rate 1e-4 --tokens 32 [--scheme in-place] [--backend xla]
 """
 from __future__ import annotations
 
@@ -14,30 +15,19 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
-from repro.core import faults
+from repro import configs, protection
 from repro.models import lm
 from repro.serving import protected
 
 
 def inject_tree(enc_params, rate: float, seed: int):
-    """Flip random bits in every encoded weight image (memory fault model)."""
-    i = 0
+    """Flip random bits in every encoded weight image (memory fault model).
 
-    def inj(x):
-        nonlocal i
-        if isinstance(x, dict) and set(x) == {"enc", "scale"}:
-            i += 1
-            return {"enc": jnp.asarray(
-                faults.inject(np.asarray(x["enc"]), rate, seed + i)),
-                "scale": x["scale"]}
-        return x
-
-    return jax.tree.map(inj, enc_params,
-                        is_leaf=lambda x: isinstance(x, dict) and
-                        set(x) == {"enc", "scale"})
+    Kept as the serving-facing name; delegates to
+    :func:`repro.protection.inject_tree`.
+    """
+    return protection.inject_tree(enc_params, rate, seed)
 
 
 def main():
@@ -47,17 +37,27 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--fault-rate", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheme", default="in-place",
+                    choices=sorted(set(protection.scheme_ids()) |
+                                   set(protection.ALIASES)))
+    ap.add_argument("--backend", default="xla",
+                    choices=sorted(protection.BACKENDS))
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
-    print(f"[serve] {cfg.name} smoke config, fault_rate={args.fault_rate}")
+    print(f"[serve] {cfg.name} smoke config, scheme={args.scheme}, "
+          f"backend={args.backend}, fault_rate={args.fault_rate}")
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
-    enc = protected.encode_tree(params)
+    policy = protection.ProtectionPolicy(default_scheme=args.scheme,
+                                         backend=args.backend)
+    print("[serve] " +
+          policy.coverage(params).summary().replace("\n", "\n[serve] "))
+    enc = policy.encode_tree(params)
     if args.fault_rate:
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 
-    serve_step = jax.jit(protected.make_serve_step(cfg))
+    serve_step = jax.jit(protected.make_serve_step(cfg, backend=args.backend))
     cache = lm.init_cache(cfg, args.batch, max(64, args.tokens * 2))
     tokens = jnp.zeros((args.batch, 1), jnp.int32)
     t0 = time.time()

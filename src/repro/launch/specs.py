@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import protection
 from repro.distributed import sharding as sh
 from repro.models import lm
 from repro.models.config import ArchConfig, ShapeConfig
@@ -122,13 +123,15 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
         fsdp = _serving_fsdp_auto(cfg, mesh)
     b, s = shape.global_batch, shape.seq_len
     enc = jax.eval_shape(
-        lambda: protected.encode_tree(lm.init_params(cfg, jax.random.PRNGKey(0),
-                                                     jnp.float32)))
+        lambda: protection.encode_tree(lm.init_params(cfg,
+                                                      jax.random.PRNGKey(0),
+                                                      jnp.float32)))
     cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
     tokens = _sds((b, 1), jnp.int32)
     pos = _sds((b,), jnp.int32)
 
-    espec = protected.spec_tree(enc, functools.partial(sh.param_spec, fsdp=fsdp))
+    espec = protection.spec_tree(enc,
+                                 functools.partial(sh.param_spec, fsdp=fsdp))
     espec = _sanitize(espec, enc, mesh)
     cspec = _sanitize(sh.cache_specs(cache), cache, mesh)
     tspec, posspec = _sanitize((P("data", None), P("data")),
@@ -165,8 +168,9 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                                                 mesh.devices.shape))["model"]})
     b, s = shape.global_batch, shape.seq_len
     enc = jax.eval_shape(
-        lambda: protected.encode_tree(lm.init_params(cfg, jax.random.PRNGKey(0),
-                                                     jnp.float32)))
+        lambda: protection.encode_tree(lm.init_params(cfg,
+                                                      jax.random.PRNGKey(0),
+                                                      jnp.float32)))
     tokens = _sds((b, s), jnp.int32)
     extras = {}
     if cfg.family == "vlm":
@@ -175,7 +179,8 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     if cfg.family == "encdec":
         extras["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
 
-    espec = protected.spec_tree(enc, functools.partial(sh.param_spec, fsdp=fsdp))
+    espec = protection.spec_tree(enc,
+                                 functools.partial(sh.param_spec, fsdp=fsdp))
     espec = _sanitize(espec, enc, mesh)
     tspec = _sanitize(P(dp, None), tokens, mesh)
     xspec = _sanitize({k: sh.batch_spec(k, v, dp=dp) for k, v in extras.items()},

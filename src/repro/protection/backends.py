@@ -1,0 +1,122 @@
+"""Backend dispatch: route codec compute through XLA or Pallas.
+
+Every scheme op that touches 64-bit ECC blocks goes through a ``Backend``
+object, selected by a single ``backend=`` switch anywhere in the public API:
+
+* ``"xla"``    — the pure-jnp reference path (``core.ecc`` / ``kernels.ref``).
+  Works everywhere, fuses into the surrounding XLA program; this is what the
+  decode-on-read serving path compiles today.
+* ``"pallas"`` — the fused TPU kernels (``kernels/ops.py``): tiled VMEM
+  decode/encode and the decode+matmul ``ecc_qmatmul``. ``interpret=True`` by
+  default so the same switch validates on CPU; pass
+  ``get_backend("pallas", interpret=False)`` on real TPU.
+
+Backends only differ for the in-place (64,57,1) code — parity/secded72 have
+no Pallas kernels and always take the jnp path inside their schemes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecc
+
+__all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
+           "BACKENDS"]
+
+
+class Backend:
+    """Interface: in-place-code block ops + the fused protected matmul."""
+
+    name = "abstract"
+
+    def encode64(self, blocks: jnp.ndarray) -> jnp.ndarray:
+        """(..., 8) uint8 WOT-compliant bytes -> encoded (..., 8)."""
+        raise NotImplementedError
+
+    def decode64(self, blocks: jnp.ndarray):
+        """(..., 8) uint8 encoded -> (decoded (..., 8), single, double)."""
+        raise NotImplementedError
+
+    def qmatmul(self, a_q: jnp.ndarray, w_enc: jnp.ndarray, a_scale,
+                w_scale) -> jnp.ndarray:
+        """a_q (M,K) int8 @ decode(w_enc (K,N) uint8) * scales -> (M,N) f32."""
+        raise NotImplementedError
+
+
+class XlaBackend(Backend):
+    name = "xla"
+
+    def encode64(self, blocks):
+        return ecc.encode64(blocks)
+
+    def decode64(self, blocks):
+        return ecc.decode64(blocks)
+
+    def qmatmul(self, a_q, w_enc, a_scale, w_scale):
+        from repro.kernels import ref
+        acc = ref.ecc_qmatmul_ref(a_q, w_enc)
+        return acc.astype(jnp.float32) * (a_scale * w_scale)
+
+
+class PallasBackend(Backend):
+    """Tiled VMEM kernels. Arbitrary block shapes are handled by flattening
+    to (nblk, 8) and zero-padding nblk up to a tile multiple (a zero block
+    has syndrome 0, so padding decodes/encodes to itself)."""
+
+    name = "pallas"
+
+    def __init__(self, *, interpret: bool = True, blk_n: int = 4096):
+        self.interpret = interpret
+        self.blk_n = blk_n
+
+    def _tile_pad(self, blocks2d: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+        nblk = blocks2d.shape[0]
+        if nblk <= self.blk_n:
+            return blocks2d, nblk
+        pad = (-nblk) % self.blk_n
+        if pad:
+            blocks2d = jnp.concatenate(
+                [blocks2d, jnp.zeros((pad, 8), blocks2d.dtype)])
+        return blocks2d, nblk
+
+    def encode64(self, blocks):
+        from repro.kernels import ecc_encode
+        shape = blocks.shape
+        b2, nblk = self._tile_pad(blocks.astype(jnp.uint8).reshape(-1, 8))
+        out = ecc_encode.ecc_encode(b2, blk_n=min(self.blk_n, b2.shape[0]),
+                                    interpret=self.interpret)
+        return out[:nblk].reshape(shape)
+
+    def decode64(self, blocks):
+        from repro.kernels import ecc_decode
+        shape = blocks.shape
+        b2, nblk = self._tile_pad(blocks.astype(jnp.uint8).reshape(-1, 8))
+        dec, flags = ecc_decode.ecc_decode(
+            b2, blk_n=min(self.blk_n, b2.shape[0]), interpret=self.interpret)
+        dec = dec[:nblk].reshape(shape)
+        flags = flags[:nblk].reshape(shape[:-1])
+        single = (flags & 1) == 1
+        double = (flags & 2) == 2
+        return dec, single, double
+
+    def qmatmul(self, a_q, w_enc, a_scale, w_scale):
+        from repro.kernels import ops
+        return ops.qmatmul_protected(a_q, w_enc, a_scale, w_scale,
+                                     interpret=self.interpret)
+
+
+BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
+
+
+def get_backend(backend, **kw) -> Backend:
+    """Resolve a backend name or pass an instance through."""
+    if isinstance(backend, Backend):
+        return backend
+    if backend is None:
+        backend = "xla"
+    try:
+        return BACKENDS[backend](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; one of {sorted(BACKENDS)}") from None

@@ -1,0 +1,151 @@
+"""Jittable protection schemes (paper §5.1 baselines + the contribution).
+
+A scheme maps int8 weight arrays (trailing dim a multiple of 8 — the policy
+layer guarantees this by padding) to the *stored byte image* that lives in
+fault-prone memory, and back:
+
+  faulty       raw bytes, no protection                      (paper "faulty")
+  parity-zero  byte parity, detected-faulty weight -> 0      (paper "zero")
+  secded72     standard SEC-DED (72,64,1), 12.5% overhead    (paper "ecc")
+  in-place     in-place zero-space SEC-DED (64,57,1), 0%     (paper "in-place")
+
+``encode``/``decode`` are pure jnp (trace-safe), batched over any leading
+dims, and route 64-bit-block compute through a pluggable ``Backend``
+(XLA reference or the fused Pallas kernels). The host-side NumPy trial
+pipeline of the Table-2 experiments is a thin wrapper in ``host.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecc
+
+from .backends import Backend, get_backend
+
+__all__ = ["Scheme", "Faulty", "ParityZero", "Secded72", "InPlace",
+           "SCHEMES", "ALIASES", "get_scheme", "scheme_ids"]
+
+BLOCK = ecc.BLOCK_BYTES
+
+
+def _as_bytes(q: jnp.ndarray) -> jnp.ndarray:
+    if q.dtype == jnp.uint8:
+        return q
+    return jax.lax.bitcast_convert_type(q.astype(jnp.int8), jnp.uint8)
+
+
+def _as_int8(b: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(b.astype(jnp.uint8), jnp.int8)
+
+
+def _blocks(b: jnp.ndarray) -> jnp.ndarray:
+    return b.reshape(*b.shape[:-1], b.shape[-1] // BLOCK, BLOCK)
+
+
+class Scheme:
+    """Base interface. Subclasses are stateless; use ``get_scheme``."""
+
+    scheme_id: str = "faulty"
+    paper_name: str = "faulty"      # row label in the paper's Table 2
+    needs_ecc_hw: bool = False      # needs the Fig.-2 swizzle + ECC logic
+    check_ratio: float = 0.0        # out-of-place check bytes per weight byte
+    requires_wot: bool = False      # encode corrupts non-WOT-compliant bytes
+
+    def encode(self, q: jnp.ndarray, backend: Backend | str = "xla"):
+        """int8 (..., n), n % 8 == 0 -> (enc uint8 (..., n), checks | None)."""
+        raise NotImplementedError
+
+    def decode(self, enc: jnp.ndarray, checks, backend: Backend | str = "xla"):
+        """Stored image -> int8 (..., n). Corrects/zeroes per the scheme."""
+        raise NotImplementedError
+
+
+class Faulty(Scheme):
+    scheme_id = "faulty"
+    paper_name = "faulty"
+
+    def encode(self, q, backend="xla"):
+        return _as_bytes(q), None
+
+    def decode(self, enc, checks, backend="xla"):
+        return _as_int8(enc)
+
+
+class ParityZero(Scheme):
+    scheme_id = "parity-zero"
+    paper_name = "zero"
+    check_ratio = 1.0 / BLOCK
+
+    def encode(self, q, backend="xla"):
+        data = _as_bytes(q)
+        return data, ecc.encode_parity8(data)
+
+    def decode(self, enc, checks, backend="xla"):
+        data, _bad = ecc.decode_parity8(enc, checks)
+        return _as_int8(data)
+
+
+class Secded72(Scheme):
+    scheme_id = "secded72"
+    paper_name = "ecc"
+    needs_ecc_hw = True
+    check_ratio = 1.0 / BLOCK
+
+    def encode(self, q, backend="xla"):
+        data = _as_bytes(q)
+        return data, ecc.encode72(_blocks(data))
+
+    def decode(self, enc, checks, backend="xla"):
+        dec, _single, _double = ecc.decode72(_blocks(enc), checks)
+        return _as_int8(dec.reshape(enc.shape))
+
+
+class InPlace(Scheme):
+    """The paper's contribution: check bits live in the non-informative bit 6
+    of bytes 0..6 of every 8-byte block. Requires WOT-compliant weights."""
+
+    scheme_id = "in-place"
+    paper_name = "in-place"
+    needs_ecc_hw = True
+    requires_wot = True
+
+    def encode(self, q, backend="xla"):
+        be = get_backend(backend)
+        data = _as_bytes(q)
+        return be.encode64(_blocks(data)).reshape(data.shape), None
+
+    def decode(self, enc, checks, backend="xla"):
+        be = get_backend(backend)
+        dec, _single, _double = be.decode64(_blocks(enc))
+        return _as_int8(dec.reshape(enc.shape))
+
+    def decode_with_flags(self, enc, checks, backend="xla"):
+        """Also return (single_corrected, double_detected) per block."""
+        be = get_backend(backend)
+        dec, single, double = be.decode64(_blocks(enc))
+        return _as_int8(dec.reshape(enc.shape)), single, double
+
+
+SCHEMES: dict[str, Scheme] = {s.scheme_id: s for s in
+                              (Faulty(), ParityZero(), Secded72(), InPlace())}
+
+# Paper Table-2 row names and historical core.protect ids resolve too.
+ALIASES = {"none": "faulty", "zero": "parity-zero", "parity8": "parity-zero",
+           "ecc": "secded72", "inplace": "in-place"}
+
+
+def get_scheme(name) -> Scheme:
+    """Resolve a scheme id (or paper alias, or Scheme instance)."""
+    if isinstance(name, Scheme):
+        return name
+    key = ALIASES.get(name, name)
+    try:
+        return SCHEMES[key]
+    except KeyError:
+        raise ValueError(f"unknown scheme {name!r}; one of "
+                         f"{sorted(SCHEMES) + sorted(ALIASES)}") from None
+
+
+def scheme_ids() -> tuple[str, ...]:
+    return tuple(SCHEMES)

@@ -1,0 +1,103 @@
+"""``ProtectedTensor`` — the pytree carrier for protected weights.
+
+Replaces the fragile ``{"enc", "scale"}`` dict marker that the serving path
+used to sniff for. A ``ProtectedTensor`` is a registered JAX pytree node, so
+it flows through ``jax.jit`` / ``jax.tree.map`` / ``jax.eval_shape`` /
+``tree_flatten`` transparently; array fields (``enc``, ``checks``, ``scale``)
+are children and the codec metadata (``scheme_id``, ``orig_shape``) rides
+along as static aux data.
+
+Two storage layouts:
+
+* **same-shape** — ``enc`` has exactly the weight's shape (ECC blocks run
+  along the last dim, which must be a multiple of 8). The encoded image
+  inherits the weight's sharding spec byte for byte.
+* **flat-padded** — for tensors whose last dim is *not* a block multiple:
+  ``enc`` is 1-D, the flattened weight padded up to a block multiple.
+  ``orig_shape`` + ``n_weights`` recover the tensor on decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+
+__all__ = ["ProtectedTensor", "is_protected_tensor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectedTensor:
+    """Stored byte image of one protected weight tensor.
+
+    enc:        uint8 encoded weight bytes (same-shape or flat-padded).
+    checks:     out-of-place check bytes (secded72 / parity-zero) or None.
+    scale:      f32 quantization scale (q = round(w / scale)).
+    scheme_id:  registry id of the codec ("faulty", "parity-zero",
+                "secded72", "in-place").
+    orig_shape: logical shape of the original weight tensor.
+    """
+    enc: Any
+    checks: Any
+    scale: Any
+    scheme_id: str = "in-place"
+    orig_shape: tuple = ()
+
+    # -- metadata ------------------------------------------------------------
+
+    @property
+    def n_weights(self) -> int:
+        return int(math.prod(self.orig_shape))
+
+    @property
+    def is_flat(self) -> bool:
+        """True for the flat-padded layout (enc 1-D, weight possibly not)."""
+        return tuple(self.enc.shape) != tuple(self.orig_shape)
+
+    @property
+    def stored_bytes(self) -> int:
+        """Total bytes resident in fault-prone memory (enc + check bytes)."""
+        total = int(math.prod(self.enc.shape))
+        if self.checks is not None:
+            total += int(math.prod(self.checks.shape))
+        return total
+
+    @property
+    def space_overhead(self) -> float:
+        """(stored - weight) / weight bytes; 0.0 for in-place on aligned
+        tensors, 0.125 for secded72/parity-zero."""
+        return (self.stored_bytes - self.n_weights) / max(self.n_weights, 1)
+
+    def __repr__(self) -> str:  # compact: the arrays can be huge
+        enc_shape = tuple(getattr(self.enc, "shape", ()))
+        return (f"ProtectedTensor(scheme={self.scheme_id!r}, "
+                f"orig_shape={tuple(self.orig_shape)}, enc={enc_shape}, "
+                f"checks={self.checks is not None})")
+
+
+def _flatten_with_keys(pt: ProtectedTensor):
+    keys = (jax.tree_util.GetAttrKey("enc"), jax.tree_util.GetAttrKey("checks"),
+            jax.tree_util.GetAttrKey("scale"))
+    children = (pt.enc, pt.checks, pt.scale)
+    aux = (pt.scheme_id, tuple(pt.orig_shape))
+    return tuple(zip(keys, children)), aux
+
+
+def _flatten(pt: ProtectedTensor):
+    return (pt.enc, pt.checks, pt.scale), (pt.scheme_id, tuple(pt.orig_shape))
+
+
+def _unflatten(aux, children) -> ProtectedTensor:
+    scheme_id, orig_shape = aux
+    enc, checks, scale = children
+    return ProtectedTensor(enc=enc, checks=checks, scale=scale,
+                           scheme_id=scheme_id, orig_shape=orig_shape)
+
+
+jax.tree_util.register_pytree_with_keys(
+    ProtectedTensor, _flatten_with_keys, _unflatten, _flatten)
+
+
+def is_protected_tensor(x) -> bool:
+    return isinstance(x, ProtectedTensor)

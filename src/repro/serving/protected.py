@@ -1,91 +1,79 @@
-"""Protected serving: weights live in memory as in-place-ECC-encoded int8.
+"""Protected serving on top of ``repro.protection``.
 
-``encode_tree`` quantizes (+throttles, idempotent on WOT-trained weights) and
-ECC-encodes every protected tensor; the encoded image has the SAME shape as
-the weight (1 byte per int8 element, check bits in place) so it inherits the
-weight's sharding. ``serve_step`` decodes on read — every step — which is the
-honest cost model for at-rest protection (on TPU the fused
-``kernels/ecc_qmatmul`` does this in VMEM on the way to the MXU; at the XLA
-level here the decode appears as elementwise ops ahead of each matmul).
+Weights live in memory as ``ProtectedTensor`` leaves — in-place-ECC-encoded
+int8 whose image has the SAME shape as the weight (1 byte per element, check
+bits in place), so it inherits the weight's sharding. ``serve_step`` decodes
+on read — every step — which is the honest cost model for at-rest protection
+(on TPU the fused ``kernels/ecc_qmatmul`` does this in VMEM on the way to the
+MXU via ``backend="pallas"``; the XLA backend lowers the decode to
+elementwise ops ahead of each matmul).
+
+This module is the LM-serving adapter; the protection API itself (schemes,
+policy, coverage, injection) lives in ``repro.protection``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
+from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import ecc, quant, wot
+from repro import protection
 from repro.models import lm
 from repro.models.config import ArchConfig
 
 
-def _protectable(path, leaf) -> bool:
-    return (wot.is_protected_weight(path, leaf) and
-            leaf.shape[-1] % 8 == 0)
+def encode_leaf(w: jnp.ndarray,
+                policy: Optional[protection.ProtectionPolicy] = None
+                ) -> protection.ProtectedTensor:
+    policy = policy or protection.default_policy()
+    return policy.encode_leaf(w, policy.default_scheme)
 
 
-class Protected:
-    """Marker wrapper: {"enc": uint8 (same shape), "scale": f32 scalar}."""
-    __slots__ = ()
+def decode_leaf(p: protection.ProtectedTensor, dtype=jnp.bfloat16,
+                *, backend="xla") -> jnp.ndarray:
+    return protection.decode_leaf(p, dtype, backend=backend)
 
 
-def encode_leaf(w: jnp.ndarray) -> dict:
-    scale = quant.compute_scale(w)
-    q = jnp.clip(jnp.round(w / scale), -quant.QMAX, quant.QMAX).astype(jnp.int8)
-    q = wot.throttle_q(q.reshape(-1)).reshape(w.shape)  # idempotent post-WOT
-    blocks = jax.lax.bitcast_convert_type(q, jnp.uint8).reshape(
-        *w.shape[:-1], w.shape[-1] // 8, 8)
-    enc = ecc.encode64(blocks).reshape(w.shape)
-    return {"enc": enc, "scale": scale.astype(jnp.float32)}
+def encode_tree(params,
+                policy: Optional[protection.ProtectionPolicy] = None) -> Any:
+    """fp32 params -> serving tree (protected leaves -> ProtectedTensor)."""
+    return protection.encode_tree(params, policy)
 
 
-def decode_leaf(p: dict, dtype=jnp.bfloat16) -> jnp.ndarray:
-    enc = p["enc"]
-    blocks = enc.reshape(*enc.shape[:-1], enc.shape[-1] // 8, 8)
-    dec, _single, _double = ecc.decode64(blocks)
-    q = jax.lax.bitcast_convert_type(dec.reshape(enc.shape), jnp.int8)
-    return (q.astype(jnp.float32) * p["scale"]).astype(dtype)
+def decode_tree(enc_params, dtype=jnp.bfloat16, *, backend="xla"):
+    return protection.decode_tree(enc_params, dtype, backend=backend)
 
 
-def _is_protected(x) -> bool:
-    return isinstance(x, dict) and set(x.keys()) == {"enc", "scale"}
-
-
-def encode_tree(params) -> Any:
-    """fp32 params -> serving tree (protected leaves encoded, rest bf16)."""
-    def enc(path, leaf):
-        if _protectable(path, leaf):
-            return encode_leaf(leaf)
-        return leaf
-    return jax.tree_util.tree_map_with_path(enc, params)
-
-
-def decode_tree(enc_params, dtype=jnp.bfloat16):
-    return jax.tree.map(
-        lambda x: decode_leaf(x, dtype) if _is_protected(x) else x,
-        enc_params, is_leaf=_is_protected)
+def coverage(params, policy: Optional[protection.ProtectionPolicy] = None
+             ) -> protection.CoverageReport:
+    """Per-tree protection coverage (count + bytes, no silent gaps)."""
+    return protection.coverage(params, policy)
 
 
 def make_serve_step(cfg: ArchConfig, *, decode_per_step: bool = True,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16, backend="xla"):
     """serve_step(enc_params, cache, tokens, pos) -> (logits, cache).
 
     decode_per_step=True keeps weights encoded at rest (the paper's model);
     False decodes once outside (baseline for the protection-cost ablation).
+    ``backend`` routes the per-step decode ("xla" or "pallas").
     """
+    be = protection.get_backend(backend)
+
     def serve_step(enc_params, cache, tokens, pos):
-        params = decode_tree(enc_params, dtype) if decode_per_step else enc_params
+        params = (protection.decode_tree(enc_params, dtype, backend=be)
+                  if decode_per_step else enc_params)
         return lm.decode_step(cfg, params, cache, tokens, pos, dtype=dtype)
 
     return serve_step
 
 
-def make_prefill(cfg: ArchConfig, *, dtype=jnp.bfloat16, chunk: int = 2048):
+def make_prefill(cfg: ArchConfig, *, dtype=jnp.bfloat16, chunk: int = 2048,
+                 backend="xla"):
+    be = protection.get_backend(backend)
+
     def prefill(enc_params, tokens, extras=None):
-        params = decode_tree(enc_params, dtype)
+        params = protection.decode_tree(enc_params, dtype, backend=be)
         extras = extras or {}
         return lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
                           **extras)
@@ -94,15 +82,5 @@ def make_prefill(cfg: ArchConfig, *, dtype=jnp.bfloat16, chunk: int = 2048):
 
 def spec_tree(enc_params_or_params, param_spec_fn):
     """Sharding specs for a serving tree: encoded image inherits the weight's
-    spec; scale replicated."""
-    from jax.sharding import PartitionSpec as P
-
-    def spec(path, leaf):
-        names = [getattr(p_, "key", None) for p_ in path]
-        if names and names[-1] == "scale":
-            return P()
-        if names and names[-1] == "enc":
-            path = path[:-1]
-        return param_spec_fn(path, leaf)
-
-    return jax.tree_util.tree_map_with_path(spec, enc_params_or_params)
+    spec; scales and check bytes replicated."""
+    return protection.spec_tree(enc_params_or_params, param_spec_fn)

@@ -19,7 +19,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core import ecc, protect, quant, wot
+from repro import protection
+from repro.core import quant, wot
 
 
 def _flatten(tree):
@@ -28,7 +29,7 @@ def _flatten(tree):
 
 
 def save(path: str, tree, *, step: int, protected: bool = False,
-         keep: int = 3) -> str:
+         scheme: str = "in-place", keep: int = 3) -> str:
     """Atomic save of a pytree. Returns the final checkpoint dir."""
     os.makedirs(path, exist_ok=True)
     final = os.path.join(path, f"step_{step:08d}")
@@ -36,10 +37,10 @@ def save(path: str, tree, *, step: int, protected: bool = False,
     os.makedirs(tmp, exist_ok=True)
     flat_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
     leaves, treedef = _flatten(tree)
+    host_scheme = protection.get_host_scheme(scheme)
     meta = {"step": step, "protected": protected, "n_leaves": len(leaves),
-            "treedef": str(treedef)}
+            "scheme": host_scheme.scheme_id, "treedef": str(treedef)}
     arrays = {}
-    scheme = protect.InPlace()
     for i, leaf in enumerate(leaves):
         a = np.asarray(leaf)
         leaf_path = flat_with_path[i][0]
@@ -47,8 +48,10 @@ def save(path: str, tree, *, step: int, protected: bool = False,
             scale = float(np.max(np.abs(a))) / quant.QMAX or 1e-12
             q = np.clip(np.round(a / scale), -127, 127).astype(np.int8)
             q = np.asarray(wot.throttle_q(q.reshape(-1))).reshape(a.shape)
-            stored = scheme.encode(q.reshape(-1))
+            stored = host_scheme.encode(q.reshape(-1))
             arrays[f"leaf_{i}"] = stored.data
+            if stored.checks is not None:
+                arrays[f"leaf_{i}_checks"] = stored.checks
             meta[f"leaf_{i}"] = {"protected": True, "shape": list(a.shape),
                                  "dtype": str(a.dtype), "scale": scale,
                                  "n": int(stored.n_weights)}
@@ -91,14 +94,16 @@ def restore(path: str, tree_like, *, step: Optional[int] = None,
         meta = json.load(f)
     data = np.load(os.path.join(d, "arrays.npz"))
     leaves, treedef = _flatten(tree_like)
-    scheme = protect.InPlace()
+    host_scheme = protection.get_host_scheme(meta.get("scheme", "in-place"))
     out = []
     for i in range(len(leaves)):
         lm_ = meta[f"leaf_{i}"]
         a = data[f"leaf_{i}"]
         if lm_["protected"]:
-            stored = protect.Stored(a, None, lm_["n"])
-            q = scheme.decode(stored).reshape(lm_["shape"])
+            checks = (data[f"leaf_{i}_checks"]
+                      if f"leaf_{i}_checks" in data.files else None)
+            stored = protection.Stored(a, checks, lm_["n"])
+            q = host_scheme.decode(stored).reshape(lm_["shape"])
             a = (q.astype(np.float32) * lm_["scale"]).astype(lm_["dtype"])
         out.append(a)
     restored = jax.tree_util.tree_unflatten(treedef, out)

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import protect, quant, wot
+from repro import protection
+from repro.core import quant, wot
 from repro.data import synthetic
 from repro.models import cnn
 from . import optim, train
@@ -107,35 +108,27 @@ def large_count(params) -> int:
     return total
 
 
+def eval_policy(scheme_name) -> protection.ProtectionPolicy:
+    """The paper's evaluation protects every >=2-D tensor (conv + fc)."""
+    return protection.ProtectionPolicy(
+        default_scheme=scheme_name,
+        predicate=lambda path, leaf: getattr(leaf, "ndim", 0) >= 2)
+
+
 def eval_with_scheme(params, fwd, tmpl, scheme_name, rate, seed, *,
                      n_classes=4, img=32):
-    """Quantize+throttle weights, encode/inject/decode, eval accuracy.
-    Returns (accuracy, space_overhead)."""
-    sch = protect.get_scheme(scheme_name)
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    out, stored_bytes, weight_bytes = [], 0, 0
-    for i, leaf in enumerate(leaves):
-        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
-            scale = quant.compute_scale(leaf)
-            q = np.asarray(jnp.clip(jnp.round(leaf / scale), -127, 127),
-                           np.int8).reshape(-1)
-            q = np.asarray(wot.throttle_q(jnp.asarray(q)))
-            st = sch.encode(q)
-            stored_bytes += st.total_bytes
-            weight_bytes += q.size
-            dec = sch.decode(sch.inject(st, rate, seed + i)) if rate else \
-                sch.decode(st)
-            out.append(jnp.asarray(dec.reshape(leaf.shape),
-                                   jnp.float32) * scale)
-        else:
-            out.append(leaf)
-    faulty = jax.tree_util.tree_unflatten(treedef, out)
+    """Quantize+throttle weights, encode/inject/decode through a
+    ``ProtectionPolicy``, eval accuracy. Returns (accuracy, space_overhead)."""
+    policy = eval_policy(scheme_name)
+    enc = policy.encode_tree(params)
+    if rate:
+        enc = protection.inject_tree(enc, rate, seed)
+    faulty = protection.decode_tree(enc, jnp.float32)
     b, _ = synthetic.image_batch(n_classes, 256, img, seed=777, step=0,
                                  templates=tmpl)
     lg = cnn_forward_cached(faulty, fwd, b)
     acc = float(np.mean(np.argmax(np.asarray(lg), -1) == b["labels"]))
-    ovh = (stored_bytes - weight_bytes) / max(weight_bytes, 1)
-    return acc, ovh
+    return acc, protection.space_overhead(enc)
 
 
 def cnn_forward_cached(params, fwd, batch):

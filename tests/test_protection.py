@@ -1,0 +1,318 @@
+"""The unified ``repro.protection`` API: scheme round-trips on both backends,
+ProtectedTensor pytree behaviour, policy rules, and coverage reporting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import protection
+
+SCHEME_IDS = ("faulty", "parity-zero", "secded72", "in-place")
+BACKENDS = ("xla", "pallas")
+
+
+def wot_q(rng, n):
+    """WOT-compliant int8 vector with full quantization range (max |q|=127,
+    nothing below -127 so symmetric int8 quantization round-trips exactly)."""
+    q = rng.integers(-64, 64, size=n).astype(np.int8)
+    q[7::8] = rng.integers(-127, 128, size=q[7::8].size)
+    q[7] = 127  # pin the range so compute_scale round-trips exactly
+    return q
+
+
+def wot_params(rng, shape=(16, 64)):
+    """fp32 weights that quantize exactly back to a WOT-compliant q."""
+    q = wot_q(rng, int(np.prod(shape))).reshape(shape)
+    scale = np.float32(0.01)
+    return jnp.asarray(q.astype(np.float32) * scale), q, scale
+
+
+# ---------------------------------------------------------------------------
+# scheme round-trips: encode -> inject(rate=0) -> decode == identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sid", SCHEME_IDS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scheme_roundtrip_identity_both_backends(sid, backend):
+    rng = np.random.default_rng(0)
+    q = wot_q(rng, 4096).reshape(8, 512)
+    scheme = protection.get_scheme(sid)
+    enc, checks = scheme.encode(jnp.asarray(q), backend)
+    pt = protection.ProtectedTensor(enc=enc, checks=checks,
+                                    scale=jnp.float32(1.0), scheme_id=sid,
+                                    orig_shape=q.shape)
+    pt0 = jax.tree_util.tree_leaves(
+        protection.inject_tree({"w": pt}, rate=0.0, seed=0),
+        is_leaf=protection.is_protected_tensor)[0]
+    dec = scheme.decode(pt0.enc, pt0.checks, backend)
+    assert np.array_equal(np.asarray(dec), q), sid
+
+
+@pytest.mark.parametrize("sid", SCHEME_IDS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_policy_tree_roundtrip_exact(sid, backend):
+    """Full tree pipeline on-device: encode_tree -> inject(0) -> decode_tree
+    reproduces the weights bit-exactly (WOT-compliant fp inputs)."""
+    rng = np.random.default_rng(1)
+    w, _q, _scale = wot_params(rng)
+    params = {"blk": {"wq": w}}
+    policy = protection.ProtectionPolicy(
+        default_scheme=sid, backend=backend,
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+    enc = policy.encode_tree(params)
+    enc = protection.inject_tree(enc, rate=0.0, seed=3)
+    dec = policy.decode_tree(enc, jnp.float32)
+    assert np.array_equal(np.asarray(dec["blk"]["wq"]), np.asarray(w)), sid
+
+
+@pytest.mark.parametrize("sid", SCHEME_IDS)
+def test_host_trial_pipeline_matches_identity_at_rate0(sid):
+    rng = np.random.default_rng(2)
+    q = wot_q(rng, 8000)
+    out = protection.run_fault_trial(sid, q, rate=0.0, seed=0)
+    assert np.array_equal(out, q)
+
+
+def test_inplace_zero_space_secded_overhead():
+    rng = np.random.default_rng(3)
+    q = wot_q(rng, 4096)
+    expected = {"faulty": 0.0, "parity-zero": 0.125, "secded72": 0.125,
+                "in-place": 0.0}
+    for sid, ovh in expected.items():
+        sch = protection.get_host_scheme(sid)
+        st = sch.encode(q)
+        assert abs(sch.space_overhead(st) - ovh) < 1e-9, sid
+
+
+def test_inplace_corrects_singles_through_policy():
+    rng = np.random.default_rng(4)
+    w, _q, _ = wot_params(rng, (32, 64))
+    policy = protection.ProtectionPolicy(
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+    enc = policy.encode_tree({"w": w})
+    dirty = protection.inject_tree(enc, rate=1e-5, seed=7)  # sparse singles
+    dec = policy.decode_tree(dirty, jnp.float32)
+    assert np.array_equal(np.asarray(dec["w"]), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# ProtectedTensor pytree behaviour
+# ---------------------------------------------------------------------------
+
+
+def _example_pt(rng, sid="in-place"):
+    w, _, _ = wot_params(rng)
+    policy = protection.ProtectionPolicy(
+        default_scheme=sid, predicate=lambda p, l: True)
+    return policy.encode_leaf(w, sid), w
+
+
+def test_protected_tensor_flatten_unflatten_preserves_aux():
+    pt, _w = _example_pt(np.random.default_rng(5))
+    leaves, treedef = jax.tree_util.tree_flatten(pt)
+    assert len(leaves) == 2  # enc + scale (checks is None for in-place)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.scheme_id == pt.scheme_id
+    assert back.orig_shape == pt.orig_shape
+    assert np.array_equal(np.asarray(back.enc), np.asarray(pt.enc))
+
+
+def test_protected_tensor_survives_tree_map():
+    pt, _w = _example_pt(np.random.default_rng(6), "secded72")
+    mapped = jax.tree.map(lambda x: x, {"a": pt})
+    assert protection.is_protected_tensor(mapped["a"])
+    assert mapped["a"].checks is not None
+
+
+def test_protected_tensor_through_jit_and_eval_shape():
+    pt, w = _example_pt(np.random.default_rng(7))
+
+    @jax.jit
+    def roundtrip(p):
+        return protection.decode_leaf(p, jnp.float32)
+
+    assert np.array_equal(np.asarray(roundtrip(pt)), np.asarray(w))
+    sds = jax.eval_shape(roundtrip, pt)
+    assert sds.shape == w.shape
+    # jit with a ProtectedTensor OUTPUT too
+    enc_fn = jax.jit(lambda x: dataclasses.replace(pt, scale=x))
+    out = enc_fn(jnp.float32(2.0))
+    assert protection.is_protected_tensor(out)
+    assert float(out.scale) == 2.0
+
+
+def test_spec_tree_inherits_weight_spec_for_same_shape_images():
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.default_rng(8)
+    w, _, _ = wot_params(rng, (16, 64))
+    odd = jnp.asarray(rng.normal(size=(4, 13)), jnp.float32)
+    policy = protection.ProtectionPolicy(
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+    enc = policy.encode_tree({"wq": w, "odd": odd})
+    specs = protection.spec_tree(enc, lambda path, leaf: P("model", "data"))
+    assert specs["wq"].enc == P("model", "data")   # inherits
+    assert specs["wq"].scale == P()                # replicated
+    assert specs["odd"].enc == P()                 # flat-padded: replicated
+
+
+# ---------------------------------------------------------------------------
+# policy: rules, padding, coverage
+# ---------------------------------------------------------------------------
+
+
+def test_policy_rules_mix_schemes_per_layer():
+    rng = np.random.default_rng(9)
+    w1, _, _ = wot_params(rng, (8, 32))
+    w2, _, _ = wot_params(rng, (8, 32))
+    w3, _, _ = wot_params(rng, (8, 32))
+    params = {"attn": {"wq": w1}, "mlp": {"w_up": w2}, "head": {"out": w3}}
+    policy = protection.ProtectionPolicy(
+        default_scheme="in-place",
+        rules=[("attn/", "secded72"), ("head/", "none")],
+        predicate=lambda p, l: True)
+    enc = policy.encode_tree(params)
+    assert enc["attn"]["wq"].scheme_id == "secded72"
+    assert enc["mlp"]["w_up"].scheme_id == "in-place"
+    assert not protection.is_protected_tensor(enc["head"]["out"])
+    # mixed tree decodes in one call
+    dec = policy.decode_tree(enc, jnp.float32)
+    assert np.array_equal(np.asarray(dec["attn"]["wq"]), np.asarray(w1))
+    assert np.array_equal(np.asarray(dec["mlp"]["w_up"]), np.asarray(w2))
+
+
+def test_unaligned_tensor_padded_and_protected_by_default():
+    rng = np.random.default_rng(10)
+    odd = jnp.asarray(rng.normal(size=(6, 13)), jnp.float32)  # 78 elems
+    policy = protection.ProtectionPolicy(predicate=lambda p, l: True)
+    enc = policy.encode_tree({"odd": odd})
+    pt = enc["odd"]
+    assert protection.is_protected_tensor(pt)
+    assert pt.is_flat and pt.enc.shape == (80,)  # padded to block multiple
+    dec = policy.decode_tree(enc, jnp.float32)["odd"]
+    assert dec.shape == odd.shape
+    scale = float(jnp.max(jnp.abs(odd))) / 127
+    # WOT throttle may clamp large values; the bulk stays within one step
+    assert float(jnp.median(jnp.abs(dec - odd))) <= scale
+
+
+def test_coverage_report_counts_and_bytes():
+    """The old silent `last-dim % 8` gate must be visible: every skipped
+    tensor shows up in the report with a count and byte size."""
+    rng = np.random.default_rng(11)
+    aligned = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    odd = jnp.asarray(rng.normal(size=(6, 13)), jnp.float32)
+    norm = jnp.ones((64,), jnp.float32)
+    params = {"wq": aligned, "odd": odd, "scale_vec": norm}
+    pred = lambda p, l: getattr(l, "ndim", 0) >= 2
+
+    padding = protection.ProtectionPolicy(predicate=pred, pad=True)
+    rep = padding.coverage(params)
+    assert rep.n_protected == 2 and rep.n_unprotected == 1
+    assert rep.pad_bytes == (-6 * 13) % 8
+    assert rep.unprotected_weight_bytes == 0  # nothing silently skipped
+
+    gating = protection.ProtectionPolicy(predicate=pred, pad=False)
+    rep = gating.coverage(params)
+    assert rep.n_protected == 1 and rep.n_unprotected == 2
+    gaps = [e for e in rep.unprotected if e.reason == "unaligned"]
+    assert len(gaps) == 1 and gaps[0].path == "odd"
+    assert rep.unprotected_weight_bytes == 6 * 13 * 4  # fp32 bytes, reported
+    assert "WARNING" in rep.summary() and "odd" in rep.summary()
+
+    # encode honours the same plan as the report
+    enc = gating.encode_tree(params)
+    assert not protection.is_protected_tensor(enc["odd"])
+    assert protection.is_protected_tensor(enc["wq"])
+
+
+def test_space_overhead_over_tree():
+    rng = np.random.default_rng(12)
+    w, _, _ = wot_params(rng, (16, 64))
+    pred = lambda p, l: getattr(l, "ndim", 0) >= 2
+    for sid, expect in (("in-place", 0.0), ("secded72", 0.125)):
+        policy = protection.ProtectionPolicy(default_scheme=sid,
+                                             predicate=pred)
+        enc = policy.encode_tree({"w": w})
+        assert abs(protection.space_overhead(enc) - expect) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_backend_matches_xla_decode_with_tile_padding():
+    rng = np.random.default_rng(13)
+    q = wot_q(rng, 8 * 10)  # 10 blocks vs blk_n=4 exercises the pad path
+    xla = protection.get_backend("xla")
+    pallas = protection.PallasBackend(blk_n=4)
+    scheme = protection.get_scheme("in-place")
+    enc, _ = scheme.encode(jnp.asarray(q), xla)
+    blocks = enc.reshape(-1, 8)
+    dx, sx, _ = xla.decode64(blocks)
+    dp, sp, _ = pallas.decode64(blocks)
+    assert np.array_equal(np.asarray(dx), np.asarray(dp))
+    assert np.array_equal(np.asarray(sx), np.asarray(sp))
+    ex = xla.encode64(jax.lax.bitcast_convert_type(
+        jnp.asarray(q), jnp.uint8).reshape(-1, 8))
+    ep = pallas.encode64(jax.lax.bitcast_convert_type(
+        jnp.asarray(q), jnp.uint8).reshape(-1, 8))
+    assert np.array_equal(np.asarray(ex), np.asarray(ep))
+
+
+def test_qmatmul_backend_equivalence():
+    rng = np.random.default_rng(14)
+    w, _, _ = wot_params(rng, (32, 64))
+    policy = protection.ProtectionPolicy(predicate=lambda p, l: True)
+    pt = policy.encode_leaf(w, "in-place")
+    a = jnp.asarray(rng.integers(-8, 8, size=(16, 32)), jnp.int8)
+    out_x = protection.qmatmul(a, pt, jnp.float32(0.5), backend="xla")
+    out_p = protection.qmatmul(a, pt, jnp.float32(0.5), backend="pallas")
+    assert np.allclose(np.asarray(out_x), np.asarray(out_p))
+    with pytest.raises(ValueError):
+        bad = dataclasses.replace(pt, scheme_id="faulty")
+        protection.qmatmul(a, bad, jnp.float32(1.0))
+
+
+def test_device_injection_rate0_is_identity_and_jittable():
+    rng = np.random.default_rng(15)
+    w, _, _ = wot_params(rng)
+    policy = protection.ProtectionPolicy(
+        default_scheme="secded72", predicate=lambda p, l: True)
+    enc = policy.encode_tree({"w": w})
+    out = protection.inject_tree_device(enc, 0.0, jax.random.PRNGKey(0))
+    assert np.array_equal(np.asarray(out["w"].enc), np.asarray(enc["w"].enc))
+    hit = jax.jit(lambda t, k: protection.inject_tree_device(t, 1e-3, k))(
+        enc, jax.random.PRNGKey(1))
+    image = np.concatenate([np.asarray(enc["w"].enc).reshape(-1),
+                            np.asarray(enc["w"].checks).reshape(-1)])
+    dirty = np.concatenate([np.asarray(hit["w"].enc).reshape(-1),
+                            np.asarray(hit["w"].checks).reshape(-1)])
+    assert (image != dirty).any()
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_core_protect_shim_warns_and_roundtrips():
+    import sys
+
+    import repro.core
+    sys.modules.pop("repro.core.protect", None)
+    if "protect" in vars(repro.core):
+        delattr(repro.core, "protect")
+    with pytest.warns(DeprecationWarning):
+        import repro.core.protect as protect
+    rng = np.random.default_rng(16)
+    q = wot_q(rng, 4096)
+    sch = protect.get_scheme("in-place")
+    st = sch.encode(q)
+    assert sch.space_overhead(st) == 0.0
+    assert np.array_equal(sch.decode(st), q)
+    assert np.array_equal(protect.run_fault_trial(protect.InPlace(), q,
+                                                  0.0, 0), q)

@@ -2,54 +2,86 @@
 
 {faulty, parity-zero, secded72, in-place} x fault rates {1e-6..1e-3} (+ an
 amplified 3e-3 row where small-model effects are visible), multiple trials,
-on WOT-trained CNNs. Each trial runs the ``repro.protection`` policy
-pipeline (encode -> inject into the stored image -> decode); the
-space-overhead column comes from the same encoded trees."""
+on WOT-trained CNNs.  Since PR 2 the grid runs through the compiled
+on-device campaign engine (``repro.protection.campaign``): one encode and
+one jit compile per (model, scheme), then the whole (trial x rate) sweep
+executes inside a single device program — Table 2 in seconds instead of one
+host round-trip per cell.  ``--batch scan`` trades the vmap grid's speed for
+constant memory; ``--json`` dumps every ``CampaignResult`` for BENCH_*.json
+artifacts.  See ``docs/table2.md`` for the full reproduction walkthrough.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-import numpy as np
+import jax
 
 from repro import protection
-from repro.training.cnn_experiments import (eval_policy, eval_with_scheme,
+from repro.training.cnn_experiments import (eval_policy, run_scheme_campaign,
                                             train_cnn_wot)
 
 RATES = (1e-6, 1e-5, 1e-4, 1e-3, 3e-3)
 SCHEMES = ("faulty", "parity-zero", "secded72", "in-place")
 
 
-def run(models=("resnet18",), trials=5, rates=RATES, verbose=True):
+def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
+        batch="scan", json_path=None):
     results = {}
+    campaigns = {}
     for name in models:
         params, fwd, tmpl = train_cnn_wot(name)
-        clean, _ = eval_with_scheme(params, fwd, tmpl, "faulty", 0.0, 0)
+        for i, scheme in enumerate(SCHEMES):
+            res = run_scheme_campaign(params, fwd, tmpl, scheme, rates=rates,
+                                      trials=trials, batch=batch,
+                                      key=jax.random.PRNGKey(i))
+            campaigns[(name, scheme)] = res
+            results[(name, scheme)] = (res.space_overhead, res.row(),
+                                       res.clean)
+        clean = campaigns[(name, SCHEMES[0])].clean
         if verbose:
             report = protection.coverage(params, eval_policy("in-place"))
             print(f"# {name}: clean int8+WOT accuracy {clean:.3f}")
             print("# " + report.summary().replace("\n", "\n# "))
+            sweep = sum(c.wall_clock_s for (m, _), c in campaigns.items()
+                        if m == name)
+            comp = sum(c.compile_s for (m, _), c in campaigns.items()
+                       if m == name)
+            dev = campaigns[(name, SCHEMES[0])]
+            print(f"# campaign [{dev.platform}/{dev.batch}]: "
+                  f"{len(SCHEMES)} compiles {comp:.1f}s, "
+                  f"full grid sweep {sweep:.2f}s")
             print(f"# {'scheme':11s} {'ovh%':5s} " +
                   " ".join(f"{r:>13.0e}" for r in rates))
-        for scheme in SCHEMES:
-            row = []
-            for rate in rates:
-                accs = [eval_with_scheme(params, fwd, tmpl, scheme, rate,
-                                         1000 * t + 1)[0]
-                        for t in range(trials)]
-                row.append((clean - float(np.mean(accs)),
-                            float(np.std(accs))))
-            _, ovh = eval_with_scheme(params, fwd, tmpl, scheme, 0.0, 0)
-            results[(name, scheme)] = (ovh, row, clean)
-            if verbose:
+            for scheme in SCHEMES:
+                res = campaigns[(name, scheme)]
                 cells = " ".join(f"{d * 100:6.2f}±{s * 100:4.1f}"
-                                 for d, s in row)
-                print(f"# {scheme:11s} {ovh * 100:4.1f}%  {cells}")
+                                 for d, s in res.row())
+                print(f"# {scheme:11s} {res.space_overhead * 100:4.1f}%  "
+                      f"{cells}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({f"{m}/{s}": c.to_dict()
+                       for (m, s), c in campaigns.items()}, f, indent=2)
+        if verbose:
+            print(f"# wrote {json_path}")
     return results
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="+", default=["resnet18"])
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--batch", default="scan", choices=("vmap", "scan"),
+                    help="grid layout: scan compiles ~3x faster on CPU, "
+                         "vmap sweeps fastest on accelerators")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all CampaignResults (BENCH_*.json format)")
+    args = ap.parse_args(argv)
     t0 = time.time()
-    results = run()
+    results = run(models=tuple(args.models), trials=args.trials,
+                  batch=args.batch, json_path=args.json)
     us = (time.time() - t0) * 1e6
     for (name, scheme), (ovh, row, clean) in results.items():
         drops = "/".join(f"{d * 100:.2f}" for d, _ in row)

@@ -14,7 +14,7 @@ def main() -> None:
     kernel_bench.main()
     weight_distribution.main()
     wot_training.main()
-    fault_injection.main()
+    fault_injection.main([])  # explicit argv: don't inherit run.py's
     wot_admm_compare.main()
 
     # roofline rows if a dry-run result file exists

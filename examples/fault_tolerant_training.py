@@ -1,9 +1,13 @@
-"""Fault-tolerance demo: training survives a simulated node crash.
+"""Fault-tolerance demo: training survives a simulated node crash, and the
+recovered weights survive memory faults.
 
 Trains with async ECC-protected checkpoints, "crashes" mid-run, then resumes
 from the latest checkpoint — final params are bitwise-reproducible vs an
-uninterrupted run (deterministic per-step data pipeline). Also demonstrates
-elastic restore (checkpoint saved under one sharding, restored to another).
+uninterrupted run (deterministic per-step data pipeline).  The finale runs a
+compiled on-device fault campaign (``repro.protection.fidelity_campaign``)
+on the recovered weights: unprotected storage loses weights at every rate,
+in-place zero-space ECC decodes ~everything back — the whole rate sweep in
+one jitted program (``batch="scan"`` keeps memory flat at LM size).
 
   PYTHONPATH=src python examples/fault_tolerant_training.py
 """
@@ -17,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, protection
 from repro.data import synthetic
 from repro.models import lm
 from repro.training import checkpoint, optim, train
@@ -62,6 +66,25 @@ def main():
     print(f"[ft] resumed-vs-uninterrupted max param diff: {err:.2e}")
     assert err < 1e-6
     print("[ft] crash-resume reproduces the uninterrupted run exactly")
+
+    print("[ft] memory-fault campaign on the recovered weights "
+          "(compiled scan sweep, 2 trials/rate)")
+    rates = (1e-5, 1e-4, 1e-3)
+    fidelity = {}
+    for scheme in ("faulty", "in-place"):
+        res = protection.fidelity_campaign(
+            p_resumed, scheme, rates=rates, trials=2,
+            key=jax.random.PRNGKey(42), batch="scan")
+        fidelity[scheme] = res.mean()
+        cells = "  ".join(f"{r:.0e}:{m * 100:7.3f}%"
+                          for r, m in zip(res.rates, res.mean()))
+        print(f"[ft] {scheme:9s} decode fidelity {cells} "
+              f"(overhead {res.space_overhead * 100:.1f}%, "
+              f"sweep {res.wall_clock_s:.2f}s)")
+    assert fidelity["in-place"][0] >= fidelity["faulty"][0]
+    assert fidelity["in-place"][-1] > 0.999
+    print("[ft] in-place zero-space ECC keeps the recovered weights intact "
+          "under memory faults")
 
 
 if __name__ == "__main__":

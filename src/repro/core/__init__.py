@@ -1,13 +1,6 @@
 """Core: in-place zero-space ECC, WOT training co-design, fault injection.
 
-``repro.core.protect`` is a deprecated shim over :mod:`repro.protection`;
-it is imported lazily so only code that still uses it sees the warning.
+The old ``repro.core.protect`` shim has been removed — all protection goes
+through :mod:`repro.protection` (see the README migration table).
 """
 from . import ecc, faults, quant, wot  # noqa: F401
-
-
-def __getattr__(name):
-    if name == "protect":
-        import importlib
-        return importlib.import_module(".protect", __name__)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

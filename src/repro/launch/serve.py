@@ -24,10 +24,33 @@ from repro.serving import protected
 def inject_tree(enc_params, rate: float, seed: int):
     """Flip random bits in every encoded weight image (memory fault model).
 
-    Kept as the serving-facing name; delegates to
-    :func:`repro.protection.inject_tree`.
+    Kept as the serving-facing name; delegates to the on-device
+    :func:`repro.protection.inject_tree_device` (jit-safe, no host
+    round-trip per leaf).  Injection builds a transient per-bit parity
+    vector per leaf (8x its stored bytes), sized for smoke/eval-scale
+    weights — production-scale leaves should shard the image first.
     """
-    return protection.inject_tree(enc_params, rate, seed)
+    return protection.inject_tree_device(enc_params, rate,
+                                         jax.random.PRNGKey(seed))
+
+
+def fault_smoke_check(enc, policy, rate: float, seed: int):
+    """Compiled campaign smoke-check before serving with injected faults:
+    sweep {rate/10, rate, 10*rate} x 2 trials in one device program and
+    report the decode fidelity (fraction of protected weights that still
+    decode to their clean values) at each rate.  ``batch="scan"`` keeps
+    peak memory at one cell's buffers — serving trees are the big-model
+    case of the vmap-vs-scan guidance in docs/campaigns.md."""
+    rates = tuple(sorted({rate / 10, rate, min(rate * 10, 0.01)}))
+    res = protection.fidelity_campaign(enc, policy, rates=rates, trials=2,
+                                       key=jax.random.PRNGKey(seed + 1),
+                                       batch="scan")
+    cells = "  ".join(f"{r:.0e}:{m * 100:6.2f}%"
+                      for r, m in zip(res.rates, res.mean()))
+    print(f"[serve] fault smoke-check ({res.scheme}, {res.batch} campaign, "
+          f"compile {res.compile_s:.1f}s, sweep {res.wall_clock_s:.2f}s): "
+          f"decode fidelity {cells}")
+    return res
 
 
 def main():
@@ -54,6 +77,7 @@ def main():
           policy.coverage(params).summary().replace("\n", "\n[serve] "))
     enc = policy.encode_tree(params)
     if args.fault_rate:
+        fault_smoke_check(enc, policy, args.fault_rate, args.seed)
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 

@@ -12,10 +12,13 @@ One surface for everything the paper's contribution needs in production:
 * :mod:`backends <repro.protection.backends>` — ``backend="xla" | "pallas"``
   routes block codec compute and the fused protected matmul.
 * :mod:`host <repro.protection.host>` — the NumPy Table-2 trial pipeline as a
-  thin wrapper over the same schemes.
+  thin wrapper over the same schemes (the campaign cross-check oracle).
+* :mod:`campaign <repro.protection.campaign>` — compiled on-device fault
+  campaigns: encode once, sweep the whole (trial x rate) grid inside one
+  jitted program, get a serializable :class:`CampaignResult`.
 
-``repro.core.protect`` and the dict-marker helpers in ``repro.serving.
-protected`` remain as deprecated shims for one release.
+See ``docs/campaigns.md`` for the campaign API guide and ``docs/faq.md`` for
+the fault model.
 """
 from __future__ import annotations
 
@@ -23,6 +26,8 @@ import jax.numpy as jnp
 
 from .backends import (BACKENDS, Backend, PallasBackend, XlaBackend,
                        get_backend)
+from .campaign import (CampaignResult, accuracy_eval, fidelity_campaign,
+                       fidelity_eval, run_campaign, run_campaign_host)
 from .host import HostScheme, Stored, get_host_scheme, run_fault_trial
 from .policy import (CoverageEntry, CoverageReport, ProtectionPolicy,
                      decode_leaf, decode_tree, inject_tree,
@@ -40,6 +45,8 @@ __all__ = [
     "spec_tree", "space_overhead",
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
+    "CampaignResult", "run_campaign", "run_campaign_host",
+    "fidelity_campaign", "accuracy_eval", "fidelity_eval",
     "default_policy", "encode_tree", "coverage", "qmatmul",
 ]
 

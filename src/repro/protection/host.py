@@ -1,10 +1,12 @@
 """Host-side NumPy trial pipeline — thin wrapper over the jittable schemes.
 
-This is the Table-2 experiment surface: encode a flat int8 weight vector into
-its stored byte image, flip bits in the whole image (check bytes included),
-decode, and measure. ``Stored`` keeps the shape of the old
-``core.protect.Stored`` so the fault-trial code and protected checkpoints
-read the same either way.
+This is the per-trial Table-2 experiment surface: encode a flat int8 weight
+vector into its stored byte image, flip bits in the whole image (check bytes
+included), decode, and measure.  It is also the cross-check oracle for the
+compiled on-device campaigns (``repro.protection.campaign``): the parity
+tests run the same grid through both paths and assert statistical agreement.
+``Stored`` keeps the field shape of the removed ``core.protect.Stored`` so
+protected checkpoints read the same either way.
 """
 from __future__ import annotations
 

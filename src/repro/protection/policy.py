@@ -304,8 +304,19 @@ def inject_tree(enc_tree, rate: float, seed: int):
     return jax.tree.map(inj, enc_tree, is_leaf=is_protected_tensor)
 
 
-def inject_tree_device(enc_tree, rate: float, key):
-    """Jit-safe on-device injection (``faults.inject_jax`` per leaf image)."""
+def inject_tree_device(enc_tree, rate, key, *, max_rate=None):
+    """Jit-safe on-device injection (``faults.inject_jax`` per leaf image).
+
+    With ``max_rate=None`` (default) ``rate`` must be a static Python float.
+    Passing ``max_rate`` switches to ``faults.inject_jax_rate``: the per-leaf
+    sample budget is fixed by ``max_rate`` and ``rate`` may then be a traced
+    scalar — the mechanism compiled fault campaigns use to sweep the whole
+    rate grid inside one program.
+    """
+    if max_rate is None:
+        inj = lambda image, k: faults.inject_jax(image, rate, k)
+    else:
+        inj = lambda image, k: faults.inject_jax_rate(image, rate, k, max_rate)
     leaves, treedef = jax.tree_util.tree_flatten(
         enc_tree, is_leaf=is_protected_tensor)
     keys = jax.random.split(key, max(len(leaves), 1))
@@ -318,13 +329,13 @@ def inject_tree_device(enc_tree, rate: float, key):
         if pt.checks is not None:
             n = enc.shape[0]
             image = jnp.concatenate([enc, pt.checks.reshape(-1)])
-            image = faults.inject_jax(image, rate, k)
+            image = inj(image, k)
             pt = dataclasses.replace(
                 pt, enc=image[:n].reshape(pt.enc.shape),
                 checks=image[n:].reshape(pt.checks.shape))
         else:
             pt = dataclasses.replace(
-                pt, enc=faults.inject_jax(enc, rate, k).reshape(pt.enc.shape))
+                pt, enc=inj(enc, k).reshape(pt.enc.shape))
         out.append(pt)
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -115,10 +115,26 @@ def eval_policy(scheme_name) -> protection.ProtectionPolicy:
         predicate=lambda path, leaf: getattr(leaf, "ndim", 0) >= 2)
 
 
+def run_scheme_campaign(params, fwd, tmpl, scheme_name, *, rates, trials,
+                        key=None, batch="vmap", n_classes=4, img=32,
+                        eval_batch=256):
+    """Compiled Table-2 column for one scheme: encode once, sweep the whole
+    (trial x rate) grid on device in one jitted program (one compile per
+    (model, scheme)). Returns a :class:`repro.protection.CampaignResult`."""
+    return protection.run_campaign(
+        params, lambda p, x: fwd(p, _norm(x)), tmpl, eval_policy(scheme_name),
+        rates=rates, trials=trials, key=key, batch=batch,
+        n_classes=n_classes, img=img, eval_batch=eval_batch)
+
+
 def eval_with_scheme(params, fwd, tmpl, scheme_name, rate, seed, *,
                      n_classes=4, img=32):
-    """Quantize+throttle weights, encode/inject/decode through a
-    ``ProtectionPolicy``, eval accuracy. Returns (accuracy, space_overhead)."""
+    """Host-path oracle for one (scheme, rate, trial) cell: quantize+throttle
+    weights, encode/inject/decode through a ``ProtectionPolicy`` with NumPy
+    injection, eval accuracy. Returns (accuracy, space_overhead).
+
+    Kept as the cross-check for :func:`run_scheme_campaign` — the campaign
+    parity tests assert both paths agree statistically on the same grid."""
     policy = eval_policy(scheme_name)
     enc = policy.encode_tree(params)
     if rate:

@@ -1,0 +1,160 @@
+"""Compiled on-device fault campaigns (``repro.protection.campaign``):
+zero-rate == clean, vmap/scan agreement, JSON round-trip, fidelity metric,
+and device<->host statistical parity on a trained CNN (the pytest-marked
+quick campaign whose output CI uploads as BENCH_campaign.json)."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import protection
+from repro.data import synthetic
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+N_CLASSES, IMG, BATCH = 4, 8, 128
+
+
+@pytest.fixture(scope="module")
+def linear_model():
+    """Template-correlator classifier: no training, instant eval, and the
+    same encode/inject/decode pipeline as the real CNNs."""
+    _, tmpl = synthetic.image_batch(N_CLASSES, BATCH, IMG, seed=3, step=0)
+    w = tmpl.reshape(N_CLASSES, -1).T / np.sqrt(tmpl[0].size)
+    params = {"fc": {"w": jnp.asarray(w, jnp.float32)}}
+    fwd = lambda p, x: x.reshape(x.shape[0], -1) @ p["fc"]["w"]
+    return params, fwd, tmpl
+
+
+def _run(params, fwd, tmpl, scheme, **kw):
+    kw.setdefault("n_classes", N_CLASSES)
+    kw.setdefault("img", IMG)
+    kw.setdefault("eval_batch", BATCH)
+    kw.setdefault("key", jax.random.PRNGKey(0))
+    return protection.run_campaign(params, fwd, tmpl, scheme, **kw)
+
+
+def test_zero_rate_campaign_equals_clean(linear_model):
+    params, fwd, tmpl = linear_model
+    for scheme in ("in-place", "secded72"):
+        res = _run(params, fwd, tmpl, scheme, rates=(0.0,), trials=2)
+        assert res.grid == ((res.clean, res.clean),), scheme
+        assert res.drop() == (0.0,)
+
+
+def test_vmap_and_scan_grids_identical(linear_model):
+    """Same key -> the two batching modes must produce the exact same grid
+    (same per-cell key assignment), on a metric that actually degrades."""
+    params, _fwd, _tmpl = linear_model
+    kw = dict(rates=(1e-3, 1e-2), trials=2, key=jax.random.PRNGKey(7))
+    vmap = protection.fidelity_campaign(params, "faulty", batch="vmap", **kw)
+    scan = protection.fidelity_campaign(params, "faulty", batch="scan", **kw)
+    assert vmap.grid == scan.grid
+    assert min(min(row) for row in vmap.grid) < 1.0  # non-trivial agreement
+    assert vmap.batch == "vmap" and scan.batch == "scan"
+
+
+def test_campaign_result_json_roundtrip(linear_model):
+    params, fwd, tmpl = linear_model
+    res = _run(params, fwd, tmpl, "secded72", rates=(1e-4, 1e-3), trials=2)
+    s = res.to_json()
+    back = protection.CampaignResult.from_json(s)
+    assert back == res
+    d = json.loads(s)
+    assert d["metric"] == "accuracy" and d["scheme"] == "secded72"
+    assert abs(d["space_overhead"] - 0.125) < 1e-9
+    assert d["derived"]["drop"] == list(res.drop())
+    assert len(res.row()) == 2 and res.trials == 2
+    # file round-trip too
+    path = ROOT / "tests" / "_campaign_tmp.json"
+    try:
+        res.save(path)
+        assert protection.CampaignResult.load(path) == res
+    finally:
+        path.unlink(missing_ok=True)
+
+
+def test_fidelity_campaign_inplace_corrects_singles(linear_model):
+    """At a rate giving exactly one flip per image, in-place decodes every
+    weight back (single-error correction); faulty never does."""
+    params, _fwd, _tmpl = linear_model
+    kw = dict(rates=(2e-4,), trials=2, key=jax.random.PRNGKey(1))
+    inplace = protection.fidelity_campaign(params, "in-place", **kw)
+    faulty = protection.fidelity_campaign(params, "faulty", **kw)
+    assert inplace.grid == ((1.0, 1.0),)
+    assert max(faulty.grid[0]) < 1.0
+    assert inplace.metric == "fidelity"
+
+
+def test_fidelity_campaign_rejects_unprotected_tree():
+    with pytest.raises(ValueError, match="no protected leaves"):
+        protection.fidelity_campaign({"b": jnp.zeros((8,))}, "in-place")
+
+
+def test_host_sampler_accepts_numpy_integer_seeds():
+    from repro.core import faults
+    img = np.arange(64, dtype=np.uint8)
+    a = faults.inject(img, 1e-2, np.int64(7))
+    b = faults.inject(img, 1e-2, 7)
+    assert np.array_equal(a, b)
+
+
+def test_fidelity_campaign_accepts_encoded_tree(linear_model):
+    """Serving path: campaign over an already-encoded tree, mixed schemes."""
+    params, _fwd, _tmpl = linear_model
+    policy = protection.ProtectionPolicy(
+        default_scheme="in-place", rules=[("fc", "secded72")],
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+    enc = policy.encode_tree(params)
+    res = protection.fidelity_campaign(enc, policy, rates=(0.0,), trials=1,
+                                       key=jax.random.PRNGKey(2))
+    assert res.scheme == "secded72"
+    assert res.grid == ((1.0,),)
+
+
+# ---------------------------------------------------------------------------
+# the quick campaign: trained CNN, device vs host oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def quick_cnn():
+    from repro.training.cnn_experiments import train_cnn_wot
+    return train_cnn_wot("resnet18", pre_steps=40, wot_steps=10, scale=0.125,
+                         img=16)
+
+
+@pytest.mark.campaign
+def test_quick_campaign_device_host_parity(quick_cnn):
+    """2 rates x 2 trials on a WOT-trained CNN: the compiled device campaign
+    and the host-path oracle must agree statistically (same grid, independent
+    RNG streams), and the result lands in BENCH_campaign.json for CI."""
+    from repro.training.cnn_experiments import (_norm, eval_policy,
+                                                run_scheme_campaign)
+    params, fwd, tmpl = quick_cnn
+    rates, trials = (1e-3, 1e-2), 2
+
+    dev = run_scheme_campaign(params, fwd, tmpl, "in-place", rates=rates,
+                              trials=trials, img=16, batch="scan",
+                              key=jax.random.PRNGKey(0))
+    host = protection.run_campaign_host(
+        params, lambda p, x: fwd(p, _norm(x)), tmpl, eval_policy("in-place"),
+        rates=rates, trials=trials, seed=0, img=16)
+
+    # identical encode + eval batch -> identical clean accuracy
+    assert abs(dev.clean - host.clean) < 1e-6
+    assert dev.clean > 0.6  # the tiny model actually learned
+    # statistical parity per rate (trial-mean drops, independent streams)
+    for r, d_dev, d_host in zip(rates, dev.drop(), host.drop()):
+        assert abs(d_dev - d_host) <= 0.25, (r, d_dev, d_host)
+    # the paper's scheme keeps the drop small at the realistic rate
+    assert dev.drop()[0] <= 0.15 and host.drop()[0] <= 0.15
+    assert dev.space_overhead == 0.0 == host.space_overhead
+    assert dev.compile_s > 0.0 and host.compile_s == 0.0
+
+    (ROOT / "BENCH_campaign.json").write_text(json.dumps({
+        "resnet18-quick/in-place/device": dev.to_dict(),
+        "resnet18-quick/in-place/host": host.to_dict(),
+    }, indent=2) + "\n")

@@ -1,8 +1,10 @@
-"""Protection-scheme API: overheads, roundtrips, fault-trial pipeline."""
+"""Host-side protection schemes (``repro.protection.host``): overheads,
+roundtrips, fault-trial pipeline. Paper Table-2 row names ("zero", "ecc")
+resolve as aliases."""
 import numpy as np
 import pytest
 
-from repro.core import protect, wot
+from repro import protection
 
 
 def wot_q(rng, n):
@@ -17,7 +19,7 @@ def wot_q(rng, n):
 def test_scheme_metadata_and_roundtrip(name, overhead, hw):
     rng = np.random.default_rng(0)
     q = wot_q(rng, 4096)
-    sch = protect.get_scheme(name)
+    sch = protection.get_host_scheme(name)
     st = sch.encode(q)
     assert abs(sch.space_overhead(st) - overhead) < 1e-9
     assert sch.needs_ecc_hw == hw
@@ -27,12 +29,12 @@ def test_scheme_metadata_and_roundtrip(name, overhead, hw):
 def test_inplace_single_fault_per_block_fully_corrected():
     rng = np.random.default_rng(1)
     q = wot_q(rng, 8 * 512)
-    sch = protect.get_scheme("in-place")
+    sch = protection.get_host_scheme("in-place")
     st = sch.encode(q)
     data = st.data.copy()
     for blk in range(0, 512, 3):  # 1 flip in every 3rd block
         data[blk * 8 + (blk % 8)] ^= np.uint8(1 << (blk % 8))
-    out = sch.decode(protect.Stored(data, None, st.n_weights))
+    out = sch.decode(protection.Stored(data, None, st.n_weights))
     assert (out == q).all()
 
 
@@ -45,8 +47,7 @@ def test_ecc_vs_inplace_equivalent_correction_strength():
     for seed in range(3):
         bad_counts = {}
         for name in ("ecc", "in-place"):
-            out = protect.run_fault_trial(protect.get_scheme(name), q, rate,
-                                          seed=seed)
+            out = protection.run_fault_trial(name, q, rate, seed=seed)
             bad_counts[name] = int((out != q).sum())
         # both should correct the overwhelming majority of faults
         n_flips = int(round(q.size * 8 * rate))
@@ -57,18 +58,18 @@ def test_ecc_vs_inplace_equivalent_correction_strength():
 def test_faulty_scheme_passes_faults_through():
     rng = np.random.default_rng(3)
     q = wot_q(rng, 8000)
-    out = protect.run_fault_trial(protect.get_scheme("faulty"), q, 1e-3, 0)
+    out = protection.run_fault_trial("faulty", q, 1e-3, 0)
     assert (out != q).sum() > 0
 
 
 def test_zero_scheme_zeroes_detected():
     rng = np.random.default_rng(4)
     q = wot_q(rng, 8000)
-    sch = protect.get_scheme("zero")
+    sch = protection.get_host_scheme("zero")
     st = sch.encode(q)
     data = st.data.copy()
     data[100] ^= 0x80  # single flip -> parity catches it
-    out = sch.decode(protect.Stored(data, st.checks, st.n_weights))
+    out = sch.decode(protection.Stored(data, st.checks, st.n_weights))
     assert out[100] == 0
     assert (np.delete(out, 100) == np.delete(q, 100)).all()
 
@@ -77,8 +78,16 @@ def test_encoded_weights_differ_only_in_checkbit_positions():
     """In-place encoding touches ONLY bit 6 of bytes 0..6 per block."""
     rng = np.random.default_rng(5)
     q = wot_q(rng, 4096)
-    st = protect.get_scheme("in-place").encode(q)
+    st = protection.get_host_scheme("in-place").encode(q)
     diff = st.data ^ q.view(np.uint8)
     pos = np.arange(diff.size) % 8
     assert (diff[pos == 7] == 0).all()
     assert np.isin(diff[pos != 7], [0, 0x40]).all()
+
+
+def test_core_protect_shim_is_gone():
+    """ROADMAP said "remove next release"; this is that release."""
+    with pytest.raises(ImportError):
+        import repro.core.protect  # noqa: F401
+    import repro.core
+    assert not hasattr(repro.core, "protect")

@@ -295,24 +295,27 @@ def test_device_injection_rate0_is_identity_and_jittable():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shim
+# traced-rate device injection (the compiled-campaign mechanism)
 # ---------------------------------------------------------------------------
 
 
-def test_core_protect_shim_warns_and_roundtrips():
-    import sys
-
-    import repro.core
-    sys.modules.pop("repro.core.protect", None)
-    if "protect" in vars(repro.core):
-        delattr(repro.core, "protect")
-    with pytest.warns(DeprecationWarning):
-        import repro.core.protect as protect
+def test_device_injection_traced_rate_matches_static_budget():
+    """With max_rate set, rate may be a traced scalar: rate == max_rate flips
+    the full budget, rate == 0 flips nothing, in one compiled program."""
     rng = np.random.default_rng(16)
-    q = wot_q(rng, 4096)
-    sch = protect.get_scheme("in-place")
-    st = sch.encode(q)
-    assert sch.space_overhead(st) == 0.0
-    assert np.array_equal(sch.decode(st), q)
-    assert np.array_equal(protect.run_fault_trial(protect.InPlace(), q,
-                                                  0.0, 0), q)
+    w, _, _ = wot_params(rng)
+    policy = protection.ProtectionPolicy(
+        default_scheme="faulty", predicate=lambda p, l: True)
+    enc = policy.encode_tree({"w": w})
+
+    @jax.jit
+    def inj(rate, key):
+        return protection.inject_tree_device(enc, rate, key, max_rate=1e-2)
+
+    key = jax.random.PRNGKey(3)
+    zero = inj(jnp.float32(0.0), key)
+    assert np.array_equal(np.asarray(zero["w"].enc), np.asarray(enc["w"].enc))
+    full = inj(jnp.float32(1e-2), key)
+    static = protection.inject_tree_device(enc, 1e-2, key)
+    assert np.array_equal(np.asarray(full["w"].enc),
+                          np.asarray(static["w"].enc))

@@ -87,11 +87,14 @@ class TestWot:
 
 
 class TestFaults:
-    def test_exact_flip_count(self):
+    def test_flip_count_within_collision_bound(self):
+        # with-replacement sampling: colliding draws XOR-cancel pairwise, so
+        # the flip count sits in [n - 2*collisions, n]; the birthday bound
+        # puts expected collisions at n^2 / (2 * n_bits) = 0.5 here
         stored = np.zeros(125000, np.uint8)  # 1e6 bits
         out = faults.inject(stored, 1e-3, seed=0)
         flipped = np.unpackbits(out).sum()
-        assert flipped == 1000
+        assert 0.98 * 1000 <= flipped <= 1000
 
     def test_deterministic(self):
         stored = np.arange(256, dtype=np.uint8)

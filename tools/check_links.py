@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Docs link-check: fail on dead relative links in Markdown files.
+
+Scans every tracked ``*.md`` under the repo root for ``[text](target)``
+links, resolves relative targets (with optional ``#fragment``) against the
+file's directory, and exits non-zero listing any that do not exist. External
+(``scheme://``) and ``mailto:`` links are skipped — CI stays hermetic.
+
+  python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude"}
+
+
+def check(root: pathlib.Path) -> list:
+    bad = []
+    for md in sorted(root.rglob("*.md")):
+        if SKIP_DIRS & set(p.name for p in md.parents):
+            continue
+        for m in LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1).split("#", 1)[0]
+            if (not target or "://" in target
+                    or target.startswith("mailto:")):
+                continue
+            if not (md.parent / target).exists():
+                bad.append(f"{md.relative_to(root)}: dead link -> "
+                           f"{m.group(1)}")
+    return bad
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else \
+        pathlib.Path(__file__).resolve().parent.parent
+    bad = check(root)
+    if bad:
+        print("\n".join(bad))
+        print(f"link-check: {len(bad)} dead relative link(s)")
+        return 1
+    print("link-check: all relative Markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

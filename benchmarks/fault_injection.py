@@ -27,9 +27,13 @@ SCHEMES = ("faulty", "parity-zero", "secded72", "in-place")
 
 
 def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
-        batch="scan", json_path=None):
+        batch="scan", json_path=None, policy=None):
+    """``policy`` (a ``protection.POLICY_PRESETS`` name) adds one extra
+    campaign row under that mixed-scheme preset — the per-layer
+    heterogeneous deployment the ProtectionPlan serves."""
     results = {}
     campaigns = {}
+    rows = list(SCHEMES)
     for name in models:
         params, fwd, tmpl = train_cnn_wot(name)
         for i, scheme in enumerate(SCHEMES):
@@ -39,6 +43,17 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
             campaigns[(name, scheme)] = res
             results[(name, scheme)] = (res.space_overhead, res.row(),
                                        res.clean)
+        if policy:
+            pol = protection.get_policy_preset(
+                policy, predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+            res = run_scheme_campaign(params, fwd, tmpl, None, policy=pol,
+                                      rates=rates, trials=trials, batch=batch,
+                                      key=jax.random.PRNGKey(len(SCHEMES)))
+            row_id = f"policy:{policy}"
+            campaigns[(name, row_id)] = res
+            results[(name, row_id)] = (res.space_overhead, res.row(),
+                                       res.clean)
+            rows = list(SCHEMES) + [row_id]
         clean = campaigns[(name, SCHEMES[0])].clean
         if verbose:
             report = protection.coverage(params, eval_policy("in-place"))
@@ -54,7 +69,7 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
                   f"full grid sweep {sweep:.2f}s")
             print(f"# {'scheme':11s} {'ovh%':5s} " +
                   " ".join(f"{r:>13.0e}" for r in rates))
-            for scheme in SCHEMES:
+            for scheme in rows:
                 res = campaigns[(name, scheme)]
                 cells = " ".join(f"{d * 100:6.2f}±{s * 100:4.1f}"
                                  for d, s in res.row())
@@ -78,10 +93,14 @@ def main(argv=None):
                          "vmap sweeps fastest on accelerators")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all CampaignResults (BENCH_*.json format)")
+    ap.add_argument("--policy", default=None,
+                    choices=sorted(protection.POLICY_PRESETS),
+                    help="extra row: campaign under a named mixed-scheme "
+                         "ProtectionPlan preset")
     args = ap.parse_args(argv)
     t0 = time.time()
     results = run(models=tuple(args.models), trials=args.trials,
-                  batch=args.batch, json_path=args.json)
+                  batch=args.batch, json_path=args.json, policy=args.policy)
     us = (time.time() - t0) * 1e6
     for (name, scheme), (ovh, row, clean) in results.items():
         drops = "/".join(f"{d * 100:.2f}" for d, _ in row)

@@ -4,15 +4,25 @@ analysis, not wall-clock on this host).
 
 Reports, per kernel: reference-path us/call and the STRUCTURAL cost of the
 kernel on TPU v5e (bytes moved, flops, roofline-bound time).
+
+``--json BENCH_kernels.json`` additionally times the in-place decode on BOTH
+backends per weight shape and writes the ``bench_kernels/v1`` artifact that
+``protection.AutotuneTable`` consumes — the per-leaf backend choice is then
+reproducible from a checked-in file instead of a policy-wide default.  On a
+CPU host the Pallas timings are interpret-mode (always slower — recorded,
+with ``pallas_interpret: true``, so a TPU re-run can overwrite them).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import protection
 from repro.core import ecc
 from repro.kernels import ref
 
@@ -65,13 +75,71 @@ def bench_throttle(n=2 ** 22):
     return us, 2 * n, roof_us
 
 
-def main():
+# Weight shapes the autotune table covers: decode-serving projections from
+# small attention heads up to MLP blocks. Keep the list short — Pallas
+# interpret mode on CPU makes each cell cost real seconds.
+AUTOTUNE_SHAPES = ((256, 256), (256, 1024), (1024, 1024), (2048, 4096))
+
+
+def bench_backend_decode(shapes=AUTOTUNE_SHAPES, reps=3):
+    """Per-shape in-place decode timings on both backends -> autotune
+    entries (the ``bench_kernels/v1`` schema)."""
+    rng = np.random.default_rng(7)
+    entries = []
+    for k, n in shapes:
+        w = rng.integers(-64, 64, size=(k, n)).astype(np.int8)
+        enc = jnp.asarray(np.asarray(ecc.encode64(jnp.asarray(
+            w.view(np.uint8).reshape(k, n // 8, 8)))).reshape(k, n))
+        us = {}
+        for name in ("xla", "pallas"):
+            be = protection.get_backend(name)
+            f = jax.jit(lambda e, be=be: be.decode64(
+                e.reshape(k, n // 8, 8))[0])
+            us[name] = _time(f, enc, reps=reps)
+        entries.append({"shape": [k, n], "nblocks": k * n // 8,
+                        "xla_us": round(us["xla"], 1),
+                        "pallas_us": round(us["pallas"], 1),
+                        "best": min(us, key=us.get)})
+    return entries
+
+
+def write_bench_kernels(path, entries=None) -> dict:
+    """Write BENCH_kernels.json in the schema ``protection.AutotuneTable``
+    loads (validated by round-tripping through it before writing)."""
+    platform = jax.devices()[0].platform
+    payload = {"schema": protection.BENCH_KERNELS_SCHEMA,
+               "platform": platform,
+               "pallas_interpret": platform != "tpu",
+               "op": "in-place-decode64",
+               "entries": entries if entries is not None
+               else bench_backend_decode()}
+    protection.AutotuneTable.from_dict(payload)  # schema self-check
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the per-shape xla-vs-pallas decode "
+                         "table (BENCH_kernels.json, bench_kernels/v1)")
+    args = ap.parse_args(argv)
     us, b, r = bench_decode()
     print(f"kernel_ecc_decode,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
     us, fl, r = bench_qmatmul()
     print(f"kernel_ecc_qmatmul,{us:.0f},tpu_roofline_us={r:.1f}_flops={fl}")
     us, b, r = bench_throttle()
     print(f"kernel_throttle,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
+    if args.json:
+        payload = write_bench_kernels(args.json)
+        for e in payload["entries"]:
+            print(f"autotune_decode_{e['shape'][0]}x{e['shape'][1]},"
+                  f"xla={e['xla_us']:.0f}us,pallas={e['pallas_us']:.0f}us,"
+                  f"best={e['best']}")
+        print(f"# wrote {args.json} ({payload['platform']}, "
+              f"pallas_interpret={payload['pallas_interpret']})")
 
 
 if __name__ == "__main__":

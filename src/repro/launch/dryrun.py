@@ -1,30 +1,44 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
-
 """Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
 
-512 placeholder host devices stand in for 2 pods x 256 TPU v5e chips. For
-each cell we jit the real step function with production in/out shardings,
-``.lower().compile()``, and record memory_analysis + cost_analysis + parsed
-collective traffic to JSONL for the roofline (§Roofline in EXPERIMENTS.md).
+Placeholder host devices (512 by default — 2 pods x 256 TPU v5e chips)
+stand in for the real fleet. For each cell we jit the real step function
+with production in/out shardings, ``.lower().compile()``, and record
+memory_analysis + cost_analysis + parsed collective traffic to JSONL for
+the roofline (§Roofline in EXPERIMENTS.md).
+
+The ``--policy`` axis sweeps named protection presets (see
+``repro.protection.POLICY_PRESETS`` and docs/plans.md) over the serving
+cells: each record carries the materialized ProtectionPlan's per-scheme
+stored bytes plus peak-HBM and collective-traffic deltas against the
+``unprotected`` (int8, zero checks) baseline of the same cell.
+
+Importing this module is side-effect-free; the CLI entry point calls
+:func:`setup_host_devices` (which mutates ``XLA_FLAGS``) before touching
+jax, and tests can import :func:`run_cell` without clobbering their
+environment.
 
 Usage:
   python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+  python -m repro.launch.dryrun --smoke --arch deepseek-7b --shape decode_32k \
+      --policy attn-inplace-mlp-secded --mesh 2x4 --devices 8
 """
+from __future__ import annotations
+
 import argparse
 import json
+import os
 import time
 import traceback
 
-import jax
-import numpy as np
 
-from repro import configs
-from repro.launch import hlo_analysis, specs
-from repro.launch.mesh import make_production_mesh
-from repro.models.config import SHAPES
+def setup_host_devices(n: int = 512) -> None:
+    """Point XLA at ``n`` placeholder host devices. Must run before jax
+    initializes its backend — the CLI calls it first thing in :func:`main`;
+    importing this module never does."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("_EXTRA_XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def _mem_analysis(compiled):
@@ -52,26 +66,86 @@ def _cost_analysis(compiled):
         return {"error": str(e)}
 
 
+def _peak_bytes(mem: dict):
+    """Per-device peak bytes: XLA's own number on TPU; on host backends
+    (no peak_memory_in_bytes) the live-set estimate args+outputs+temps
+    minus donated aliases."""
+    if "peak_memory_in_bytes" in mem:
+        return mem["peak_memory_in_bytes"]
+    if "argument_size_in_bytes" not in mem:
+        return None
+    return (mem.get("argument_size_in_bytes", 0) +
+            mem.get("output_size_in_bytes", 0) +
+            mem.get("temp_size_in_bytes", 0) -
+            mem.get("alias_size_in_bytes", 0))
+
+
+def _mesh_name(multi_pod: bool, mesh_shape) -> str:
+    if mesh_shape is not None:
+        return "x".join(str(s) for s in mesh_shape)
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _plan_record(plan) -> dict:
+    """The JSONL protection block: per-scheme stored bytes + totals."""
+    s = plan.summary()
+    return {"protected_bytes": s["protected_bytes"],
+            "unprotected_bytes": s["unprotected_bytes"],
+            "weight_bytes": s["weight_bytes"],
+            "check_bytes": s["check_bytes"],
+            "pad_bytes": s["pad_bytes"],
+            "by_scheme": {sid: d["stored_bytes"]
+                          for sid, d in s["by_scheme"].items()},
+            "by_backend": s["by_backend"],
+            "n_flat_sharded": s["n_flat_sharded"]}
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
              sp=True, decode_per_step=True, chunk=2048,
-             save_hlo: str | None = None, microbatch=None) -> dict:
-    cfg = configs.get(arch)
+             save_hlo: str | None = None, microbatch=None,
+             policy: str | None = None, smoke: bool = False,
+             mesh_shape=None, baseline: dict | None = None) -> dict:
+    """Compile one cell and return its JSONL record.
+
+    policy:    named protection preset for serving cells (train cells
+               ignore it); the record gains the plan's per-scheme bytes.
+    baseline:  a previous record (same cell, ``unprotected`` policy) to
+               diff against — fills ``hbm_delta_bytes`` / ``wire_delta_bytes``.
+    """
+    import jax
+    import numpy as np
+
+    from repro import configs, protection
+    from repro.launch import hlo_analysis, specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES
+
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16", "fsdp": fsdp, "sp": sp}
+           "mesh": _mesh_name(multi_pod, mesh_shape), "fsdp": fsdp, "sp": sp,
+           "smoke": smoke}
+    if policy and shape.kind != "train":
+        rec["policy"] = policy
     ok, why = specs.cell_supported(cfg, shape)
     if not ok:
         rec.update(status="skipped", reason=why)
         return rec
     t0 = time.time()
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
         kw = ({"decode_per_step": decode_per_step} if shape.kind == "decode"
               else {"chunk": chunk})
         if shape.kind == "train" and microbatch is not None:
             kw["microbatch"] = microbatch
         if shape.kind == "train":
             kw["sp"] = sp  # prefill uses its own default (sp off)
+        if policy and shape.kind != "train":
+            pol = protection.get_policy_preset(policy)
+            plan, abstract = specs.serving_plan(cfg, mesh, fsdp=fsdp,
+                                                policy=pol)
+            kw.update(plan=plan, abstract=abstract)
+            rec["protection"] = _plan_record(plan)
         step, args, in_sh, out_sh = specs.cell(cfg, shape, mesh, fsdp=fsdp, **kw)
         from jax.sharding import NamedSharding, PartitionSpec as P
         as_named = lambda tree: jax.tree.map(
@@ -100,6 +174,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
                          **stats["collectives"]},
             n_devices=int(np.prod(mesh.devices.shape)),
         )
+        rec["hbm_bytes"] = _peak_bytes(rec["memory"])
+        if baseline and baseline.get("status") == "ok":
+            base_peak = _peak_bytes(baseline.get("memory", {}))
+            if rec["hbm_bytes"] is not None and base_peak is not None:
+                rec["hbm_delta_bytes"] = rec["hbm_bytes"] - base_peak
+            rec["wire_delta_bytes"] = (
+                rec["collectives"]["total_wire_bytes"] -
+                baseline.get("collectives", {}).get("total_wire_bytes", 0))
+            rec["baseline_policy"] = baseline.get("policy")
         if save_hlo:
             with open(save_hlo, "w") as f:
                 f.write(hlo)
@@ -108,6 +191,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
                    trace=traceback.format_exc()[-2000:],
                    elapsed_s=round(time.time() - t0, 1))
     return rec
+
+
+def _parse_mesh(s: str | None):
+    if not s:
+        return None
+    return tuple(int(d) for d in s.lower().split("x"))
 
 
 def main():
@@ -124,9 +213,31 @@ def main():
     ap.add_argument("--no-decode-per-step", action="store_true")
     ap.add_argument("--chunk", type=int, default=2048)
     ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's smoke config (CI-sized grids)")
+    ap.add_argument("--mesh", default=None, metavar="DxM[xP]",
+                    help="override mesh dims, e.g. 2x4 (data x model)")
+    ap.add_argument("--devices", type=int, default=512,
+                    help="placeholder host device count (XLA_FLAGS)")
+    ap.add_argument("--policy", default=None,
+                    help="comma-separated protection presets to sweep over "
+                         "serving cells (each diffed vs the 'unprotected' "
+                         "baseline cell)")
     ap.add_argument("--resume", action="store_true",
                     help="skip cells already recorded ok in --out")
     args = ap.parse_args()
+
+    setup_host_devices(args.devices)
+    from repro import configs, protection  # after XLA_FLAGS — see docstring
+    from repro.models.config import SHAPES
+
+    mesh_shape = _parse_mesh(args.mesh)
+    policies = [p.strip() for p in args.policy.split(",") if p.strip()] \
+        if args.policy else []
+    for p in policies:
+        if p not in protection.POLICY_PRESETS:
+            ap.error(f"unknown policy preset {p!r}; one of "
+                     f"{sorted(protection.POLICY_PRESETS)}")
 
     cells = []
     archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
@@ -139,32 +250,68 @@ def main():
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
+    prev = {}  # resumed records, so delta baselines survive --resume
     if args.resume and os.path.exists(args.out):
         with open(args.out) as f:
             for line in f:
                 r = json.loads(line)
                 if r.get("status") in ("ok", "skipped"):
-                    done.add((r["arch"], r["shape"], r["mesh"]))
+                    key = (r["arch"], r["shape"], r["mesh"], r.get("policy"))
+                    done.add(key)
+                    prev[key] = r
 
-    for a, s, mp in cells:
-        mesh_name = "2x16x16" if mp else "16x16"
-        if (a, s, mesh_name) in done:
-            print(f"[skip-done] {a} {s} {mesh_name}", flush=True)
-            continue
-        print(f"[cell] {a} {s} {mesh_name} ...", flush=True)
-        fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
-        rec = run_cell(a, s, mp, fsdp=fsdp, sp=not args.no_sp,
-                       decode_per_step=not args.no_decode_per_step,
-                       chunk=args.chunk, save_hlo=args.save_hlo,
-                       microbatch=args.microbatch)
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    common = dict(fsdp=fsdp, sp=not args.no_sp,
+                  decode_per_step=not args.no_decode_per_step,
+                  chunk=args.chunk, save_hlo=args.save_hlo,
+                  microbatch=args.microbatch, smoke=args.smoke,
+                  mesh_shape=mesh_shape)
+
+    def emit(rec):
         with open(args.out, "a") as f:
             f.write(json.dumps(rec) + "\n")
         status = rec["status"]
         extra = rec.get("reason") or rec.get("error", "")
         flops = rec.get("cost", {}).get("flops", 0)
+        deltas = ""
+        if "wire_delta_bytes" in rec:
+            deltas = (f" dHBM={rec.get('hbm_delta_bytes', 0):+.3g}B "
+                      f"dwire={rec['wire_delta_bytes']:+.3g}B")
         print(f"  -> {status} flops={flops:.3g} "
               f"coll={rec.get('collectives', {}).get('total_wire_bytes', 0):.3g}B"
-              f" {extra[:120]}", flush=True)
+              f"{deltas} {extra[:120]}", flush=True)
+
+    for a, s, mp in cells:
+        mesh_name = _mesh_name(mp, mesh_shape)
+        cell_policies = policies if (policies and
+                                     SHAPES[s].kind != "train") else [None]
+        baseline = None
+        if cell_policies != [None] and any(p != "unprotected"
+                                           for p in cell_policies):
+            # the delta baseline: same cell, int8 storage, zero checks
+            if (a, s, mesh_name, "unprotected") in done:
+                baseline = prev.get((a, s, mesh_name, "unprotected"))
+            else:
+                print(f"[cell] {a} {s} {mesh_name} policy=unprotected "
+                      f"(baseline) ...", flush=True)
+                baseline = run_cell(a, s, mp, policy="unprotected", **common)
+                emit(baseline)
+                done.add((a, s, mesh_name, "unprotected"))
+                prev[(a, s, mesh_name, "unprotected")] = baseline
+        for pol in cell_policies:
+            if pol == "unprotected" and baseline is not None:
+                continue  # already emitted as the baseline
+            if (a, s, mesh_name, pol) in done:
+                print(f"[skip-done] {a} {s} {mesh_name} {pol or ''}",
+                      flush=True)
+                continue
+            print(f"[cell] {a} {s} {mesh_name}"
+                  f"{f' policy={pol}' if pol else ''} ...", flush=True)
+            rec = run_cell(a, s, mp, policy=pol, baseline=baseline, **common)
+            emit(rec)
+            if rec.get("status") in ("ok", "skipped"):
+                done.add((a, s, mesh_name, pol))
+                prev[(a, s, mesh_name, pol)] = rec
 
 
 if __name__ == "__main__":

@@ -5,9 +5,16 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default 16x16 (one pod) or 2x16x16; ``shape`` overrides the dims —
+    a 2-tuple maps to ('data', 'model'), a 3-tuple to ('pod', 'data',
+    'model') — so the dry-run grid can run micro-meshes on host devices."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (2, 3):
+        raise ValueError(f"mesh shape must have 2 or 3 dims, got {shape}")
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 

@@ -6,7 +6,13 @@ report coverage, inject memory faults at a chosen rate, and decode-serve
 batched requests — faults are corrected on the fly.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
-      --fault-rate 1e-4 --tokens 32 [--scheme in-place] [--backend xla]
+      --fault-rate 1e-4 --tokens 32 [--scheme in-place] [--backend xla] \
+      [--policy attn-inplace-mlp-secded] [--autotune BENCH_kernels.json]
+
+``--policy`` serves under a named mixed-scheme preset: the materialized
+``ProtectionPlan`` decides scheme and backend per leaf (``--autotune``
+feeds the shape-keyed backend table), and the serve step decodes each
+leaf accordingly — one model, many schemes, many backends.
 """
 from __future__ import annotations
 
@@ -65,23 +71,42 @@ def main():
                                    set(protection.ALIASES)))
     ap.add_argument("--backend", default="xla",
                     choices=sorted(protection.BACKENDS))
+    ap.add_argument("--policy", default=None,
+                    choices=sorted(protection.POLICY_PRESETS),
+                    help="serve under a named mixed-scheme preset "
+                         "(overrides --scheme)")
+    ap.add_argument("--autotune", default=None, metavar="BENCH_kernels.json",
+                    help="shape-keyed backend table for per-leaf dispatch")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
-    print(f"[serve] {cfg.name} smoke config, scheme={args.scheme}, "
+    label = f"policy={args.policy}" if args.policy else f"scheme={args.scheme}"
+    print(f"[serve] {cfg.name} smoke config, {label}, "
           f"backend={args.backend}, fault_rate={args.fault_rate}")
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
-    policy = protection.ProtectionPolicy(default_scheme=args.scheme,
-                                         backend=args.backend)
+    if args.policy:
+        policy = protection.get_policy_preset(args.policy,
+                                              backend=args.backend,
+                                              autotune=args.autotune)
+    else:
+        policy = protection.ProtectionPolicy(default_scheme=args.scheme,
+                                             backend=args.backend,
+                                             autotune=args.autotune)
+    plan = policy.plan(params)
+    s = plan.summary()
     print("[serve] " +
-          policy.coverage(params).summary().replace("\n", "\n[serve] "))
-    enc = policy.encode_tree(params)
+          plan.coverage().summary().replace("\n", "\n[serve] "))
+    schemes = ", ".join(f"{k}={v['stored_bytes']}B"
+                        for k, v in sorted(s["by_scheme"].items()))
+    print(f"[serve] plan: schemes {{{schemes}}}, backends {s['by_backend']}, "
+          f"{s['n_flat_padded']} flat-padded leaves")
+    enc = plan.encode_tree(params)
     if args.fault_rate:
         fault_smoke_check(enc, policy, args.fault_rate, args.seed)
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 
-    serve_step = jax.jit(protected.make_serve_step(cfg, backend=args.backend))
+    serve_step = jax.jit(protected.make_serve_step(cfg, plan=plan))
     cache = lm.init_cache(cfg, args.batch, max(64, args.tokens * 2))
     tokens = jnp.zeros((args.batch, 1), jnp.int32)
     t0 = time.time()

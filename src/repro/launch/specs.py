@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import protection
 from repro.distributed import sharding as sh
 from repro.models import lm
 from repro.models.config import ArchConfig, ShapeConfig
@@ -40,25 +39,12 @@ def batch_struct(cfg: ArchConfig, shape: ShapeConfig, *, micro: bool = True):
 
 def _sanitize(spec_tree, sds_tree, mesh):
     """Drop mesh axes from dims they don't divide (B=1 cells, odd head
-    counts, enc_seq=1500, ...)."""
+    counts, enc_seq=1500, ...). One rule, shared with the plan layer."""
+    from repro.protection.plan import _drop_nondividing
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-
-    def fix(spec, sds):
-        if not isinstance(spec, P):
-            return spec
-        dims = list(spec) + [None] * (len(sds.shape) - len(spec))
-        out = []
-        for dim_size, entry in zip(sds.shape, dims):
-            if entry is None:
-                out.append(None)
-                continue
-            names = entry if isinstance(entry, tuple) else (entry,)
-            prod = int(np.prod([sizes[n] for n in names]))
-            out.append(entry if dim_size % prod == 0 else None)
-        return P(*out)
-
-    return jax.tree.map(fix, spec_tree, sds_tree,
-                        is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda spec, sds: _drop_nondividing(spec, sds.shape, sizes),
+        spec_tree, sds_tree, is_leaf=lambda x: isinstance(x, P))
 
 
 def param_gib(cfg: ArchConfig) -> float:
@@ -115,41 +101,60 @@ def _serving_fsdp_auto(cfg, mesh) -> bool:
     return count_gib / sizes["model"] > 5.0
 
 
-def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
-                decode_per_step=True):
-    """Protected-serving decode cell (one new token, KV cache of seq_len)."""
-    lm.set_sharding_ctx(None)
+def serving_plan(cfg: ArchConfig, mesh, *, fsdp=None, policy=None):
+    """One materialized ProtectionPlan per serving cell: resolved scheme /
+    layout / backend / sharding spec for every weight leaf (abstract params,
+    nothing allocated)."""
     if fsdp is None:
         fsdp = _serving_fsdp_auto(cfg, mesh)
+    abstract = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
+    return protected.make_plan(
+        abstract, policy, mesh=mesh,
+        param_spec_fn=functools.partial(sh.param_spec, fsdp=fsdp)), abstract
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
+                decode_per_step=True, policy=None, plan=None, abstract=None):
+    """Protected-serving decode cell (one new token, KV cache of seq_len).
+
+    The cell is plan-driven: ``plan`` (or ``policy``, materialized here)
+    decides scheme/backend per leaf and supplies the encoded tree's sharding
+    specs — including 1-D sharded specs for flat-padded images. Callers
+    that already hold the ``serving_plan`` pair pass both ``plan`` and
+    ``abstract`` to skip re-tracing the param init."""
+    lm.set_sharding_ctx(None)
+    if plan is None:
+        plan, abstract = serving_plan(cfg, mesh, fsdp=fsdp, policy=policy)
+    elif abstract is None:
+        abstract = jax.eval_shape(
+            lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
     b, s = shape.global_batch, shape.seq_len
-    enc = jax.eval_shape(
-        lambda: protection.encode_tree(lm.init_params(cfg,
-                                                      jax.random.PRNGKey(0),
-                                                      jnp.float32)))
+    enc = jax.eval_shape(plan.encode_tree, abstract)
     cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
     tokens = _sds((b, 1), jnp.int32)
     pos = _sds((b,), jnp.int32)
 
-    espec = protection.spec_tree(enc,
-                                 functools.partial(sh.param_spec, fsdp=fsdp))
-    espec = _sanitize(espec, enc, mesh)
+    espec = plan.spec_tree(enc)   # plan sanitizes against the real mesh
     cspec = _sanitize(sh.cache_specs(cache), cache, mesh)
     tspec, posspec = _sanitize((P("data", None), P("data")),
                                (tokens, pos), mesh)
 
-    step_inner = protected.make_serve_step(cfg, decode_per_step=decode_per_step)
+    step_inner = protected.make_serve_step(cfg, plan=plan,
+                                           decode_per_step=decode_per_step)
 
     def step(enc_params, cache, tokens, pos):
         return step_inner(enc_params, cache, tokens, pos)
 
+    data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
     in_sh = (espec, cspec, tspec, posspec)
-    out_sh = (P("data", None, "model") if b % 16 == 0 else P(None, None, "model"),
-              cspec)
+    out_sh = (P("data", None, "model") if b % data_size == 0
+              else P(None, None, "model"), cspec)
     return step, (enc, cache, tokens, pos), in_sh, out_sh
 
 
 def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
-                 chunk=2048, sp=None):
+                 chunk=2048, sp=None, policy=None, plan=None, abstract=None):
     """Protected-serving prefill cell: full-sequence forward -> logits.
 
     sp auto: OFF when head-sharded attention can engage (n_heads divides the
@@ -167,10 +172,12 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                          "model_size": dict(zip(mesh.axis_names,
                                                 mesh.devices.shape))["model"]})
     b, s = shape.global_batch, shape.seq_len
-    enc = jax.eval_shape(
-        lambda: protection.encode_tree(lm.init_params(cfg,
-                                                      jax.random.PRNGKey(0),
-                                                      jnp.float32)))
+    if plan is None:
+        plan, abstract = serving_plan(cfg, mesh, fsdp=fsdp, policy=policy)
+    elif abstract is None:
+        abstract = jax.eval_shape(
+            lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
+    enc = jax.eval_shape(plan.encode_tree, abstract)
     tokens = _sds((b, s), jnp.int32)
     extras = {}
     if cfg.family == "vlm":
@@ -179,14 +186,12 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     if cfg.family == "encdec":
         extras["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
 
-    espec = protection.spec_tree(enc,
-                                 functools.partial(sh.param_spec, fsdp=fsdp))
-    espec = _sanitize(espec, enc, mesh)
+    espec = plan.spec_tree(enc)   # plan sanitizes against the real mesh
     tspec = _sanitize(P(dp, None), tokens, mesh)
     xspec = _sanitize({k: sh.batch_spec(k, v, dp=dp) for k, v in extras.items()},
                       extras, mesh)
 
-    prefill = protected.make_prefill(cfg, chunk=chunk)
+    prefill = protected.make_prefill(cfg, plan=plan, chunk=chunk)
 
     def step(enc_params, tokens, extras):
         return prefill(enc_params, tokens, extras)
@@ -200,11 +205,15 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
 
 def cell(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw):
     if shape.kind == "train":
-        return train_cell(cfg, shape, mesh, **kw)
+        return train_cell(cfg, shape, mesh,
+                          **{k: v for k, v in kw.items()
+                             if k not in ("policy", "plan", "abstract")})
     if shape.kind == "prefill":
         return prefill_cell(cfg, shape, mesh, **kw)
-    return decode_cell(cfg, shape, mesh, **{k: v for k, v in kw.items()
-                                            if k in ("fsdp", "decode_per_step")})
+    return decode_cell(cfg, shape, mesh,
+                       **{k: v for k, v in kw.items()
+                          if k in ("fsdp", "decode_per_step", "policy",
+                                   "plan", "abstract")})
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:

@@ -24,11 +24,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .backends import (BACKENDS, Backend, PallasBackend, XlaBackend,
-                       get_backend)
+from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA, AutotuneTable, Backend,
+                       PallasBackend, XlaBackend, get_backend)
 from .campaign import (CampaignResult, accuracy_eval, fidelity_campaign,
                        fidelity_eval, run_campaign, run_campaign_host)
 from .host import HostScheme, Stored, get_host_scheme, run_fault_trial
+from .plan import (POLICY_PRESETS, LeafPlan, ProtectionPlan,
+                   get_policy_preset, make_plan)
 from .policy import (CoverageEntry, CoverageReport, ProtectionPolicy,
                      decode_leaf, decode_tree, inject_tree,
                      inject_tree_device, space_overhead, spec_tree)
@@ -41,9 +43,12 @@ __all__ = [
     "Scheme", "Faulty", "ParityZero", "Secded72", "InPlace",
     "SCHEMES", "ALIASES", "get_scheme", "scheme_ids",
     "ProtectionPolicy", "CoverageReport", "CoverageEntry",
+    "ProtectionPlan", "LeafPlan", "make_plan",
+    "POLICY_PRESETS", "get_policy_preset",
     "decode_leaf", "decode_tree", "inject_tree", "inject_tree_device",
     "spec_tree", "space_overhead",
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
+    "AutotuneTable", "BENCH_KERNELS_SCHEMA",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
     "CampaignResult", "run_campaign", "run_campaign_host",
     "fidelity_campaign", "accuracy_eval", "fidelity_eval",

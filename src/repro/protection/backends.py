@@ -16,13 +16,16 @@ no Pallas kernels and always take the jnp path inside their schemes.
 """
 from __future__ import annotations
 
+import json
+import math
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import ecc
 
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
-           "BACKENDS"]
+           "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA"]
 
 
 class Backend:
@@ -107,6 +110,75 @@ class PallasBackend(Backend):
 
 
 BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
+
+BENCH_KERNELS_SCHEMA = "bench_kernels/v1"
+
+
+class AutotuneTable:
+    """Shape-keyed backend choice, fed by ``benchmarks/kernel_bench.py``.
+
+    Each entry is ``{"shape": [...], "nblocks": int, "xla_us": float,
+    "pallas_us": float, "best": "xla"|"pallas"}`` (the BENCH_kernels.json
+    schema, ``bench_kernels/v1``).  :meth:`lookup` resolves an exact shape
+    match first, then the nearest entry by 64-bit-block count within a 4x
+    factor, else ``None`` — so the policy's default backend still decides
+    for shapes the benchmark never measured.
+    """
+
+    def __init__(self, entries=(), *, platform: str = "", source: str = ""):
+        self.entries = []
+        for e in entries:
+            e = dict(e)
+            shape = tuple(int(s) for s in e.get("shape", ()))
+            if e.get("best") not in BACKENDS:
+                raise ValueError(f"autotune entry for shape {shape} has "
+                                 f"unknown best backend {e.get('best')!r}")
+            e["shape"] = shape
+            e.setdefault("nblocks",
+                         int(math.prod(shape)) // 8 if shape else 0)
+            self.entries.append(e)
+        self.platform = platform
+        self.source = source
+        self._by_shape = {e["shape"]: e["best"] for e in self.entries}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def lookup(self, shape) -> str | None:
+        """Best backend name for a weight shape, or None when the table has
+        nothing close enough to say."""
+        shape = tuple(int(s) for s in shape)
+        hit = self._by_shape.get(shape)
+        if hit is not None:
+            return hit
+        nblk = int(math.prod(shape)) // 8 if shape else 0
+        if nblk <= 0 or not self.entries:
+            return None
+        nearest = min(self.entries,
+                      key=lambda e: abs(math.log(max(e["nblocks"], 1) / nblk)))
+        ratio = max(nearest["nblocks"], 1) / nblk
+        if ratio > 4 or ratio < 0.25:
+            return None
+        return nearest["best"]
+
+    def to_dict(self) -> dict:
+        return {"schema": BENCH_KERNELS_SCHEMA, "platform": self.platform,
+                "entries": [{**e, "shape": list(e["shape"])}
+                            for e in self.entries]}
+
+    @classmethod
+    def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
+        schema = d.get("schema", "")
+        if schema and schema != BENCH_KERNELS_SCHEMA:
+            raise ValueError(f"unsupported autotune schema {schema!r} "
+                             f"(expected {BENCH_KERNELS_SCHEMA!r})")
+        return cls(d.get("entries", ()), platform=d.get("platform", ""),
+                   source=source)
+
+    @classmethod
+    def from_json(cls, path) -> "AutotuneTable":
+        with open(path) as f:
+            return cls.from_dict(json.load(f), source=str(path))
 
 
 def get_backend(backend, **kw) -> Backend:

@@ -1,0 +1,386 @@
+"""``ProtectionPlan`` — materialized per-leaf protection decisions.
+
+The paper's zero-space guarantee is *per tensor*: each weight independently
+earns (or is denied) the in-place (64,57,1) code.  A :class:`ProtectionPlan`
+makes that concrete — it is built ONCE from ``(policy, abstract_params,
+mesh?)`` and holds, for every leaf, the resolved :class:`LeafPlan`: scheme
+id, storage layout (same-shape vs flat-padded), resolved backend (per-leaf
+rules > shape-keyed autotune table > policy default), stored-bytes
+accounting, and the sharding spec of the stored image.  Every consumer —
+``ProtectionPolicy.encode_tree/decode_tree/coverage``, the protected serving
+step, the dry-run grid — is a view over the same plan, so "which protection,
+where, on which backend" is one inspectable artifact instead of scattered
+call-site defaults.
+
+Lifecycle::
+
+    policy = get_policy_preset("attn-inplace-mlp-secded")
+    plan   = make_plan(policy, abstract_params, mesh=mesh,
+                       param_spec_fn=param_spec)
+    enc    = plan.encode_tree(params)       # mixed schemes per leaf
+    espec  = plan.spec_tree(enc)            # sharded flat images included
+    step   = make_serve_step(cfg, plan=plan)  # mixed backends per leaf
+    plan.summary()                          # byte-exact vs CoverageReport
+
+Flat-padded images get a real 1-D sharded spec over ``('data', 'model')``
+when the mesh is known and shards stay 8-byte-block aligned — replicating
+them (the old behaviour, still the fallback) silently blows HBM at
+production scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .backends import Backend, get_backend
+from .schemes import get_scheme
+from .tensor import ProtectedTensor, is_protected_tensor
+
+__all__ = ["LeafPlan", "ProtectionPlan", "make_plan",
+           "POLICY_PRESETS", "get_policy_preset"]
+
+BLOCK = 8
+FLAT_SHARD_AXES = ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# per-leaf decision
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """One leaf's fully-resolved protection decision.
+
+    path:        'layers/0/wq'-style key path of the leaf.
+    scheme_id:   codec id, or None when the leaf stays unprotected.
+    reason:      why unprotected ("predicate" | "rule" | "unaligned"; "" when
+                 protected).
+    backend:     resolved backend *name* for this leaf's codec compute.
+    backend_src: where the backend came from ("rule" | "autotune" | "policy").
+    layout:      "same-shape" | "flat-padded" | "raw" (unprotected).
+    shape:       logical weight shape.
+    n_weights:   element count.
+    enc_shape:   stored image shape (== shape for same-shape, 1-D for flat).
+    pad_bytes:   zero padding added by the flat layout.
+    check_bytes: out-of-place check bytes (secded72 / parity-zero).
+    stored_bytes: bytes resident in fault-prone memory (raw bytes when
+                 unprotected) — matches ``CoverageEntry.nbytes`` exactly.
+    spec:        sharding spec of the stored image (a ``ProtectedTensor`` of
+                 ``PartitionSpec`` for protected leaves) or None when the
+                 plan was built without ``param_spec_fn``.
+    """
+
+    path: str
+    scheme_id: Optional[str]
+    reason: str
+    backend: str
+    backend_src: str
+    layout: str
+    shape: tuple
+    n_weights: int
+    enc_shape: tuple
+    pad_bytes: int
+    check_bytes: int
+    stored_bytes: int
+    spec: Any = dataclasses.field(default=None, compare=False)
+    backend_obj: Any = dataclasses.field(default=None, compare=False,
+                                         repr=False)
+
+    @property
+    def protected(self) -> bool:
+        return self.scheme_id is not None
+
+    @property
+    def flat_sharded(self) -> bool:
+        """True when a flat-padded image got a real (non-replicated) spec."""
+        from jax.sharding import PartitionSpec as P
+        return (self.layout == "flat-padded" and self.spec is not None
+                and self.spec.enc != P())
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+class ProtectionPlan:
+    """Materialized per-leaf decisions for one ``(policy, tree, mesh?)``.
+
+    Holds an ordered ``{path: LeafPlan}`` map in tree-traversal order. All
+    tree-shaped operations (:meth:`encode_tree`, :meth:`decode_tree`,
+    :meth:`spec_tree`) look each leaf up by path and fail loudly on a tree
+    that does not match the plan.
+    """
+
+    def __init__(self, policy, leaves: dict, *, mesh_axes=None):
+        self.policy = policy
+        self.leaves = leaves
+        self.mesh_axes = mesh_axes
+
+    # -- lookup --------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.leaves)
+
+    def __iter__(self):
+        return iter(self.leaves.values())
+
+    def __getitem__(self, path: str) -> LeafPlan:
+        return self.leaves[path]
+
+    def _leaf(self, path) -> LeafPlan:
+        from .policy import path_str
+        p = path_str(path)
+        try:
+            return self.leaves[p]
+        except KeyError:
+            raise KeyError(
+                f"leaf {p!r} is not in this ProtectionPlan (plan built for a "
+                f"different tree? {len(self.leaves)} planned leaves)") from None
+
+    @property
+    def protected(self) -> list:
+        return [lp for lp in self if lp.protected]
+
+    @property
+    def unprotected(self) -> list:
+        return [lp for lp in self if not lp.protected]
+
+    # -- accounting ----------------------------------------------------------
+
+    def by_scheme(self) -> dict:
+        """Per-scheme accounting: ``{scheme_id: {n_tensors, weight_bytes,
+        stored_bytes, check_bytes, pad_bytes}}``."""
+        out: dict = {}
+        for lp in self.protected:
+            d = out.setdefault(lp.scheme_id, {"n_tensors": 0, "weight_bytes": 0,
+                                              "stored_bytes": 0,
+                                              "check_bytes": 0, "pad_bytes": 0})
+            d["n_tensors"] += 1
+            d["weight_bytes"] += lp.n_weights
+            d["stored_bytes"] += lp.stored_bytes
+            d["check_bytes"] += lp.check_bytes
+            d["pad_bytes"] += lp.pad_bytes
+        return out
+
+    def by_backend(self) -> dict:
+        out: dict = {}
+        for lp in self.protected:
+            out[lp.backend] = out.get(lp.backend, 0) + 1
+        return out
+
+    def summary(self) -> dict:
+        """JSON-ready accounting of the whole plan. Byte-for-byte consistent
+        with :class:`CoverageReport` (``protected_bytes`` etc. are sums of
+        the same per-leaf ``stored_bytes``)."""
+        prot, unprot = self.protected, self.unprotected
+        return {
+            "n_leaves": len(self.leaves),
+            "n_protected": len(prot),
+            "n_unprotected": len(unprot),
+            "protected_bytes": sum(lp.stored_bytes for lp in prot),
+            "unprotected_bytes": sum(lp.stored_bytes for lp in unprot),
+            "weight_bytes": sum(lp.n_weights for lp in prot),
+            "pad_bytes": sum(lp.pad_bytes for lp in prot),
+            "check_bytes": sum(lp.check_bytes for lp in prot),
+            "by_scheme": self.by_scheme(),
+            "by_backend": self.by_backend(),
+            "n_flat_padded": sum(lp.layout == "flat-padded" for lp in prot),
+            "n_flat_sharded": sum(lp.flat_sharded for lp in prot),
+        }
+
+    def coverage(self):
+        """The plan as a :class:`CoverageReport` (the legacy view)."""
+        from .policy import CoverageEntry, CoverageReport
+        return CoverageReport([
+            CoverageEntry(lp.path, lp.scheme_id, lp.reason, lp.n_weights,
+                          lp.stored_bytes, lp.pad_bytes) for lp in self])
+
+    # -- tree ops ------------------------------------------------------------
+
+    def encode_tree(self, params):
+        """fp params -> tree with ``ProtectedTensor`` leaves, each encoded
+        under its planned scheme *and* backend."""
+        def enc(path, leaf):
+            lp = self._leaf(path)
+            if not lp.protected:
+                return leaf
+            return self.policy.encode_leaf(leaf, lp.scheme_id,
+                                           backend=lp.backend_obj)
+        return jax.tree_util.tree_map_with_path(enc, params)
+
+    def decode_tree(self, enc_tree, dtype=jnp.bfloat16):
+        """Decode with each leaf's planned backend — one tree may mix
+        schemes AND backends."""
+        from .policy import decode_leaf
+
+        def dec(path, leaf):
+            if not is_protected_tensor(leaf):
+                return leaf
+            lp = self._leaf(path)
+            return decode_leaf(leaf, dtype,
+                               backend=lp.backend_obj or lp.backend)
+        return jax.tree_util.tree_map_with_path(
+            dec, enc_tree, is_leaf=is_protected_tensor)
+
+    def spec_tree(self, enc_tree):
+        """Sharding specs for an encoded tree, from the plan's materialized
+        per-leaf specs (flat-padded images sharded when block-aligned)."""
+        def spec(path, leaf):
+            lp = self._leaf(path)
+            if lp.spec is None:
+                raise ValueError(
+                    f"plan has no spec for {lp.path!r} — build it with "
+                    f"make_plan(..., param_spec_fn=...) to use spec_tree()")
+            return lp.spec
+        return jax.tree_util.tree_map_with_path(
+            spec, enc_tree, is_leaf=is_protected_tensor)
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> Optional[dict]:
+    if mesh is None:
+        return None
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _drop_nondividing(spec, shape, sizes):
+    """Drop mesh axes from dims they don't divide (mirrors the dry-run's
+    sanitize pass, applied at plan time when the mesh is known)."""
+    from jax.sharding import PartitionSpec as P
+    if sizes is None or not isinstance(spec, P):
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim_size, entry in zip(shape, dims):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes.get(n, 0) for n in names]))
+        out.append(entry if prod and dim_size % prod == 0 else None)
+    return P(*out)
+
+
+def _flat_spec(enc_len: int, sizes):
+    """1-D sharded spec for a flat-padded image over ('data', 'model') when
+    every shard keeps whole 8-byte ECC blocks; replicated otherwise."""
+    from jax.sharding import PartitionSpec as P
+    if sizes is None:
+        return P()
+    axes = tuple(a for a in FLAT_SHARD_AXES if a in sizes)
+    if not axes:
+        return P()
+    n_shards = int(np.prod([sizes[a] for a in axes]))
+    if n_shards <= 1 or enc_len % (BLOCK * n_shards) != 0:
+        return P()
+    return P(axes)
+
+
+def make_plan(policy, params, *, mesh=None,
+              param_spec_fn: Optional[Callable] = None) -> ProtectionPlan:
+    """Materialize a :class:`ProtectionPlan` from ``(policy, params, mesh?)``.
+
+    params:        a concrete or abstract (``jax.eval_shape``) parameter
+                   tree — only shapes/dtypes/paths are read.
+    mesh:          optional ``jax.sharding.Mesh``; enables sharded specs for
+                   flat-padded images and sanitizes same-shape specs against
+                   the actual axis sizes.
+    param_spec_fn: ``(path, leaf) -> PartitionSpec`` for weight leaves (the
+                   same rule table serving uses); without it the plan has no
+                   specs and :meth:`ProtectionPlan.spec_tree` raises.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .policy import path_str
+
+    sizes = _mesh_sizes(mesh)
+    leaves: dict = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        p = path_str(path)
+        sid, reason = policy._plan(path, leaf)
+        shape = tuple(getattr(leaf, "shape", ()))
+        n = int(np.prod(shape)) if shape else 1
+        if sid is None:
+            nbytes = n * getattr(getattr(leaf, "dtype", None), "itemsize", 4)
+            spec = None
+            if param_spec_fn is not None:
+                spec = _drop_nondividing(param_spec_fn(path, leaf), shape,
+                                         sizes)
+            leaves[p] = LeafPlan(
+                path=p, scheme_id=None, reason=reason, backend="",
+                backend_src="", layout="raw", shape=shape, n_weights=n,
+                enc_shape=(), pad_bytes=0, check_bytes=0, stored_bytes=nbytes,
+                spec=spec)
+            continue
+
+        scheme = get_scheme(sid)
+        aligned = len(shape) >= 1 and shape[-1] % BLOCK == 0
+        pad = 0 if aligned else (-n) % BLOCK
+        enc_shape = shape if aligned else (n + pad,)
+        checks = int((n + pad) * scheme.check_ratio)
+        stored = n + pad + checks
+        be, be_src = policy.resolve_backend(p, shape)
+        spec = None
+        if param_spec_fn is not None:
+            if aligned:
+                enc_sds = jax.ShapeDtypeStruct(enc_shape, jnp.uint8)
+                enc_spec = _drop_nondividing(param_spec_fn(path, enc_sds),
+                                             enc_shape, sizes)
+            else:
+                enc_spec = _flat_spec(n + pad, sizes)
+            spec = ProtectedTensor(enc=enc_spec,
+                                   checks=P() if checks else None,
+                                   scale=P(), scheme_id=scheme.scheme_id,
+                                   orig_shape=shape)
+        leaves[p] = LeafPlan(
+            path=p, scheme_id=scheme.scheme_id, reason="", backend=be.name,
+            backend_src=be_src, layout="same-shape" if aligned
+            else "flat-padded", shape=shape, n_weights=n, enc_shape=enc_shape,
+            pad_bytes=pad, check_bytes=checks, stored_bytes=stored, spec=spec,
+            backend_obj=be)
+    return ProtectionPlan(policy, leaves,
+                          mesh_axes=tuple(sizes) if sizes else None)
+
+
+# ---------------------------------------------------------------------------
+# named policy presets (the dry-run grid's --policy axis)
+# ---------------------------------------------------------------------------
+
+# MLP / FFN / expert projections — everything the attn-inplace-mlp-secded
+# preset moves to standard SEC-DED(72,64).
+_MLP_PAT = (r"(^|/)(mlp|ffn|w_gate|w_up|w_down|"
+            r"we_gate|we_up|we_down|ws_gate|ws_up|ws_down)(/|$)")
+
+# Preset name -> ProtectionPolicy kwargs. "unprotected" is the paper's
+# "faulty" row: same int8 residency, zero checks — the HBM/traffic baseline
+# the dry-run deltas are measured against.
+POLICY_PRESETS: dict = {
+    "all-in-place": {},
+    "all-secded72": {"default_scheme": "secded72"},
+    "attn-inplace-mlp-secded": {"default_scheme": "in-place",
+                                "rules": [(_MLP_PAT, "secded72")]},
+    "unprotected": {"default_scheme": "faulty"},
+}
+
+
+def get_policy_preset(name: str, **overrides):
+    """Build a named preset ``ProtectionPolicy``; extra kwargs override the
+    preset's (e.g. ``predicate=``, ``backend=``, ``autotune=``)."""
+    from .policy import ProtectionPolicy
+    try:
+        kw = dict(POLICY_PRESETS[name])
+    except KeyError:
+        raise ValueError(f"unknown policy preset {name!r}; one of "
+                         f"{sorted(POLICY_PRESETS)}") from None
+    kw.update(overrides)
+    return ProtectionPolicy(**kw)

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import faults, quant, wot
 
-from .backends import get_backend
+from .backends import AutotuneTable, get_backend
 from .schemes import Scheme, get_scheme
 from .tensor import ProtectedTensor, is_protected_tensor
 
@@ -151,15 +151,22 @@ class ProtectionPolicy:
     throttle:       apply the WOT projection to the quantized weights before
                     encoding (idempotent on WOT-trained weights; required for
                     the in-place code's correctness).
-    backend:        "xla" | "pallas" | a Backend instance — routes the
-                    64-bit-block codec compute.
+    backend:        "xla" | "pallas" | a Backend instance — the *default*
+                    route for 64-bit-block codec compute.
+    backend_rules:  ordered ``(pattern, backend)`` pairs resolved per leaf
+                    (first regex matching the leaf's path wins) — one model
+                    can mix backends per layer.
+    autotune:       an :class:`AutotuneTable` (or a BENCH_kernels.json path)
+                    consulted by shape when no backend rule matches; the
+                    policy-global ``backend`` stays the final fallback.
     """
 
     def __init__(self, default_scheme: str = "in-place",
                  rules: Sequence = (),
                  predicate: Optional[Callable] = None,
                  *, pad: bool = True, throttle: bool = True,
-                 backend="xla"):
+                 backend="xla", backend_rules: Sequence = (),
+                 autotune=None):
         get_scheme(default_scheme)  # validate eagerly
         self.default_scheme = default_scheme
         self.rules = [(re.compile(pat), sid) for pat, sid in rules]
@@ -170,6 +177,11 @@ class ProtectionPolicy:
         self.pad = pad
         self.throttle = throttle
         self.backend = get_backend(backend)
+        self.backend_rules = [(re.compile(pat), get_backend(be))
+                              for pat, be in backend_rules]
+        if isinstance(autotune, (str, bytes)):
+            autotune = AutotuneTable.from_json(autotune)
+        self.autotune = autotune
 
     # -- selection -----------------------------------------------------------
 
@@ -195,11 +207,37 @@ class ProtectionPolicy:
             return None, "unaligned"
         return sid, ""
 
+    def resolve_backend(self, path: str, shape) -> tuple:
+        """Per-leaf backend: first matching backend rule wins, then the
+        shape-keyed autotune table, then the policy default.
+
+        -> (Backend, source) with source "rule" | "autotune" | "policy".
+        """
+        for pat, be in self.backend_rules:
+            if pat.search(path):
+                return be, "rule"
+        if self.autotune is not None:
+            best = self.autotune.lookup(shape)
+            if best is not None:
+                return get_backend(best), "autotune"
+        return self.backend, "policy"
+
+    # -- the plan ------------------------------------------------------------
+
+    def plan(self, params, *, mesh=None, param_spec_fn=None):
+        """Materialize every per-leaf decision ONCE — see
+        :func:`repro.protection.plan.make_plan`.  ``encode_tree`` /
+        ``decode_tree`` / ``coverage`` below are thin views over this."""
+        from .plan import make_plan
+        return make_plan(self, params, mesh=mesh, param_spec_fn=param_spec_fn)
+
     # -- leaf codec ----------------------------------------------------------
 
-    def encode_leaf(self, w: jnp.ndarray, scheme) -> ProtectedTensor:
+    def encode_leaf(self, w: jnp.ndarray, scheme,
+                    backend=None) -> ProtectedTensor:
         """fp weight -> quantize (+WOT throttle) -> scheme-encode."""
         scheme = get_scheme(scheme)
+        be = self.backend if backend is None else get_backend(backend)
         scale = quant.compute_scale(w)
         q = jnp.clip(jnp.round(w / scale), -quant.QMAX,
                      quant.QMAX).astype(jnp.int8)
@@ -213,7 +251,7 @@ class ProtectionPolicy:
             if pad:
                 flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
             q_img = flat
-        enc, checks = scheme.encode(q_img, self.backend)
+        enc, checks = scheme.encode(q_img, be)
         return ProtectedTensor(enc=enc, checks=checks,
                                scale=scale.astype(jnp.float32),
                                scheme_id=scheme.scheme_id,
@@ -222,38 +260,28 @@ class ProtectionPolicy:
     def decode_leaf(self, pt: ProtectedTensor, dtype=jnp.bfloat16):
         return decode_leaf(pt, dtype, backend=self.backend)
 
-    # -- tree codec ----------------------------------------------------------
+    # -- tree codec (views over the plan) ------------------------------------
 
     def encode_tree(self, params):
         """fp params -> tree with ``ProtectedTensor`` leaves (rest unchanged)."""
-        def enc(path, leaf):
-            sid, _ = self._plan(path, leaf)
-            return self.encode_leaf(leaf, sid) if sid is not None else leaf
-        return jax.tree_util.tree_map_with_path(enc, params)
+        return self.plan(params).encode_tree(params)
 
     def decode_tree(self, enc_tree, dtype=jnp.bfloat16):
-        return decode_tree(enc_tree, dtype, backend=self.backend)
+        """Decode with per-leaf backend resolution (rules + autotune)."""
+        if not self.backend_rules and self.autotune is None:
+            return decode_tree(enc_tree, dtype, backend=self.backend)
+
+        def dec(path, leaf):
+            if not is_protected_tensor(leaf):
+                return leaf
+            be, _ = self.resolve_backend(path_str(path), leaf.orig_shape)
+            return decode_leaf(leaf, dtype, backend=be)
+        return jax.tree_util.tree_map_with_path(
+            dec, enc_tree, is_leaf=is_protected_tensor)
 
     def coverage(self, params) -> CoverageReport:
         """Report what ``encode_tree`` does, without encoding anything."""
-        entries = []
-        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-            sid, reason = self._plan(path, leaf)
-            n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 1
-            if sid is None:
-                nbytes = n * getattr(getattr(leaf, "dtype", None),
-                                     "itemsize", 4)
-                entries.append(CoverageEntry(path_str(path), None, reason,
-                                             n, nbytes, 0))
-            else:
-                scheme = get_scheme(sid)
-                aligned = leaf.ndim >= 1 and leaf.shape[-1] % BLOCK == 0
-                pad = 0 if aligned else (-n) % BLOCK
-                stored = n + pad
-                stored += int(stored * scheme.check_ratio)
-                entries.append(CoverageEntry(path_str(path), scheme.scheme_id,
-                                             "", n, stored, pad))
-        return CoverageReport(entries)
+        return self.plan(params).coverage()
 
 
 # ---------------------------------------------------------------------------
@@ -340,15 +368,23 @@ def inject_tree_device(enc_tree, rate, key, *, max_rate=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def spec_tree(enc_tree, param_spec_fn):
+def spec_tree(enc_tree, param_spec_fn, *, mesh=None):
     """Sharding specs for an encoded tree: a same-shape image inherits the
-    weight's spec byte-for-byte; flat images, check bytes, and scales are
-    replicated."""
+    weight's spec byte-for-byte; check bytes and scales are replicated.
+    Flat-padded images replicate by default; with ``mesh`` they get the
+    1-D block-aligned sharded spec (see ``plan._flat_spec``) — prefer
+    building a :class:`~repro.protection.plan.ProtectionPlan`, which
+    materializes these specs once per leaf."""
     from jax.sharding import PartitionSpec as P
+
+    from .plan import _flat_spec, _mesh_sizes
+
+    sizes = _mesh_sizes(mesh)
 
     def spec(path, leaf):
         if is_protected_tensor(leaf):
-            enc_spec = P() if leaf.is_flat else param_spec_fn(path, leaf.enc)
+            enc_spec = (_flat_spec(int(leaf.enc.shape[0]), sizes)
+                        if leaf.is_flat else param_spec_fn(path, leaf.enc))
             checks_spec = None if leaf.checks is None else P()
             return ProtectedTensor(enc=enc_spec, checks=checks_spec,
                                    scale=P(), scheme_id=leaf.scheme_id,

@@ -50,37 +50,59 @@ def coverage(params, policy: Optional[protection.ProtectionPolicy] = None
     return protection.coverage(params, policy)
 
 
-def make_serve_step(cfg: ArchConfig, *, decode_per_step: bool = True,
+def make_plan(params, policy: Optional[protection.ProtectionPolicy] = None,
+              *, mesh=None, param_spec_fn=None) -> protection.ProtectionPlan:
+    """Materialize the serving :class:`~repro.protection.ProtectionPlan` for
+    a (possibly abstract) parameter tree — resolve scheme, layout, backend,
+    and sharding spec per leaf ONCE, then hand the plan to
+    :func:`make_serve_step` / :func:`make_prefill` / the dry-run cells."""
+    return protection.make_plan(policy or protection.default_policy(), params,
+                                mesh=mesh, param_spec_fn=param_spec_fn)
+
+
+def _decoder(plan, dtype, backend):
+    if plan is not None:
+        return lambda enc_params: plan.decode_tree(enc_params, dtype)
+    be = protection.get_backend(backend)
+    return lambda enc_params: protection.decode_tree(enc_params, dtype,
+                                                     backend=be)
+
+
+def make_serve_step(cfg: ArchConfig, *, plan=None,
+                    decode_per_step: bool = True,
                     dtype=jnp.bfloat16, backend="xla"):
     """serve_step(enc_params, cache, tokens, pos) -> (logits, cache).
 
     decode_per_step=True keeps weights encoded at rest (the paper's model);
     False decodes once outside (baseline for the protection-cost ablation).
-    ``backend`` routes the per-step decode ("xla" or "pallas").
+    ``plan`` (a :class:`~repro.protection.ProtectionPlan`) routes the
+    per-step decode per leaf, so one model mixes schemes AND backends;
+    without a plan, ``backend`` is the policy-wide route.
     """
-    be = protection.get_backend(backend)
+    decode = _decoder(plan, dtype, backend)
 
     def serve_step(enc_params, cache, tokens, pos):
-        params = (protection.decode_tree(enc_params, dtype, backend=be)
-                  if decode_per_step else enc_params)
+        params = decode(enc_params) if decode_per_step else enc_params
         return lm.decode_step(cfg, params, cache, tokens, pos, dtype=dtype)
 
     return serve_step
 
 
-def make_prefill(cfg: ArchConfig, *, dtype=jnp.bfloat16, chunk: int = 2048,
-                 backend="xla"):
-    be = protection.get_backend(backend)
+def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
+                 chunk: int = 2048, backend="xla"):
+    decode = _decoder(plan, dtype, backend)
 
     def prefill(enc_params, tokens, extras=None):
-        params = protection.decode_tree(enc_params, dtype, backend=be)
+        params = decode(enc_params)
         extras = extras or {}
         return lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
                           **extras)
     return prefill
 
 
-def spec_tree(enc_params_or_params, param_spec_fn):
+def spec_tree(enc_params_or_params, param_spec_fn, *, mesh=None):
     """Sharding specs for a serving tree: encoded image inherits the weight's
-    spec; scales and check bytes replicated."""
-    return protection.spec_tree(enc_params_or_params, param_spec_fn)
+    spec; scales and check bytes replicated (flat images sharded when
+    ``mesh`` is given — prefer ``make_plan(...).spec_tree()``)."""
+    return protection.spec_tree(enc_params_or_params, param_spec_fn,
+                                mesh=mesh)

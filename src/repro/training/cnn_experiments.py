@@ -117,12 +117,17 @@ def eval_policy(scheme_name) -> protection.ProtectionPolicy:
 
 def run_scheme_campaign(params, fwd, tmpl, scheme_name, *, rates, trials,
                         key=None, batch="vmap", n_classes=4, img=32,
-                        eval_batch=256):
+                        eval_batch=256, policy=None):
     """Compiled Table-2 column for one scheme: encode once, sweep the whole
     (trial x rate) grid on device in one jitted program (one compile per
-    (model, scheme)). Returns a :class:`repro.protection.CampaignResult`."""
+    (model, scheme)). Returns a :class:`repro.protection.CampaignResult`.
+
+    ``policy`` overrides the scheme-derived eval policy — pass a
+    ``ProtectionPolicy`` (e.g. a mixed-scheme preset) to campaign it under
+    the same input pipeline as the Table-2 scheme rows."""
     return protection.run_campaign(
-        params, lambda p, x: fwd(p, _norm(x)), tmpl, eval_policy(scheme_name),
+        params, lambda p, x: fwd(p, _norm(x)), tmpl,
+        policy if policy is not None else eval_policy(scheme_name),
         rates=rates, trials=trials, key=key, batch=batch,
         n_classes=n_classes, img=img, eval_batch=eval_batch)
 

@@ -120,6 +120,83 @@ def test_compressed_psum_shard_map():
     """)
 
 
+def test_plan_spec_tree_flat_padded_sharded_on_2d_mesh():
+    """Flat-padded images get a REAL 1-D spec over ('data','model') when
+    shards stay block-aligned — and the sharded tree actually decodes
+    under jit with those in_shardings (the old path replicated every flat
+    image)."""
+    _run("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import protection
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        def wotp(shape):
+            q = rng.integers(-64, 64, size=int(np.prod(shape))).astype(np.int8)
+            q.reshape(-1)[7::8] = rng.integers(-127, 128, size=q.reshape(-1)[7::8].size)
+            q.reshape(-1)[7] = 127
+            return jnp.asarray(q.reshape(shape).astype(np.float32) * 0.01)
+        params = {"wq": wotp((16, 64)),      # same-shape image
+                  "odd": wotp((32, 18)),     # flat 576 = 8 blocks/shard x 8 shards
+                  "tiny": wotp((3, 5))}      # flat 16: not block-divisible by 8 shards
+        policy = protection.ProtectionPolicy(
+            predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+        plan = policy.plan(params, mesh=mesh,
+                           param_spec_fn=lambda p, l: P("data", "model"))
+        enc = plan.encode_tree(params)
+        specs = plan.spec_tree(enc)
+        assert specs["wq"].enc == P("data", "model"), specs["wq"].enc
+        assert specs["odd"].enc == P(("data", "model")), specs["odd"].enc
+        assert specs["tiny"].enc == P(), specs["tiny"].enc
+        assert specs["odd"].scale == P()
+        assert plan["odd"].flat_sharded and not plan["tiny"].flat_sharded
+        assert plan.summary()["n_flat_sharded"] == 1
+        # the module-level helper agrees when handed the mesh
+        legacy = protection.spec_tree(enc, lambda p, l: P("data", "model"),
+                                      mesh=mesh)
+        assert legacy["odd"].enc == P(("data", "model"))
+        # and the sharded tree really decodes under jit
+        as_named = jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            specs, is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            f = jax.jit(lambda e: plan.decode_tree(e, jnp.float32),
+                        in_shardings=(as_named,))
+            dec = f(enc)
+        for k in params:
+            assert np.array_equal(np.asarray(dec[k]), np.asarray(params[k])), k
+    """)
+
+
+def test_decode_cell_espec_and_logits_spec_on_small_mesh():
+    """decode_cell is plan-driven: espec comes from the materialized plan,
+    and the logits out-sharding keys off the REAL mesh data-axis size (the
+    old hard-coded `b % 16` broke any non-16 mesh)."""
+    _run("""
+        from jax.sharding import PartitionSpec as P
+        from repro import configs, protection
+        from repro.launch import specs as S
+        from repro.models.config import ShapeConfig
+        from repro.protection import is_protected_tensor
+
+        cfg = configs.get_smoke("qwen1.5-4b")
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        shape = ShapeConfig("d", 64, 8, "decode")   # b=8: 8 % 2 == 0
+        policy = protection.get_policy_preset("attn-inplace-mlp-secded")
+        step, args, in_sh, out_sh = S.decode_cell(cfg, shape, mesh,
+                                                  policy=policy)
+        assert out_sh[0] == P("data", None, "model"), out_sh[0]
+        enc_specs = [l for l in jax.tree.leaves(
+            in_sh[0], is_leaf=is_protected_tensor) if is_protected_tensor(l)]
+        assert enc_specs, "espec lost its ProtectedTensor structure"
+        sids = {l.scheme_id for l in enc_specs}
+        assert sids == {"in-place", "secded72"}, sids
+
+        shape3 = ShapeConfig("d3", 64, 3, "decode")  # b=3: 3 % 2 != 0
+        _, _, _, out_sh3 = S.decode_cell(cfg, shape3, mesh, policy=policy)
+        assert out_sh3[0] == P(None, None, "model"), out_sh3[0]
+    """)
+
+
 @pytest.mark.slow
 def test_multipod_mesh_axes():
     _run("""

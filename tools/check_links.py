@@ -1,22 +1,41 @@
 #!/usr/bin/env python
-"""Docs link-check: fail on dead relative links in Markdown files.
+"""Docs link-check: fail on dead relative links and anchors in Markdown.
 
 Scans every tracked ``*.md`` under the repo root for ``[text](target)``
-links, resolves relative targets (with optional ``#fragment``) against the
-file's directory, and exits non-zero listing any that do not exist. External
-(``scheme://``) and ``mailto:`` links are skipped — CI stays hermetic.
+links, resolves relative targets against the file's directory, and exits
+non-zero listing any that do not exist. ``#fragment`` parts pointing at a
+Markdown file (or the same file) are checked against that file's heading
+anchors (GitHub slug rules: lowercase, punctuation dropped, spaces to
+hyphens). External (``scheme://``) and ``mailto:`` links are skipped — CI
+stays hermetic.
 
   python tools/check_links.py [root]
 """
 from __future__ import annotations
 
+import functools
 import pathlib
 import re
 import sys
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
              ".claude"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor: strip markdown/code markup, lowercase,
+    drop punctuation, spaces -> hyphens."""
+    h = re.sub(r"[`*_]|\[([^\]]*)\]\([^)]*\)", r"\1", heading).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.strip().replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors(md: pathlib.Path) -> frozenset:
+    return frozenset(slugify(m.group(1)) for m in
+                     HEADING.finditer(md.read_text(encoding="utf-8")))
 
 
 def check(root: pathlib.Path) -> list:
@@ -25,12 +44,17 @@ def check(root: pathlib.Path) -> list:
         if SKIP_DIRS & set(p.name for p in md.parents):
             continue
         for m in LINK.finditer(md.read_text(encoding="utf-8")):
-            target = m.group(1).split("#", 1)[0]
-            if (not target or "://" in target
-                    or target.startswith("mailto:")):
+            target, _, frag = m.group(1).partition("#")
+            if "://" in target or target.startswith("mailto:"):
                 continue
-            if not (md.parent / target).exists():
+            dest = (md.parent / target) if target else md
+            if not dest.exists():
                 bad.append(f"{md.relative_to(root)}: dead link -> "
+                           f"{m.group(1)}")
+                continue
+            if frag and dest.suffix == ".md" and \
+                    frag.lower() not in anchors(dest.resolve()):
+                bad.append(f"{md.relative_to(root)}: dead anchor -> "
                            f"{m.group(1)}")
     return bad
 

@@ -6,11 +6,13 @@ Reports, per kernel: reference-path us/call and the STRUCTURAL cost of the
 kernel on TPU v5e (bytes moved, flops, roofline-bound time).
 
 ``--json BENCH_kernels.json`` additionally times the in-place decode on BOTH
-backends per weight shape and writes the ``bench_kernels/v1`` artifact that
-``protection.AutotuneTable`` consumes — the per-leaf backend choice is then
-reproducible from a checked-in file instead of a policy-wide default.  On a
-CPU host the Pallas timings are interpret-mode (always slower — recorded,
-with ``pallas_interpret: true``, so a TPU re-run can overwrite them).
+backends per weight shape, sweeps fused decode+matmul tiles, and writes the
+``bench_kernels/v2`` artifact that ``protection.AutotuneTable`` consumes —
+per-leaf backend AND tile choices are then reproducible from a checked-in
+file instead of call-site defaults (``--tiles-smoke`` shrinks the sweep for
+CI).  On a CPU host the Pallas timings are interpret-mode (always slower —
+recorded, with ``pallas_interpret: true``, so a TPU re-run can overwrite
+them).
 """
 from __future__ import annotations
 
@@ -32,8 +34,7 @@ PEAK_INT8 = 394e12
 
 
 def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))  # ONE warmup call (compile + execute)
     t0 = time.time()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
@@ -80,16 +81,27 @@ def bench_throttle(n=2 ** 22):
 # interpret mode on CPU makes each cell cost real seconds.
 AUTOTUNE_SHAPES = ((256, 256), (256, 1024), (1024, 1024), (2048, 4096))
 
+# (bm, bn, bk) candidates for the fused decode+matmul sweep. bk=0 means
+# full-K tiles (one dot per output tile — the serving default). The smoke
+# grid keeps CI wall-clock tolerable in interpret mode.
+TILE_SWEEP = ((128, 128, 0), (128, 128, 128), (128, 256, 128),
+              (256, 128, 128), (64, 128, 256), (128, 512, 0))
+TILE_SWEEP_SMOKE = ((128, 128, 0), (128, 128, 128))
+
+
+def _enc_weight(rng, k, n):
+    w = rng.integers(-64, 64, size=(k, n)).astype(np.int8)
+    return jnp.asarray(np.asarray(ecc.encode64(jnp.asarray(
+        w.view(np.uint8).reshape(k, n // 8, 8)))).reshape(k, n))
+
 
 def bench_backend_decode(shapes=AUTOTUNE_SHAPES, reps=3):
     """Per-shape in-place decode timings on both backends -> autotune
-    entries (the ``bench_kernels/v1`` schema)."""
+    entries (without tile data; :func:`bench_fused_tiles` adds it)."""
     rng = np.random.default_rng(7)
     entries = []
     for k, n in shapes:
-        w = rng.integers(-64, 64, size=(k, n)).astype(np.int8)
-        enc = jnp.asarray(np.asarray(ecc.encode64(jnp.asarray(
-            w.view(np.uint8).reshape(k, n // 8, 8)))).reshape(k, n))
+        enc = _enc_weight(rng, k, n)
         us = {}
         for name in ("xla", "pallas"):
             be = protection.get_backend(name)
@@ -103,16 +115,45 @@ def bench_backend_decode(shapes=AUTOTUNE_SHAPES, reps=3):
     return entries
 
 
-def write_bench_kernels(path, entries=None) -> dict:
-    """Write BENCH_kernels.json in the schema ``protection.AutotuneTable``
-    loads (validated by round-tripping through it before writing)."""
+def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
+    """Sweep fused decode+matmul tiles per shape and record the winner into
+    each entry (``tiles`` + ``fused_us`` — the ``bench_kernels/v2`` fields).
+    Also times the XLA decode-then-matmul reference as ``fused_ref_us``."""
+    from repro.kernels import ref
+    from repro.kernels.ecc_qmatmul import ecc_qmatmul
+    rng = np.random.default_rng(11)
+    for e in entries:
+        k, n = e["shape"]
+        enc = _enc_weight(rng, k, n)
+        a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+        best_us, best_tiles = None, None
+        for bm, bn, bk in tile_sweep:
+            f = jax.jit(lambda a_, e_, t=(bm, bn, bk): ecc_qmatmul(
+                a_, e_, bm=t[0], bn=t[1], bk=t[2]))
+            us = _time(f, a, enc, reps=reps)
+            if best_us is None or us < best_us:
+                best_us, best_tiles = us, (bm, bn, bk)
+        e["tiles"] = list(best_tiles)
+        e["fused_us"] = round(best_us, 1)
+        e["fused_ref_us"] = round(
+            _time(jax.jit(ref.ecc_qmatmul_ref), a, enc, reps=reps), 1)
+    return entries
+
+
+def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP) -> dict:
+    """Write BENCH_kernels.json in the ``bench_kernels/v2`` schema that
+    ``protection.AutotuneTable`` loads (validated by round-tripping through
+    it before writing)."""
     platform = jax.devices()[0].platform
+    if entries is None:
+        entries = bench_backend_decode()
+        if tile_sweep:
+            entries = bench_fused_tiles(entries, tile_sweep=tile_sweep)
     payload = {"schema": protection.BENCH_KERNELS_SCHEMA,
                "platform": platform,
                "pallas_interpret": platform != "tpu",
                "op": "in-place-decode64",
-               "entries": entries if entries is not None
-               else bench_backend_decode()}
+               "entries": entries}
     protection.AutotuneTable.from_dict(payload)  # schema self-check
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -123,8 +164,11 @@ def write_bench_kernels(path, entries=None) -> dict:
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the per-shape xla-vs-pallas decode "
-                         "table (BENCH_kernels.json, bench_kernels/v1)")
+                    help="also write the per-shape xla-vs-pallas decode + "
+                         "fused-tile table (BENCH_kernels.json, "
+                         "bench_kernels/v2)")
+    ap.add_argument("--tiles-smoke", action="store_true",
+                    help="tiny fused-tile sweep (CI smoke; interpret mode)")
     args = ap.parse_args(argv)
     us, b, r = bench_decode()
     print(f"kernel_ecc_decode,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
@@ -133,11 +177,14 @@ def main(argv=None):
     us, b, r = bench_throttle()
     print(f"kernel_throttle,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
     if args.json:
-        payload = write_bench_kernels(args.json)
+        sweep = TILE_SWEEP_SMOKE if args.tiles_smoke else TILE_SWEEP
+        payload = write_bench_kernels(args.json, tile_sweep=sweep)
         for e in payload["entries"]:
+            tiles = "x".join(str(t) for t in e.get("tiles", ()))
             print(f"autotune_decode_{e['shape'][0]}x{e['shape'][1]},"
                   f"xla={e['xla_us']:.0f}us,pallas={e['pallas_us']:.0f}us,"
-                  f"best={e['best']}")
+                  f"best={e['best']},tiles={tiles},"
+                  f"fused={e.get('fused_us', 0):.0f}us")
         print(f"# wrote {args.json} ({payload['platform']}, "
               f"pallas_interpret={payload['pallas_interpret']})")
 

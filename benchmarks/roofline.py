@@ -20,6 +20,7 @@ from repro import configs
 from repro.models.config import SHAPES
 
 PEAK_FLOPS = 197e12   # bf16/chip
+PEAK_INT8 = 394e12    # int8/chip
 HBM_BW = 819e9        # B/s/chip
 LINK_BW = 50e9        # B/s/link ICI
 
@@ -113,6 +114,39 @@ def analyze(rec):
     }
 
 
+def fused_vs_decode_rows(bench_path="BENCH_kernels.json", m=128):
+    """Structural roofline bound for the fused decode+matmul vs the XLA
+    decode-then-matmul path, per autotune shape — the bound the measured
+    BENCH_kernels ``fused_us`` / ``fused_ref_us`` numbers compare against.
+
+    fused:  HBM traffic = a (M*K int8) + enc (K*N uint8) + out (M*N*4);
+            decode never round-trips through HBM.
+    decode-then-matmul: adds a full decoded-weight write + read (2*K*N),
+            the exact per-step cost the decode-at-use serve step deletes.
+    """
+    shapes = [(1024, 1024), (2048, 4096)]
+    try:
+        with open(bench_path) as f:
+            shapes = [tuple(e["shape"]) for e in json.load(f)["entries"]]
+    except (OSError, KeyError, ValueError):
+        pass
+    rows = []
+    for k, n in shapes:
+        flops = 2 * m * k * n
+        fused_bytes = m * k + k * n + m * n * 4
+        split_bytes = fused_bytes + 2 * k * n
+        t_fused = max(flops / PEAK_INT8, fused_bytes / HBM_BW) * 1e6
+        t_split = max(flops / PEAK_INT8, split_bytes / HBM_BW) * 1e6
+        r = {"shape": [k, n], "fused_roof_us": round(t_fused, 2),
+             "decode_then_matmul_roof_us": round(t_split, 2),
+             "traffic_ratio": round(split_bytes / fused_bytes, 3)}
+        rows.append(r)
+        print(f"roofline_fused_qmatmul_{k}x{n},{t_fused:.1f},"
+              f"decode_then_matmul_us={t_split:.1f}"
+              f"_traffic_ratio={r['traffic_ratio']}")
+    return rows
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_16x16.jsonl"
     rows = []
@@ -129,6 +163,7 @@ def main():
                   f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.0f},"
                   f"dom={r['dominant']}_frac={r['roofline_fraction']}"
                   f"_useful={r['useful_flops_ratio']}")
+    fused_vs_decode_rows()
     return rows
 
 

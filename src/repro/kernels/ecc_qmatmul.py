@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: FUSED in-place-ECC decode + int8 matmul (beyond-paper).
+"""Pallas TPU kernel: FUSED in-place-ECC decode + matmul (beyond-paper).
 
 The paper keeps decode in hardware. On TPU we instead keep weights
 ECC-encoded *at rest in HBM* and decode each weight tile in VMEM on its way
@@ -8,10 +8,24 @@ the VPU bit-twiddling overlaps with MXU matmul work on neighbouring tiles.
 Layout: W (K, N) int8 row-major -> 8-byte ECC blocks run along N, so any
 (BK, BN) tile with BN % 8 == 0 contains whole blocks and decodes locally.
 
-Grid (M/BM, N/BN, K/BK), K innermost; int32 accumulation in the output tile
-(revisited across the K steps). Default tiles 128x128x128: MXU-aligned
-(multiples of 128 in every matmul dim), VMEM footprint per step
-= BM*BK (a, int8) + BK*BN (w, uint8) + BM*BN*4 (acc, int32) = 16+16+64 KiB.
+Grid (ceil(M/BM), ceil(N/BN), ceil(K/BK)), K innermost; edge tiles are
+masked (activation columns past K zeroed, flag counts restricted to real
+blocks) so production shapes need no divisibility beyond N % 8 == 0.
+Default tiles 128x128x128: MXU-aligned (multiples of 128 in every matmul
+dim), VMEM footprint per step = BM*BK (a) + BK*BN (w, uint8) + BM*BN*4
+(acc) = 16+16+64 KiB for the int8 path.
+
+Two activation paths share the kernel:
+
+* int8 ``a`` -> int32 accumulator (the quantized-serving MXU path);
+* float ``a`` (bf16/f32, requires ``w_scale``) -> the decoded tile is
+  dequantized in VMEM (``(q * w_scale).astype(a.dtype)``) and the matmul
+  accumulates f32 — the value path is identical to decode-then-matmul, so
+  fused serving stays numerically identical to the per-step baseline.
+
+``with_flags=True`` additionally returns ``(corrected, due)`` int32 counts
+over all weight blocks (each block counted ONCE, on the first M tile) — the
+per-layer fault-accounting side channel the serving step surfaces.
 """
 from __future__ import annotations
 
@@ -25,46 +39,111 @@ from repro.core import ecc
 from . import ecc_decode
 
 
-def _kernel(a_ref, w_ref, rowmask_ref, cols_ref, out_ref):
-    k = pl.program_id(2)
+def _kernel(a_ref, w_ref, scale_ref, rowmask_ref, cols_ref, out_ref,
+            flags_ref, *, dims, float_path):
+    m, n, k = dims
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
-    @pl.when(k == 0)
+    @pl.when(jnp.logical_and(jnp.logical_and(i == 0, j == 0), kk == 0))
+    def _init_flags():
+        flags_ref[...] = jnp.zeros_like(flags_ref)
+
+    @pl.when(kk == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = a_ref[...]  # (BM, BK) int8
+    a = a_ref[...]  # (BM, BK)
+    bm, bk = a.shape
+    # mask activation columns past K so edge tiles contribute nothing
+    kcol = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
+    a = jnp.where(kcol < k, a, jnp.zeros_like(a))
+
     w_enc = w_ref[...]  # (BK, BN) uint8, ECC-encoded
-    bk, bn = w_enc.shape
-    dec, _flags = ecc_decode._decode_tile(
-        w_enc.reshape(bk * bn // 8, 8), rowmask_ref[...], cols_ref[...])
-    w_q = jax.lax.bitcast_convert_type(dec.reshape(bk, bn), jnp.int8)
-    out_ref[...] += jax.lax.dot_general(
-        a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    bk2, bn = w_enc.shape
+    dec, fl = ecc_decode._decode_tile(
+        w_enc.reshape(bk2 * bn // 8, 8), rowmask_ref[...], cols_ref[...])
+
+    # per-block flag counts: each weight block counted once (first M tile),
+    # restricted to real (non-edge-padding) blocks
+    @pl.when(i == 0)
+    def _count():
+        blk = fl.reshape(bk2, bn // 8)
+        rowv = (kk * bk2 +
+                jax.lax.broadcasted_iota(jnp.int32, blk.shape, 0)) < k
+        colv = (j * bn // 8 +
+                jax.lax.broadcasted_iota(jnp.int32, blk.shape, 1)) < n // 8
+        valid = jnp.logical_and(rowv, colv)
+        single = jnp.logical_and((blk & 1) == 1, valid)
+        double = jnp.logical_and((blk & 2) == 2, valid)
+        flags_ref[0, 0] += jnp.sum(single.astype(jnp.int32))
+        flags_ref[0, 1] += jnp.sum(double.astype(jnp.int32))
+
+    w_q = jax.lax.bitcast_convert_type(dec.reshape(bk2, bn), jnp.int8)
+    if float_path:
+        w = (w_q.astype(jnp.float32) * scale_ref[0, 0]).astype(a.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            a, w, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        out_ref[...] += jax.lax.dot_general(
+            a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "interpret"))
-def ecc_qmatmul(a_q: jnp.ndarray, w_enc: jnp.ndarray, *,
-                bm: int = 128, bn: int = 128, bk: int = 128,
-                interpret: bool = True) -> jnp.ndarray:
-    """a_q (M,K) int8 @ decode(w_enc (K,N) uint8) -> (M,N) int32."""
-    m, k = a_q.shape
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "with_flags"))
+def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
+                bm: int = 128, bn: int = 128, bk: int = 0,
+                interpret: bool = True, with_flags: bool = False):
+    """``a (M,K) @ decode(w_enc (K,N) uint8)``, decode fused into the matmul.
+
+    int8 ``a``   -> (M, N) int32 accumulator (``w_scale`` ignored).
+    float ``a``  -> (M, N) f32 = ``a @ (decode(w_enc) * w_scale)`` — requires
+                    ``w_scale``; pass ``bk=0`` (default: full K per tile) to
+                    keep the accumulation order identical to one XLA dot.
+    with_flags   -> also return ``flags (2,) int32``: (#single-corrected,
+                    #double-detected) over all weight blocks.
+
+    Tiles need not divide (M, N, K) — edge tiles are masked. N % 8 == 0 is
+    structural (ECC blocks run along N).
+    """
+    m, k = a.shape
     k2, n = w_enc.shape
-    assert k == k2 and n % 8 == 0
+    assert k == k2 and n % 8 == 0, (a.shape, w_enc.shape)
+    float_path = jnp.issubdtype(a.dtype, jnp.floating)
+    if float_path and w_scale is None:
+        raise ValueError("float activations need w_scale for the in-VMEM "
+                         "dequantization")
+    if bk == 0:
+        bk = k  # full-K tile: one dot per output tile, XLA-identical order
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
-        _kernel,
+    bn = max(8, bn - bn % 8)  # whole ECC blocks per tile
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    scale = jnp.asarray(w_scale if w_scale is not None else 1.0,
+                        jnp.float32).reshape(1, 1)
+    out_dtype = jnp.float32 if float_path else jnp.int32
+    kern = functools.partial(_kernel, dims=(m, n, k), float_path=float_path)
+    out, flags = pl.pallas_call(
+        kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
             pl.BlockSpec((7, 8), lambda i, j, kk: (0, 0)),
             pl.BlockSpec((8, 8), lambda i, j, kk: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((1, 2), jnp.int32),
+        ],
         interpret=interpret,
-    )(a_q, w_enc, jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE))
+    )(a, w_enc, scale, jnp.asarray(ecc.ROWMASK64),
+      jnp.asarray(ecc.COLS64_BYBYTE))
+    if with_flags:
+        return out, flags.reshape(2)
+    return out

@@ -101,16 +101,24 @@ def _plan_record(plan) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
-             sp=True, decode_per_step=True, chunk=2048,
+             sp=True, decode_per_step=True, decode_at_use=None, chunk=2048,
              save_hlo: str | None = None, microbatch=None,
-             policy: str | None = None, smoke: bool = False,
-             mesh_shape=None, baseline: dict | None = None) -> dict:
+             policy: str | None = None, smoke: bool = False, layers=None,
+             with_flags=None, mesh_shape=None,
+             baseline: dict | None = None) -> dict:
     """Compile one cell and return its JSONL record.
 
-    policy:    named protection preset for serving cells (train cells
-               ignore it); the record gains the plan's per-scheme bytes.
-    baseline:  a previous record (same cell, ``unprotected`` policy) to
-               diff against — fills ``hbm_delta_bytes`` / ``wire_delta_bytes``.
+    policy:        named protection preset for serving cells (train cells
+                   ignore it); the record gains the plan's per-scheme bytes.
+    decode_at_use: serving decode mode — True (default) fuses the decode
+                   into each weight's point of use; False compiles the
+                   whole-tree decode-per-step ablation. The record carries
+                   ``decode_mode`` so the two compile side by side.
+    layers:        optional n_layers override (depth scaling for the
+                   decoded-tree HBM story at smoke scale).
+    baseline:      a previous record (same cell, ``unprotected`` policy) to
+                   diff against — fills ``hbm_delta_bytes`` /
+                   ``wire_delta_bytes``.
     """
     import jax
     import numpy as np
@@ -121,11 +129,23 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
     from repro.models.config import SHAPES
 
     cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    if layers:
+        cfg = cfg.with_(n_layers=layers)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name,
            "mesh": _mesh_name(multi_pod, mesh_shape), "fsdp": fsdp, "sp": sp,
            "smoke": smoke}
-    if policy and shape.kind != "train":
+    serving = shape.kind != "train"
+    if decode_at_use is None:
+        decode_at_use = decode_per_step
+    if shape.kind == "decode" and not decode_per_step:
+        decode_at_use = False  # decode-once baseline: weights arrive decoded
+    if serving:
+        rec["decode_mode"] = (
+            "at-use" if decode_at_use else
+            "per-step" if (decode_per_step or shape.kind == "prefill")
+            else "once")
+    if policy and serving:
         rec["policy"] = policy
     ok, why = specs.cell_supported(cfg, shape)
     if not ok:
@@ -136,16 +156,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
         mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
         kw = ({"decode_per_step": decode_per_step} if shape.kind == "decode"
               else {"chunk": chunk})
+        if serving:
+            kw["decode_at_use"] = decode_at_use
         if shape.kind == "train" and microbatch is not None:
             kw["microbatch"] = microbatch
         if shape.kind == "train":
             kw["sp"] = sp  # prefill uses its own default (sp off)
-        if policy and shape.kind != "train":
+        if policy and serving:
             pol = protection.get_policy_preset(policy)
             plan, abstract = specs.serving_plan(cfg, mesh, fsdp=fsdp,
                                                 policy=pol)
-            kw.update(plan=plan, abstract=abstract)
+            flags = decode_at_use if with_flags is None else with_flags
+            kw.update(plan=plan, abstract=abstract, with_flags=flags)
             rec["protection"] = _plan_record(plan)
+            rec["protection"]["flags_output"] = bool(flags)
         step, args, in_sh, out_sh = specs.cell(cfg, shape, mesh, fsdp=fsdp, **kw)
         from jax.sharding import NamedSharding, PartitionSpec as P
         as_named = lambda tree: jax.tree.map(
@@ -215,6 +239,12 @@ def main():
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="use the arch's smoke config (CI-sized grids)")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override n_layers (depth scaling for the "
+                         "decoded-tree HBM accounting at smoke scale)")
+    ap.add_argument("--serve-modes", default="at-use,per-step",
+                    help="comma list of decode modes compiled per policy "
+                         "serving cell (at-use | per-step)")
     ap.add_argument("--mesh", default=None, metavar="DxM[xP]",
                     help="override mesh dims, e.g. 2x4 (data x model)")
     ap.add_argument("--devices", type=int, default=512,
@@ -248,6 +278,13 @@ def main():
             for s in shapes:
                 cells.append((a, s, mp))
 
+    modes = [m.strip() for m in args.serve_modes.split(",") if m.strip()]
+    for m in modes:
+        if m not in ("at-use", "per-step"):
+            ap.error(f"unknown serve mode {m!r}; one of at-use, per-step")
+    if args.no_decode_per_step:
+        modes = [None]  # decode-once baseline: the mode axis is meaningless
+
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     done = set()
     prev = {}  # resumed records, so delta baselines survive --resume
@@ -256,7 +293,8 @@ def main():
             for line in f:
                 r = json.loads(line)
                 if r.get("status") in ("ok", "skipped"):
-                    key = (r["arch"], r["shape"], r["mesh"], r.get("policy"))
+                    key = (r["arch"], r["shape"], r["mesh"], r.get("policy"),
+                           r.get("decode_mode"))
                     done.add(key)
                     prev[key] = r
 
@@ -265,7 +303,7 @@ def main():
                   decode_per_step=not args.no_decode_per_step,
                   chunk=args.chunk, save_hlo=args.save_hlo,
                   microbatch=args.microbatch, smoke=args.smoke,
-                  mesh_shape=mesh_shape)
+                  layers=args.layers, mesh_shape=mesh_shape)
 
     def emit(rec):
         with open(args.out, "a") as f:
@@ -283,35 +321,48 @@ def main():
 
     for a, s, mp in cells:
         mesh_name = _mesh_name(mp, mesh_shape)
-        cell_policies = policies if (policies and
-                                     SHAPES[s].kind != "train") else [None]
+        serving = SHAPES[s].kind != "train"
+        cell_policies = policies if (policies and serving) else [None]
+        cell_modes = modes if (policies and serving) else [None]
         baseline = None
+        base_mode = ("at-use" if not args.no_decode_per_step else
+                     "per-step" if SHAPES[s].kind == "prefill" else "once")
         if cell_policies != [None] and any(p != "unprotected"
                                            for p in cell_policies):
-            # the delta baseline: same cell, int8 storage, zero checks
-            if (a, s, mesh_name, "unprotected") in done:
-                baseline = prev.get((a, s, mesh_name, "unprotected"))
+            # the delta baseline: same cell, int8 storage, zero checks,
+            # decode-at-use (no whole-tree decode inflating its peak)
+            bkey = (a, s, mesh_name, "unprotected", base_mode)
+            if bkey in done:
+                baseline = prev.get(bkey)
             else:
                 print(f"[cell] {a} {s} {mesh_name} policy=unprotected "
                       f"(baseline) ...", flush=True)
                 baseline = run_cell(a, s, mp, policy="unprotected", **common)
                 emit(baseline)
-                done.add((a, s, mesh_name, "unprotected"))
-                prev[(a, s, mesh_name, "unprotected")] = baseline
+                done.add(bkey)
+                prev[bkey] = baseline
         for pol in cell_policies:
-            if pol == "unprotected" and baseline is not None:
-                continue  # already emitted as the baseline
-            if (a, s, mesh_name, pol) in done:
-                print(f"[skip-done] {a} {s} {mesh_name} {pol or ''}",
-                      flush=True)
-                continue
-            print(f"[cell] {a} {s} {mesh_name}"
-                  f"{f' policy={pol}' if pol else ''} ...", flush=True)
-            rec = run_cell(a, s, mp, policy=pol, baseline=baseline, **common)
-            emit(rec)
-            if rec.get("status") in ("ok", "skipped"):
-                done.add((a, s, mesh_name, pol))
-                prev[(a, s, mesh_name, pol)] = rec
+            for mode in cell_modes:
+                key_mode = mode if mode is not None else \
+                    (base_mode if serving else None)
+                if (pol == "unprotected" and baseline is not None
+                        and mode == base_mode):
+                    continue  # already emitted as the baseline
+                if (a, s, mesh_name, pol, key_mode) in done:
+                    print(f"[skip-done] {a} {s} {mesh_name} {pol or ''} "
+                          f"{key_mode or ''}", flush=True)
+                    continue
+                print(f"[cell] {a} {s} {mesh_name}"
+                      f"{f' policy={pol}' if pol else ''}"
+                      f"{f' mode={mode}' if mode else ''} ...", flush=True)
+                kw = dict(common)
+                if mode is not None:
+                    kw["decode_at_use"] = mode == "at-use"
+                rec = run_cell(a, s, mp, policy=pol, baseline=baseline, **kw)
+                emit(rec)
+                if rec.get("status") in ("ok", "skipped"):
+                    done.add((a, s, mesh_name, pol, key_mode))
+                    prev[(a, s, mesh_name, pol, key_mode)] = rec
 
 
 if __name__ == "__main__":

@@ -44,9 +44,10 @@ def fault_smoke_check(enc, policy, rate: float, seed: int):
     """Compiled campaign smoke-check before serving with injected faults:
     sweep {rate/10, rate, 10*rate} x 2 trials in one device program and
     report the decode fidelity (fraction of protected weights that still
-    decode to their clean values) at each rate.  ``batch="scan"`` keeps
-    peak memory at one cell's buffers — serving trees are the big-model
-    case of the vmap-vs-scan guidance in docs/campaigns.md."""
+    decode to their clean values) AND the DUE (detected-uncorrectable)
+    count at each rate.  ``batch="scan"`` keeps peak memory at one cell's
+    buffers — serving trees are the big-model case of the vmap-vs-scan
+    guidance in docs/campaigns.md."""
     rates = tuple(sorted({rate / 10, rate, min(rate * 10, 0.01)}))
     res = protection.fidelity_campaign(enc, policy, rates=rates, trials=2,
                                        key=jax.random.PRNGKey(seed + 1),
@@ -56,6 +57,12 @@ def fault_smoke_check(enc, policy, rate: float, seed: int):
     print(f"[serve] fault smoke-check ({res.scheme}, {res.batch} campaign, "
           f"compile {res.compile_s:.1f}s, sweep {res.wall_clock_s:.2f}s): "
           f"decode fidelity {cells}")
+    due = protection.due_campaign(enc, policy, rates=rates, trials=2,
+                                  key=jax.random.PRNGKey(seed + 2),
+                                  batch="scan")
+    cells = "  ".join(f"{r:.0e}:{m:7.1f}"
+                      for r, m in zip(due.rates, due.mean()))
+    print(f"[serve] DUE (double-error) counts per rate: {cells}")
     return res
 
 
@@ -106,19 +113,29 @@ def main():
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 
-    serve_step = jax.jit(protected.make_serve_step(cfg, plan=plan))
+    serve_step = jax.jit(protected.make_serve_step(cfg, plan=plan,
+                                                   with_flags=True))
     cache = lm.init_cache(cfg, args.batch, max(64, args.tokens * 2))
     tokens = jnp.zeros((args.batch, 1), jnp.int32)
     t0 = time.time()
-    out = []
+    out, step_flags = [], []
     for t in range(args.tokens):
         pos = jnp.full((args.batch,), t, jnp.int32)
-        logits, cache = serve_step(enc, cache, tokens, pos)
+        logits, cache, flags = serve_step(enc, cache, tokens, pos)
         tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(int(tokens[0, 0]))
+        step_flags.append(flags)  # device arrays; summed after the timer
     dt = time.time() - t0
+    corrected = due = 0
+    for flags in step_flags:
+        for v in flags.values():
+            pair = jnp.sum(jnp.asarray(v).reshape(-1, 2), axis=0)
+            corrected += int(pair[0])
+            due += int(pair[1])
     print(f"[serve] {args.tokens} steps x batch {args.batch} in {dt:.2f}s "
           f"({args.tokens * args.batch / dt:.1f} tok/s)")
+    print(f"[serve] decode-at-use fault accounting over the run: "
+          f"{corrected} corrected, {due} DUE (detected-uncorrectable)")
     print(f"[serve] sample continuation: {out}")
 
 

@@ -115,14 +115,20 @@ def serving_plan(cfg: ArchConfig, mesh, *, fsdp=None, policy=None):
 
 
 def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
-                decode_per_step=True, policy=None, plan=None, abstract=None):
+                decode_per_step=True, decode_at_use=None, with_flags=False,
+                policy=None, plan=None, abstract=None):
     """Protected-serving decode cell (one new token, KV cache of seq_len).
 
     The cell is plan-driven: ``plan`` (or ``policy``, materialized here)
     decides scheme/backend per leaf and supplies the encoded tree's sharding
     specs — including 1-D sharded specs for flat-padded images. Callers
     that already hold the ``serving_plan`` pair pass both ``plan`` and
-    ``abstract`` to skip re-tracing the param init."""
+    ``abstract`` to skip re-tracing the param init.
+
+    decode_at_use (default: follows decode_per_step) picks the fused
+    decode-at-use step; False compiles the whole-tree decode-per-step
+    ablation. with_flags adds the per-layer (corrected, DUE) counts as a
+    third (replicated) output."""
     lm.set_sharding_ctx(None)
     if plan is None:
         plan, abstract = serving_plan(cfg, mesh, fsdp=fsdp, policy=policy)
@@ -141,20 +147,24 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                                (tokens, pos), mesh)
 
     step_inner = protected.make_serve_step(cfg, plan=plan,
-                                           decode_per_step=decode_per_step)
+                                           decode_per_step=decode_per_step,
+                                           decode_at_use=decode_at_use,
+                                           with_flags=with_flags)
 
     def step(enc_params, cache, tokens, pos):
         return step_inner(enc_params, cache, tokens, pos)
 
     data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
     in_sh = (espec, cspec, tspec, posspec)
-    out_sh = (P("data", None, "model") if b % data_size == 0
-              else P(None, None, "model"), cspec)
+    lspec = (P("data", None, "model") if b % data_size == 0
+             else P(None, None, "model"))
+    out_sh = (lspec, cspec, P()) if with_flags else (lspec, cspec)
     return step, (enc, cache, tokens, pos), in_sh, out_sh
 
 
 def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
-                 chunk=2048, sp=None, policy=None, plan=None, abstract=None):
+                 chunk=2048, sp=None, decode_at_use=True, with_flags=False,
+                 policy=None, plan=None, abstract=None):
     """Protected-serving prefill cell: full-sequence forward -> logits.
 
     sp auto: OFF when head-sharded attention can engage (n_heads divides the
@@ -191,7 +201,9 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     xspec = _sanitize({k: sh.batch_spec(k, v, dp=dp) for k, v in extras.items()},
                       extras, mesh)
 
-    prefill = protected.make_prefill(cfg, plan=plan, chunk=chunk)
+    prefill = protected.make_prefill(cfg, plan=plan, chunk=chunk,
+                                     decode_at_use=decode_at_use,
+                                     with_flags=with_flags)
 
     def step(enc_params, tokens, extras):
         return prefill(enc_params, tokens, extras)
@@ -199,7 +211,8 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     in_sh = (espec, tspec, xspec)
     s_out = s + (cfg.n_patches if cfg.family == "vlm" else 0)
     logits_sds = _sds((b, s_out, cfg.vocab_padded), jnp.bfloat16)
-    out_sh = _sanitize(P(dp, None, "model"), logits_sds, mesh)
+    lspec = _sanitize(P(dp, None, "model"), logits_sds, mesh)
+    out_sh = (lspec, P()) if with_flags else lspec
     return step, (enc, tokens, extras), in_sh, out_sh
 
 
@@ -207,13 +220,15 @@ def cell(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw):
     if shape.kind == "train":
         return train_cell(cfg, shape, mesh,
                           **{k: v for k, v in kw.items()
-                             if k not in ("policy", "plan", "abstract")})
+                             if k not in ("policy", "plan", "abstract",
+                                          "decode_at_use", "with_flags")})
     if shape.kind == "prefill":
         return prefill_cell(cfg, shape, mesh, **kw)
     return decode_cell(cfg, shape, mesh,
                        **{k: v for k, v in kw.items()
-                          if k in ("fsdp", "decode_per_step", "policy",
-                                   "plan", "abstract")})
+                          if k in ("fsdp", "decode_per_step", "decode_at_use",
+                                   "with_flags", "policy", "plan",
+                                   "abstract")})
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:

@@ -45,6 +45,37 @@ def ctx_dp():
     return SHARDING_CTX.get("dp") if SHARDING_CTX else None
 
 
+# --------------------------------------------------------------------------
+# fault-flags sink: decode-at-use serving sets a sink (a plain list collected
+# at trace time); every protected-weight decode/fused-matmul records its
+# (corrected, due) counts, and lm.forward/decode_step drain per layer so the
+# scan emits per-layer fault accounting. None => recording is a no-op.
+# --------------------------------------------------------------------------
+
+_FLAGS_SINK: list | None = None
+
+
+def set_flags_sink(sink: list | None):
+    global _FLAGS_SINK
+    _FLAGS_SINK = sink
+
+
+def record_flags(corrected, due):
+    if _FLAGS_SINK is not None:
+        _FLAGS_SINK.append((corrected, due))
+
+
+def drain_flags():
+    """Sum and clear the recorded (corrected, due) pairs -> (2,) int32."""
+    total = jnp.zeros((2,), jnp.int32)
+    if _FLAGS_SINK:
+        total = sum((jnp.stack([jnp.asarray(c, jnp.int32).reshape(()),
+                                jnp.asarray(d, jnp.int32).reshape(())])
+                     for c, d in _FLAGS_SINK), total)
+        _FLAGS_SINK.clear()
+    return total
+
+
 def constrain_heads(t):
     """(B, H, S, D) attention tensor -> shard heads over 'model' when the
     head count divides the axis. Keeps softmax/scores fully local per shard
@@ -255,7 +286,11 @@ def gqa_params_shape(cfg):
 
 
 def _proj(x, w, b=None, wt=Identity):
-    y = x @ wt(w).astype(x.dtype)
+    w = wt(w)
+    if getattr(w, "decode_at_use", False):
+        y = w.matmul(x)  # decode-at-use view: fused or per-leaf inline decode
+    else:
+        y = x @ w.astype(x.dtype)
     if b is not None:
         y = y + b.astype(x.dtype)
     return y

@@ -177,6 +177,18 @@ def _take(i, tree):
     return jax.tree.map(lambda a: a[i], tree)
 
 
+def _scoped_lt(layer_transform, scope: str):
+    """``layer_transform`` may be one callable (applied to every scanned
+    subtree) or a ``{"layers"|"tail"|"enc_layers": fn}`` dict so callers can
+    route each stacked subtree differently (paths like ``rg0/...`` exist in
+    both the hybrid decoder and its tail)."""
+    if layer_transform is None:
+        return None
+    if isinstance(layer_transform, dict):
+        return layer_transform.get(scope)
+    return layer_transform
+
+
 def _block_full(cfg: ArchConfig, lp, x, positions, wt, chunk):
     f, nk = cfg.family, cfg.norm
     if f in ("dense", "vlm"):
@@ -213,11 +225,17 @@ def gqa_or_mla(cfg, p, x, positions, wt, chunk):
 
 def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
             enc_embeds=None, wt=Identity, dtype=jnp.bfloat16,
-            chunk: int = 2048, layer_transform=None):
+            chunk: int = 2048, layer_transform=None, collect_flags=False):
     """tokens: (B, S) int32 -> logits (B, S', V). For vlm, prefix_embeds
     (B, P, D) is prepended; for encdec, enc_embeds (B, Se, D) feeds the
     encoder (frontends are stubs per the assignment). layer_transform maps
-    each layer's param slice inside the scan (e.g. lazy ECC decode)."""
+    each layer's param slice inside the scan (e.g. lazy ECC decode).
+
+    collect_flags=True drains the layers-module fault-flags sink once per
+    scanned layer and returns ``(logits, flags)`` where flags maps each
+    scanned subtree ("layers", "tail", "enc_layers") to a (n, 2) int32
+    array of per-layer (corrected, due) counts."""
+    flags: dict = {}
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family == "vlm" and prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
@@ -228,37 +246,52 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
 
     enc_out = None
     if cfg.family == "encdec":
-        enc_out = _encode(cfg, params, enc_embeds, wt=wt, dtype=dtype,
-                          layer_transform=layer_transform)
+        enc_out, enc_flags = _encode(cfg, params, enc_embeds, wt=wt,
+                                     dtype=dtype,
+                                     layer_transform=layer_transform,
+                                     collect_flags=collect_flags)
+        if collect_flags:
+            flags["enc_layers"] = enc_flags
+
+    lt_layers = _scoped_lt(layer_transform, "layers")
+    lt_tail = _scoped_lt(layer_transform, "tail")
 
     def blk(carry, lp):
         x = carry
-        if layer_transform is not None:
-            lp = layer_transform(lp)
+        if lt_layers is not None:
+            lp = lt_layers(lp)
         x = _constrain_residual(x)
         if cfg.family == "encdec":
             x = _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk)
         else:
             x = _block_full(cfg, lp, x, positions, wt, chunk)
-        return x, None
+        return x, (L.drain_flags() if collect_flags else None)
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, _ = jax.lax.scan(blk_fn, x, params["layers"])
+    x, layer_flags = jax.lax.scan(blk_fn, x, params["layers"])
+    if collect_flags:
+        flags["layers"] = layer_flags
 
     if cfg.family == "hybrid" and "tail" in params:
         def tail_blk(carry, lp):
             x = carry
+            if lt_tail is not None:
+                lp = lt_tail(lp)
             x = x + L.rglru_block(lp["rg0"], L.apply_norm(x, lp["rg0_ln1"],
                                                           cfg.norm), cfg, wt)
             x = x + L.swiglu(lp["rg0_mlp"], L.apply_norm(x, lp["rg0_ln2"],
                                                          cfg.norm), wt)
-            return x, None
-        x, _ = jax.lax.scan(jax.checkpoint(tail_blk) if cfg.remat else tail_blk,
-                            x, params["tail"])
+            return x, (L.drain_flags() if collect_flags else None)
+        x, tail_flags = jax.lax.scan(
+            jax.checkpoint(tail_blk) if cfg.remat else tail_blk,
+            x, params["tail"])
+        if collect_flags:
+            flags["tail"] = tail_flags
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    return L.logits(x, head, wt)
+    out = L.logits(x, head, wt)
+    return (out, flags) if collect_flags else out
 
 
 def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
@@ -272,23 +305,25 @@ def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
     return x
 
 
-def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None):
+def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None,
+            collect_flags=False):
     x = enc_embeds.astype(dtype)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    lt_enc = _scoped_lt(layer_transform, "enc_layers")
 
     def blk(carry, lp):
         x = carry
-        if layer_transform is not None:
-            lp = layer_transform(lp)
+        if lt_enc is not None:
+            lp = lt_enc(lp)
         x = x + L.gqa_attention(lp["attn"], L.apply_norm(x, lp["ln1"], cfg.norm),
                                 cfg, positions=positions, wt=wt, causal=False)
         x = x + L.gelu_mlp(lp["mlp"], L.apply_norm(x, lp["ln2"], cfg.norm), wt)
-        return x, None
+        return x, (L.drain_flags() if collect_flags else None)
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, _ = jax.lax.scan(blk_fn, x, params["enc_layers"])
-    return L.apply_norm(x, params["enc_final_norm"], cfg.norm)
+    x, enc_flags = jax.lax.scan(blk_fn, x, params["enc_layers"])
+    return L.apply_norm(x, params["enc_final_norm"], cfg.norm), enc_flags
 
 
 def loss_fn(cfg: ArchConfig, params, batch, *, wt=Identity,
@@ -356,18 +391,26 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
-                wt=Identity, dtype=jnp.bfloat16, layer_transform=None):
+                wt=Identity, dtype=jnp.bfloat16, layer_transform=None,
+                collect_flags=False):
     """One decode step. tokens: (B,1) int32; pos: (B,) int32.
-    Returns (logits (B,1,V), new_cache)."""
+    Returns (logits (B,1,V), new_cache); with collect_flags=True,
+    (logits, new_cache, flags) where flags maps "layers" (and "tail") to
+    (n, 2) int32 per-layer (corrected, due) fault counts drained from the
+    layers-module flags sink."""
+    flags: dict = {}
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family in ("vlm", "hybrid"):
         x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
     f = cfg.family
 
+    lt_layers = _scoped_lt(layer_transform, "layers")
+    lt_tail = _scoped_lt(layer_transform, "tail")
+
     def blk(x, lp_cache):
         lp, lc = lp_cache
-        if layer_transform is not None:
-            lp = layer_transform(lp)
+        if lt_layers is not None:
+            lp = lt_layers(lp)
         if f in ("dense", "vlm", "encdec"):
             h = L.apply_norm(x, lp["ln1"], cfg.norm)
             o, newkv = L.gqa_decode(lp["attn"], h, cfg,
@@ -427,14 +470,20 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
     layer_cache = {k_: v for k_, v in cache.items() if not k_.startswith("tail")}
 
     def scan_blk(x, lp_lc):
-        return blk(x, lp_lc)
+        x, nc = blk(x, lp_lc)
+        return x, (nc, L.drain_flags() if collect_flags else None)
 
-    x, new_cache = jax.lax.scan(scan_blk, x, (params["layers"], layer_cache))
+    x, (new_cache, layer_flags) = jax.lax.scan(
+        scan_blk, x, (params["layers"], layer_cache))
+    if collect_flags:
+        flags["layers"] = layer_flags
 
     out_cache = dict(new_cache)
     if f == "hybrid" and "tail" in params:
         def tail_blk(x, lp_lc):
             lp, lc = lp_lc
+            if lt_tail is not None:
+                lp = lt_tail(lp)
             h = L.apply_norm(x, lp["rg0_ln1"], cfg.norm)
             o, c2 = L.rglru_decode(lp["rg0"], h, cfg,
                                    {"h": lc["tail_h"], "conv": lc["tail_conv"]},
@@ -442,11 +491,16 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
             x = x + o
             x = x + L.swiglu(lp["rg0_mlp"],
                              L.apply_norm(x, lp["rg0_ln2"], cfg.norm), wt)
-            return x, {"tail_h": c2["h"], "tail_conv": c2["conv"]}
+            return x, ({"tail_h": c2["h"], "tail_conv": c2["conv"]},
+                       L.drain_flags() if collect_flags else None)
         tc = {"tail_h": cache["tail_h"], "tail_conv": cache["tail_conv"]}
-        x, new_tail = jax.lax.scan(tail_blk, x, (params["tail"], tc))
+        x, (new_tail, tail_flags) = jax.lax.scan(tail_blk, x,
+                                                 (params["tail"], tc))
         out_cache.update(new_tail)
+        if collect_flags:
+            flags["tail"] = tail_flags
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    return L.logits(x, head, wt), out_cache
+    logits = L.logits(x, head, wt)
+    return (logits, out_cache, flags) if collect_flags else (logits, out_cache)

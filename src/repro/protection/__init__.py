@@ -24,15 +24,19 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA, AutotuneTable, Backend,
+from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA,
+                       BENCH_KERNELS_SCHEMA_V1, AutotuneTable, Backend,
                        PallasBackend, XlaBackend, get_backend)
-from .campaign import (CampaignResult, accuracy_eval, fidelity_campaign,
-                       fidelity_eval, run_campaign, run_campaign_host)
+from .campaign import (CampaignResult, accuracy_eval, due_campaign, due_eval,
+                       fidelity_campaign, fidelity_eval, run_campaign,
+                       run_campaign_host)
+from .fused import ProtectedWeight, can_fuse
 from .host import HostScheme, Stored, get_host_scheme, run_fault_trial
 from .plan import (POLICY_PRESETS, LeafPlan, ProtectionPlan,
                    get_policy_preset, make_plan)
 from .policy import (CoverageEntry, CoverageReport, ProtectionPolicy,
-                     decode_leaf, decode_tree, inject_tree,
+                     decode_leaf, decode_leaf_with_flags, decode_tree,
+                     decode_tree_with_flags, inject_tree,
                      inject_tree_device, space_overhead, spec_tree)
 from .schemes import (ALIASES, SCHEMES, Faulty, InPlace, ParityZero, Scheme,
                       Secded72, get_scheme, scheme_ids)
@@ -45,13 +49,15 @@ __all__ = [
     "ProtectionPolicy", "CoverageReport", "CoverageEntry",
     "ProtectionPlan", "LeafPlan", "make_plan",
     "POLICY_PRESETS", "get_policy_preset",
-    "decode_leaf", "decode_tree", "inject_tree", "inject_tree_device",
-    "spec_tree", "space_overhead",
+    "decode_leaf", "decode_tree", "decode_leaf_with_flags",
+    "decode_tree_with_flags", "inject_tree", "inject_tree_device",
+    "spec_tree", "space_overhead", "ProtectedWeight", "can_fuse",
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
-    "AutotuneTable", "BENCH_KERNELS_SCHEMA",
+    "AutotuneTable", "BENCH_KERNELS_SCHEMA", "BENCH_KERNELS_SCHEMA_V1",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
     "CampaignResult", "run_campaign", "run_campaign_host",
-    "fidelity_campaign", "accuracy_eval", "fidelity_eval",
+    "fidelity_campaign", "due_campaign", "accuracy_eval", "fidelity_eval",
+    "due_eval",
     "default_policy", "encode_tree", "coverage", "qmatmul",
 ]
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import ecc
 
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
-           "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA"]
+           "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA",
+           "BENCH_KERNELS_SCHEMA_V1"]
 
 
 class Backend:
@@ -111,21 +112,28 @@ class PallasBackend(Backend):
 
 BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
 
-BENCH_KERNELS_SCHEMA = "bench_kernels/v1"
+BENCH_KERNELS_SCHEMA_V1 = "bench_kernels/v1"
+BENCH_KERNELS_SCHEMA = "bench_kernels/v2"
 
 
 class AutotuneTable:
-    """Shape-keyed backend choice, fed by ``benchmarks/kernel_bench.py``.
+    """Shape-keyed backend + tile choice, fed by
+    ``benchmarks/kernel_bench.py``.
 
     Each entry is ``{"shape": [...], "nblocks": int, "xla_us": float,
-    "pallas_us": float, "best": "xla"|"pallas"}`` (the BENCH_kernels.json
-    schema, ``bench_kernels/v1``).  :meth:`lookup` resolves an exact shape
-    match first, then the nearest entry by 64-bit-block count within a 4x
-    factor, else ``None`` — so the policy's default backend still decides
-    for shapes the benchmark never measured.
+    "pallas_us": float, "best": "xla"|"pallas"}``; ``bench_kernels/v2``
+    entries additionally carry ``"tiles": [bm, bn, bk]`` (the fused
+    decode+matmul kernel's best tile sweep result for that shape) and
+    ``"fused_us"``. v1 artifacts still load — their entries simply have no
+    tile opinion. :meth:`lookup` / :meth:`lookup_tiles` resolve an exact
+    shape match first, then the nearest entry by 64-bit-block count within
+    a 4x factor, else ``None`` — so the policy's default backend (and the
+    kernel's default tiles) still decide for shapes the benchmark never
+    measured.
     """
 
-    def __init__(self, entries=(), *, platform: str = "", source: str = ""):
+    def __init__(self, entries=(), *, platform: str = "", source: str = "",
+                 schema: str = BENCH_KERNELS_SCHEMA):
         self.entries = []
         for e in entries:
             e = dict(e)
@@ -136,17 +144,19 @@ class AutotuneTable:
             e["shape"] = shape
             e.setdefault("nblocks",
                          int(math.prod(shape)) // 8 if shape else 0)
+            if e.get("tiles") is not None:
+                e["tiles"] = tuple(int(t) for t in e["tiles"])
             self.entries.append(e)
         self.platform = platform
         self.source = source
-        self._by_shape = {e["shape"]: e["best"] for e in self.entries}
+        self.schema = schema
+        self._by_shape = {e["shape"]: e for e in self.entries}
 
     def __len__(self) -> int:
         return len(self.entries)
 
-    def lookup(self, shape) -> str | None:
-        """Best backend name for a weight shape, or None when the table has
-        nothing close enough to say."""
+    def _nearest(self, shape) -> dict | None:
+        """Exact shape entry, else nearest by block count within 4x."""
         shape = tuple(int(s) for s in shape)
         hit = self._by_shape.get(shape)
         if hit is not None:
@@ -159,21 +169,38 @@ class AutotuneTable:
         ratio = max(nearest["nblocks"], 1) / nblk
         if ratio > 4 or ratio < 0.25:
             return None
-        return nearest["best"]
+        return nearest
+
+    def lookup(self, shape) -> str | None:
+        """Best backend name for a weight shape, or None when the table has
+        nothing close enough to say."""
+        e = self._nearest(shape)
+        return e["best"] if e is not None else None
+
+    def lookup_tiles(self, shape) -> tuple | None:
+        """Best fused-kernel (bm, bn, bk) for a weight shape, or None (no
+        close-enough entry, or a v1 entry with no tile sweep)."""
+        e = self._nearest(shape)
+        tiles = e.get("tiles") if e is not None else None
+        return tuple(tiles) if tiles else None
 
     def to_dict(self) -> dict:
-        return {"schema": BENCH_KERNELS_SCHEMA, "platform": self.platform,
-                "entries": [{**e, "shape": list(e["shape"])}
+        return {"schema": self.schema, "platform": self.platform,
+                "entries": [{**e, "shape": list(e["shape"]),
+                             **({"tiles": list(e["tiles"])}
+                                if e.get("tiles") else {})}
                             for e in self.entries]}
 
     @classmethod
     def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
         schema = d.get("schema", "")
-        if schema and schema != BENCH_KERNELS_SCHEMA:
-            raise ValueError(f"unsupported autotune schema {schema!r} "
-                             f"(expected {BENCH_KERNELS_SCHEMA!r})")
+        if schema and schema not in (BENCH_KERNELS_SCHEMA,
+                                     BENCH_KERNELS_SCHEMA_V1):
+            raise ValueError(
+                f"unsupported autotune schema {schema!r} (expected "
+                f"{BENCH_KERNELS_SCHEMA!r} or {BENCH_KERNELS_SCHEMA_V1!r})")
         return cls(d.get("entries", ()), platform=d.get("platform", ""),
-                   source=source)
+                   source=source, schema=schema or BENCH_KERNELS_SCHEMA_V1)
 
     @classmethod
     def from_json(cls, path) -> "AutotuneTable":

@@ -31,12 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .policy import (ProtectionPolicy, decode_leaf, decode_tree, inject_tree,
+from .policy import (ProtectionPolicy, decode_leaf, decode_tree,
+                     decode_tree_with_flags, inject_tree,
                      inject_tree_device, space_overhead)
 from .tensor import is_protected_tensor
 
 __all__ = ["CampaignResult", "run_campaign", "run_campaign_host",
-           "fidelity_campaign", "accuracy_eval", "fidelity_eval"]
+           "fidelity_campaign", "due_campaign", "accuracy_eval",
+           "fidelity_eval", "due_eval"]
 
 RATES = (1e-6, 1e-5, 1e-4, 1e-3, 3e-3)
 
@@ -163,6 +165,25 @@ def fidelity_eval(enc_tree, backend="xla"):
     return ev
 
 
+def due_eval(backend="xla", *, what="due"):
+    """Metric over the ENCODED tree: total detected-uncorrectable (double)
+    errors — the per-leaf flags the decode-at-use serve step surfaces,
+    summed at campaign scale (``what="corrected"`` counts repairs instead).
+    """
+    idx = {"corrected": 0, "due": 1}[what]
+
+    def ev(enc_tree):
+        _, flags = decode_tree_with_flags(enc_tree, jnp.float32,
+                                          backend=backend)
+        total = jnp.zeros((), jnp.int32)
+        for pair in flags.values():
+            total = total + pair[idx]
+        return total.astype(jnp.float32)
+
+    ev.wants_encoded = True
+    return ev
+
+
 # ---------------------------------------------------------------------------
 # the compiled grid
 # ---------------------------------------------------------------------------
@@ -188,10 +209,16 @@ def _run_grid(enc, eval_fn, rates, trials, key, batch, backend, metric):
     max_rate = max(rates) if rates else 0.0
     n_rates = len(rates)
 
-    clean = float(eval_fn(decode_tree(enc, jnp.float32, backend=backend)))
+    # eval fns tagged wants_encoded consume the (dirty) encoded tree itself
+    # (e.g. the DUE-flags metric); everything else sees the decoded params
+    wants_enc = getattr(eval_fn, "wants_encoded", False)
+    clean = float(eval_fn(enc) if wants_enc else
+                  eval_fn(decode_tree(enc, jnp.float32, backend=backend)))
 
     def cell(enc_tree, rate, k):
         dirty = inject_tree_device(enc_tree, rate, k, max_rate=max_rate)
+        if wants_enc:
+            return eval_fn(dirty)
         return eval_fn(decode_tree(dirty, jnp.float32, backend=backend))
 
     if batch == "vmap":
@@ -293,6 +320,23 @@ def fidelity_campaign(tree, policy=None, rates=(1e-4,), trials=2, key=None,
     res = _run_grid(enc, eval_fn, rates, trials, key, batch, policy.backend,
                     "fidelity")
     return res
+
+
+def due_campaign(tree, policy=None, rates=(1e-4,), trials=2, key=None,
+                 batch="vmap", *, what="due") -> CampaignResult:
+    """Fault-accounting campaign: metric = total detected-uncorrectable
+    (double-error, DUE) count across protected leaves per cell — the same
+    per-leaf flags the decode-at-use serve step reports per layer, swept
+    over the (rate x trial) grid in one compiled program.  At the paper's
+    fault model the in-place (64,57,1) code corrects all singles, so the DUE
+    curve is exactly the residual risk curve; ``what="corrected"`` sweeps
+    the repair counts instead."""
+    policy = _as_policy(policy if policy is not None else "in-place")
+    key = jax.random.PRNGKey(0) if key is None else key
+    enc = tree if _is_encoded(tree) else policy.encode_tree(tree)
+    ev = due_eval(backend=policy.backend, what=what)
+    return _run_grid(enc, ev, rates, trials, key, batch, policy.backend,
+                     f"{what}_count")
 
 
 def run_campaign_host(params, fwd, tmpl, policy, rates=RATES, trials=5,

@@ -1,0 +1,130 @@
+"""``ProtectedWeight`` — lazy decode-at-use carrier for one protected leaf.
+
+The decode-at-use serving step replaces each (per-layer) ``ProtectedTensor``
+with a ``ProtectedWeight`` view instead of decoding the whole tree up front.
+The view defers ALL codec work to the weight's point of use inside the
+model:
+
+* ``matmul(x)`` — the projection path. On the Pallas route for 2-D
+  same-shape in-place images this calls the fused ``kernels.ecc_qmatmul``
+  (decode in VMEM on the way to the MXU — zero decoded bytes ever hit HBM);
+  every other route decodes just this leaf inline and matmuls.
+* ``astype(dtype)`` — the fallback for non-projection uses (router einsums,
+  gate matmuls, 3-D expert weights): decodes just this leaf, with flags.
+
+Both paths report ``(corrected, due)`` int32 counts through the ``record``
+callback, which the serving step wires to the per-layer flags sink in
+``models.layers`` — the FT-CNN-style fault accounting that used to be
+discarded by the kernel.
+
+``models.layers._proj`` recognizes the view by its ``decode_at_use`` class
+attribute (duck typing — layers never imports this module).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from .backends import get_backend
+from .policy import decode_leaf_with_flags
+from .tensor import ProtectedTensor
+
+__all__ = ["ProtectedWeight", "can_fuse"]
+
+
+def can_fuse(pt: ProtectedTensor, backend) -> bool:
+    """True when this leaf can route through the fused decode+matmul kernel:
+    Pallas backend, in-place scheme, 2-D same-shape image (ECC blocks along
+    the output dim)."""
+    name = getattr(backend, "name", backend) or "xla"
+    return (name == "pallas" and pt.scheme_id == "in-place"
+            and not pt.is_flat and getattr(pt.enc, "ndim", 0) == 2)
+
+
+def is_matmul_weight(path: str) -> bool:
+    """True when the leaf is consumed as the RHS of a matmul/einsum — the
+    only uses a lazy view can serve. Depthwise conv kernels (``conv_w``) are
+    indexed elementwise by ``layers._causal_conv`` and must decode to real
+    arrays instead."""
+    last = path.rsplit("/", 1)[-1]
+    return not last.startswith("conv")
+
+
+class ProtectedWeight:
+    """One leaf's decode-at-use view (see module docstring).
+
+    pt:      the (already per-layer-sliced) ProtectedTensor.
+    backend: Backend instance or name for this leaf's codec compute.
+    tiles:   optional (bm, bn, bk) for the fused kernel (from the autotune
+             table); None uses the kernel defaults (full-K tiles).
+    record:  ``record(corrected, due)`` flags callback (no-op when None).
+    """
+
+    decode_at_use = True  # the marker layers._proj dispatches on
+
+    def __init__(self, pt: ProtectedTensor, backend="xla", *,
+                 tiles: Optional[tuple] = None,
+                 record: Optional[Callable] = None):
+        self.pt = pt
+        self.backend = get_backend(backend)
+        self.fuse = can_fuse(pt, self.backend)
+        self.tiles = tiles
+        self._record = record
+
+    # -- array-protocol surface (enough for every call site in layers.py) ----
+
+    @property
+    def shape(self):
+        return tuple(self.pt.orig_shape)
+
+    @property
+    def ndim(self):
+        return len(self.pt.orig_shape)
+
+    def record(self, corrected, due):
+        if self._record is not None:
+            self._record(corrected, due)
+
+    def astype(self, dtype):
+        """Decode just this leaf (recording flags) -> dequantized array."""
+        w, corrected, due = decode_leaf_with_flags(self.pt, dtype,
+                                                   backend=self.backend)
+        self.record(corrected, due)
+        return w
+
+    def matmul(self, x):
+        """``x @ decode(self)`` with decode at the point of use.
+
+        Fused route: the Pallas kernel dequantizes each decoded tile in VMEM
+        (identical value path to decode-then-matmul) and returns the block
+        flag counts. Inline route: decode this leaf, then a plain matmul.
+        """
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            # int8 activations need the raw int32 accumulator + explicit
+            # activation scaling — use kernels.ecc_qmatmul / Backend.qmatmul
+            # directly; silently casting the accumulator to x.dtype would
+            # truncate it.
+            raise TypeError(
+                f"ProtectedWeight.matmul serves float activations (got "
+                f"{x.dtype}); for the quantized int8 path call "
+                f"protection.qmatmul / kernels.ecc_qmatmul directly")
+        if not self.fuse:
+            return x @ self.astype(x.dtype)
+        from repro.kernels.ecc_qmatmul import ecc_qmatmul
+        interpret = getattr(self.backend, "interpret", True)
+        # serving keeps full-K tiles (bk=0): one f32 dot per output tile, so
+        # the accumulation order — and hence every logit — is bit-identical
+        # to decode-then-matmul. The autotune bk only tunes the int8 path.
+        bm, bn, _bk = self.tiles or (128, 128, 0)
+        lead = x.shape[:-1]
+        a2 = x.reshape(-1, x.shape[-1])
+        out, flags = ecc_qmatmul(a2, self.pt.enc, self.pt.scale,
+                                 bm=bm, bn=bn, bk=0, interpret=interpret,
+                                 with_flags=True)
+        self.record(flags[0], flags[1])
+        return out.astype(x.dtype).reshape(*lead, self.pt.enc.shape[1])
+
+    def __repr__(self):
+        return (f"ProtectedWeight({self.pt!r}, backend={self.backend.name!r}, "
+                f"fuse={self.fuse})")

@@ -25,7 +25,8 @@ from .schemes import Scheme, get_scheme
 from .tensor import ProtectedTensor, is_protected_tensor
 
 __all__ = ["ProtectionPolicy", "CoverageReport", "CoverageEntry",
-           "decode_tree", "decode_leaf", "inject_tree", "inject_tree_device",
+           "decode_tree", "decode_leaf", "decode_leaf_with_flags",
+           "decode_tree_with_flags", "inject_tree", "inject_tree_device",
            "spec_tree", "space_overhead", "path_str"]
 
 BLOCK = 8
@@ -296,6 +297,38 @@ def decode_leaf(pt: ProtectedTensor, dtype=jnp.bfloat16, *, backend="xla"):
     if pt.is_flat:
         q = q.reshape(-1)[: pt.n_weights].reshape(pt.orig_shape)
     return (q.astype(jnp.float32) * pt.scale).astype(dtype)
+
+
+def decode_leaf_with_flags(pt: ProtectedTensor, dtype=jnp.bfloat16, *,
+                           backend="xla"):
+    """:func:`decode_leaf` plus fault accounting — returns
+    ``(weight, corrected, due)`` with int32 scalar counts of repaired and
+    detected-uncorrectable (double) errors in this leaf's stored image."""
+    scheme = get_scheme(pt.scheme_id)
+    q, corrected, due = scheme.decode_with_flags(pt.enc, pt.checks,
+                                                 get_backend(backend))
+    if pt.is_flat:
+        q = q.reshape(-1)[: pt.n_weights].reshape(pt.orig_shape)
+    return (q.astype(jnp.float32) * pt.scale).astype(dtype), corrected, due
+
+
+def decode_tree_with_flags(enc_tree, dtype=jnp.bfloat16, *, backend="xla"):
+    """Decode every ProtectedTensor leaf and aggregate fault flags:
+    returns ``(decoded_tree, {path: (corrected, due)})`` — the per-leaf
+    accounting that fault campaigns sum into DUE curves."""
+    be = get_backend(backend)
+    flags: dict = {}
+
+    def dec(path, leaf):
+        if not is_protected_tensor(leaf):
+            return leaf
+        w, corrected, due = decode_leaf_with_flags(leaf, dtype, backend=be)
+        flags[path_str(path)] = (corrected, due)
+        return w
+
+    out = jax.tree_util.tree_map_with_path(dec, enc_tree,
+                                           is_leaf=is_protected_tensor)
+    return out, flags
 
 
 def decode_tree(enc_tree, dtype=jnp.bfloat16, *, backend="xla"):

@@ -60,6 +60,15 @@ class Scheme:
         """Stored image -> int8 (..., n). Corrects/zeroes per the scheme."""
         raise NotImplementedError
 
+    def decode_with_flags(self, enc, checks, backend: Backend | str = "xla"):
+        """Like :meth:`decode`, plus fault accounting: returns
+        ``(decoded, corrected, due)`` where ``corrected`` counts faults the
+        scheme repaired (bit corrections, parity-zeroed bytes) and ``due``
+        counts detected-uncorrectable (double) errors — both int32 scalars.
+        Schemes with no detection capability report zeros."""
+        zero = jnp.zeros((), jnp.int32)
+        return self.decode(enc, checks, backend), zero, zero
+
 
 class Faulty(Scheme):
     scheme_id = "faulty"
@@ -85,6 +94,12 @@ class ParityZero(Scheme):
         data, _bad = ecc.decode_parity8(enc, checks)
         return _as_int8(data)
 
+    def decode_with_flags(self, enc, checks, backend="xla"):
+        data, bad = ecc.decode_parity8(enc, checks)
+        # zeroing a detected-faulty byte IS this scheme's repair action
+        return (_as_int8(data), jnp.sum(bad.astype(jnp.int32)),
+                jnp.zeros((), jnp.int32))
+
 
 class Secded72(Scheme):
     scheme_id = "secded72"
@@ -99,6 +114,12 @@ class Secded72(Scheme):
     def decode(self, enc, checks, backend="xla"):
         dec, _single, _double = ecc.decode72(_blocks(enc), checks)
         return _as_int8(dec.reshape(enc.shape))
+
+    def decode_with_flags(self, enc, checks, backend="xla"):
+        dec, single, double = ecc.decode72(_blocks(enc), checks)
+        return (_as_int8(dec.reshape(enc.shape)),
+                jnp.sum(single.astype(jnp.int32)),
+                jnp.sum(double.astype(jnp.int32)))
 
 
 class InPlace(Scheme):
@@ -121,10 +142,11 @@ class InPlace(Scheme):
         return _as_int8(dec.reshape(enc.shape))
 
     def decode_with_flags(self, enc, checks, backend="xla"):
-        """Also return (single_corrected, double_detected) per block."""
         be = get_backend(backend)
         dec, single, double = be.decode64(_blocks(enc))
-        return _as_int8(dec.reshape(enc.shape)), single, double
+        return (_as_int8(dec.reshape(enc.shape)),
+                jnp.sum(single.astype(jnp.int32)),
+                jnp.sum(double.astype(jnp.int32)))
 
 
 SCHEMES: dict[str, Scheme] = {s.scheme_id: s for s in

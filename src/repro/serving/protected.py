@@ -1,25 +1,40 @@
 """Protected serving on top of ``repro.protection``.
 
-Weights live in memory as ``ProtectedTensor`` leaves — in-place-ECC-encoded
-int8 whose image has the SAME shape as the weight (1 byte per element, check
-bits in place), so it inherits the weight's sharding. ``serve_step`` decodes
-on read — every step — which is the honest cost model for at-rest protection
-(on TPU the fused ``kernels/ecc_qmatmul`` does this in VMEM on the way to the
-MXU via ``backend="pallas"``; the XLA backend lowers the decode to
-elementwise ops ahead of each matmul).
+Weights live in memory as ``ProtectedTensor`` leaves — ECC-encoded int8
+whose image (for the in-place scheme) has the SAME shape as the weight, so
+it inherits the weight's sharding. The serve step decodes **at the point of
+use**: each projection either routes through the fused Pallas
+``kernels/ecc_qmatmul`` (decode in VMEM on the way to the MXU — no decoded
+copy of any weight ever lands in HBM) or decodes just its own leaf inline
+next to its matmul, per the :class:`~repro.protection.ProtectionPlan`.
+The old whole-tree decode per step survives only as the
+``decode_at_use=False`` ablation; ``decode_per_step=False`` is the
+decode-once-outside baseline.
+
+Per-layer fault accounting rides along: ``with_flags=True`` makes the step
+also return the (corrected, DUE) counts each layer's decodes observed — the
+double-error detections the fused kernel used to swallow.
 
 This module is the LM-serving adapter; the protection API itself (schemes,
 policy, coverage, injection) lives in ``repro.protection``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro import protection
+from repro.models import layers as L
 from repro.models import lm
 from repro.models.config import ArchConfig
+from repro.protection.fused import ProtectedWeight, is_matmul_weight
+from repro.protection.policy import path_str
+from repro.protection.tensor import ProtectedTensor, is_protected_tensor
+
+STACKED_KEYS = ("layers", "tail", "enc_layers")
 
 
 def encode_leaf(w: jnp.ndarray,
@@ -60,6 +75,119 @@ def make_plan(params, policy: Optional[protection.ProtectionPolicy] = None,
                                 mesh=mesh, param_spec_fn=param_spec_fn)
 
 
+# ---------------------------------------------------------------------------
+# decode-at-use routing
+# ---------------------------------------------------------------------------
+
+
+class _Router:
+    """Per-leaf decode route: (backend, fused tiles) from the plan (leaf
+    rules > autotune > policy default) or from the policy-wide ``backend``
+    when serving without a plan."""
+
+    def __init__(self, plan, backend):
+        self.plan = plan
+        self.backend = protection.get_backend(backend)
+        self.autotune = getattr(getattr(plan, "policy", None),
+                                "autotune", None)
+
+    def backend_for(self, path: str):
+        """Resolved backend for a leaf by its FULL plan path (the scoped
+        layer transforms prefix their subtree key, so 'rg0/...' leaves in
+        the hybrid decoder and its tail resolve independently)."""
+        if self.plan is None:
+            return self.backend
+        lp = self.plan.leaves.get(path)
+        if lp is not None and lp.protected:
+            return lp.backend_obj or protection.get_backend(lp.backend)
+        return self.backend
+
+    def tiles_for(self, shape):
+        lookup = getattr(self.autotune, "lookup_tiles", None)
+        return lookup(shape) if lookup is not None else None
+
+    def wrap(self, path: str, pt: ProtectedTensor, dtype):
+        """Decode-at-use view for a matmul-consumed leaf; leaves that are
+        indexed elementwise (conv kernels) decode inline right here — still
+        this leaf only, still at its point of use inside the layer."""
+        be = self.backend_for(path)
+        if not is_matmul_weight(path):
+            w, corrected, due = protection.decode_leaf_with_flags(
+                pt, dtype, backend=be)
+            L.record_flags(corrected, due)
+            return w
+        return ProtectedWeight(pt, be, tiles=self.tiles_for(pt.orig_shape),
+                               record=L.record_flags)
+
+
+def _scan_ready(subtree, prefix: str, router: _Router, dtype):
+    """Make a stacked encoded subtree scannable: same-shape images keep
+    their codec (scale broadcast over the layer dim so ``lax.scan`` can
+    slice the ProtectedTensor); flat-padded images — whose 1-D byte image
+    flattens *across* layers and cannot be sliced — decode here, per step
+    but still per leaf (their flags land in the "top" row, not a layer
+    row: the decode happens before the scan runs)."""
+
+    def prep(path, leaf):
+        if not is_protected_tensor(leaf):
+            return leaf
+        n_stack = int(leaf.orig_shape[0])
+        if leaf.is_flat:
+            w, corrected, due = protection.decode_leaf_with_flags(
+                leaf, dtype, backend=router.backend_for(
+                    f"{prefix}/{path_str(path)}"))
+            L.record_flags(corrected, due)
+            return w
+        return dataclasses.replace(
+            leaf, scale=jnp.broadcast_to(leaf.scale, (n_stack,)))
+
+    return jax.tree_util.tree_map_with_path(prep, subtree,
+                                            is_leaf=is_protected_tensor)
+
+
+def _layer_transform(router: _Router, dtype):
+    """Per-subtree ``{"layers"|"tail"|"enc_layers": fn}`` transforms for
+    ``lm``'s scans: each fn fixes the sliced ProtectedTensor metadata (drop
+    the stacked leading dim) and wraps each protected leaf in its
+    decode-at-use view, resolving the route by the leaf's FULL plan path."""
+
+    def scoped(prefix):
+        def lt(lp):
+            def wrap(path, leaf):
+                if not is_protected_tensor(leaf):
+                    return leaf
+                pt = dataclasses.replace(leaf,
+                                         orig_shape=leaf.orig_shape[1:])
+                return router.wrap(f"{prefix}/{path_str(path)}", pt, dtype)
+            return jax.tree_util.tree_map_with_path(
+                wrap, lp, is_leaf=is_protected_tensor)
+        return lt
+
+    return {k: scoped(k) for k in STACKED_KEYS}
+
+
+def _use_tree(enc_params, router: _Router, dtype):
+    """enc tree -> params tree lm can run with decode at use: stacked
+    subtrees stay encoded (scan-ready), top-level protected leaves become
+    decode-at-use views (``embed`` decodes to a real array — it is indexed
+    and transposed, not matmul'd)."""
+    out = {}
+    for key, sub in enc_params.items():
+        if key in STACKED_KEYS:
+            out[key] = _scan_ready(sub, key, router, dtype)
+        elif is_protected_tensor(sub):
+            if key == "embed":
+                w, corrected, due = protection.decode_leaf_with_flags(
+                    sub, dtype, backend=router.backend_for(key))
+                L.record_flags(corrected, due)
+                out[key] = w
+            else:
+                out[key] = router.wrap(key, sub, dtype)
+        else:
+            out[key] = sub
+    return out
+
+
 def _decoder(plan, dtype, backend):
     if plan is not None:
         return lambda enc_params: plan.decode_tree(enc_params, dtype)
@@ -70,15 +198,52 @@ def _decoder(plan, dtype, backend):
 
 def make_serve_step(cfg: ArchConfig, *, plan=None,
                     decode_per_step: bool = True,
-                    dtype=jnp.bfloat16, backend="xla"):
-    """serve_step(enc_params, cache, tokens, pos) -> (logits, cache).
+                    decode_at_use: Optional[bool] = None,
+                    dtype=jnp.bfloat16, backend="xla",
+                    with_flags: bool = False):
+    """serve_step(enc_params, cache, tokens, pos) -> (logits, cache)
+    (``+ flags`` with ``with_flags=True``).
 
-    decode_per_step=True keeps weights encoded at rest (the paper's model);
-    False decodes once outside (baseline for the protection-cost ablation).
-    ``plan`` (a :class:`~repro.protection.ProtectionPlan`) routes the
-    per-step decode per leaf, so one model mixes schemes AND backends;
-    without a plan, ``backend`` is the policy-wide route.
+    decode_at_use=True (the default) decodes each weight at its point of
+    use — fused decode+matmul for Pallas-routed in-place leaves, per-leaf
+    inline decode otherwise — so no decoded copy of the tree is ever
+    resident. ``decode_at_use=False`` is the whole-tree decode-per-step
+    ablation; ``decode_per_step=False`` the decode-once-outside baseline.
+    ``plan`` (a :class:`~repro.protection.ProtectionPlan`) routes each leaf,
+    so one model mixes schemes AND backends; without a plan, ``backend`` is
+    the policy-wide route. ``with_flags=True`` (decode-at-use only) adds a
+    flags dict: per-layer (corrected, DUE) int32 counts plus the "top" row
+    for embed/head.
     """
+    if decode_at_use is None:
+        decode_at_use = decode_per_step
+    if decode_at_use and decode_per_step:
+        router = _Router(plan, backend)
+        lt = _layer_transform(router, dtype)
+
+        def serve_step(enc_params, cache, tokens, pos):
+            sink: list = []
+            L.set_flags_sink(sink if with_flags else None)
+            try:
+                params = _use_tree(enc_params, router, dtype)
+                top_flags = L.drain_flags() if with_flags else None
+                out = lm.decode_step(cfg, params, cache, tokens, pos,
+                                     dtype=dtype, layer_transform=lt,
+                                     collect_flags=with_flags)
+                if with_flags:  # the output head decodes after the scans
+                    top_flags = top_flags + L.drain_flags()
+            finally:
+                L.set_flags_sink(None)
+            if not with_flags:
+                return out
+            logits, new_cache, flags = out
+            return logits, new_cache, {"top": top_flags, **flags}
+
+        return serve_step
+
+    if with_flags:
+        raise ValueError("with_flags needs the decode-at-use serve step "
+                         "(the whole-tree decode paths discard flags)")
     decode = _decoder(plan, dtype, backend)
 
     def serve_step(enc_params, cache, tokens, pos):
@@ -89,7 +254,39 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
 
 
 def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
-                 chunk: int = 2048, backend="xla"):
+                 chunk: int = 2048, backend="xla",
+                 decode_at_use: bool = True, with_flags: bool = False):
+    """prefill(enc_params, tokens, extras) -> logits (``+ flags`` with
+    ``with_flags=True``). Decode-at-use by default, same routing as
+    :func:`make_serve_step`; ``decode_at_use=False`` keeps the whole-tree
+    decode ablation."""
+    if decode_at_use:
+        router = _Router(plan, backend)
+        lt = _layer_transform(router, dtype)
+
+        def prefill(enc_params, tokens, extras=None):
+            sink: list = []
+            L.set_flags_sink(sink if with_flags else None)
+            try:
+                params = _use_tree(enc_params, router, dtype)
+                top_flags = L.drain_flags() if with_flags else None
+                extras = extras or {}
+                out = lm.forward(cfg, params, tokens, dtype=dtype,
+                                 chunk=chunk, layer_transform=lt,
+                                 collect_flags=with_flags, **extras)
+                if with_flags:  # the output head decodes after the scans
+                    top_flags = top_flags + L.drain_flags()
+            finally:
+                L.set_flags_sink(None)
+            if not with_flags:
+                return out
+            logits, flags = out
+            return logits, {"top": top_flags, **flags}
+
+        return prefill
+
+    if with_flags:
+        raise ValueError("with_flags needs the decode-at-use prefill")
     decode = _decoder(plan, dtype, backend)
 
     def prefill(enc_params, tokens, extras=None):

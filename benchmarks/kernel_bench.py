@@ -6,13 +6,14 @@ Reports, per kernel: reference-path us/call and the STRUCTURAL cost of the
 kernel on TPU v5e (bytes moved, flops, roofline-bound time).
 
 ``--json BENCH_kernels.json`` additionally times the in-place decode on BOTH
-backends per weight shape, sweeps fused decode+matmul tiles, and writes the
-``bench_kernels/v2`` artifact that ``protection.AutotuneTable`` consumes —
-per-leaf backend AND tile choices are then reproducible from a checked-in
-file instead of call-site defaults (``--tiles-smoke`` shrinks the sweep for
-CI).  On a CPU host the Pallas timings are interpret-mode (always slower —
-recorded, with ``pallas_interpret: true``, so a TPU re-run can overwrite
-them).
+backends per weight shape, sweeps fused decode+matmul tiles for the float
+path AND the int8 requantize-epilogue path, and writes the
+``bench_kernels/v3`` artifact that ``protection.AutotuneTable`` consumes —
+per-leaf backend AND tile choices (float ``tiles`` + ``int8_tiles``) are
+then reproducible from a checked-in file instead of call-site defaults
+(``--tiles-smoke`` shrinks the sweep for CI).  On a CPU host the Pallas
+timings are interpret-mode (always slower — recorded, with
+``pallas_interpret: true``, so a TPU re-run can overwrite them).
 """
 from __future__ import annotations
 
@@ -117,8 +118,11 @@ def bench_backend_decode(shapes=AUTOTUNE_SHAPES, reps=3):
 
 def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
     """Sweep fused decode+matmul tiles per shape and record the winner into
-    each entry (``tiles`` + ``fused_us`` — the ``bench_kernels/v2`` fields).
-    Also times the XLA decode-then-matmul reference as ``fused_ref_us``."""
+    each entry (``tiles`` + ``fused_us``), plus the int8 requantize-epilogue
+    sweep (``int8_tiles`` + ``fused_int8_us`` — the ``bench_kernels/v3``
+    fields; the epilogue always runs full-K tiles, so only (bm, bn) sweep).
+    Also times the XLA references: decode-then-matmul as ``fused_ref_us``
+    and decode-then-matmul-then-requantize as ``int8_ref_us``."""
     from repro.kernels import ref
     from repro.kernels.ecc_qmatmul import ecc_qmatmul
     rng = np.random.default_rng(11)
@@ -126,6 +130,9 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
         k, n = e["shape"]
         enc = _enc_weight(rng, k, n)
         a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+        a_scale = jnp.asarray(rng.uniform(0.005, 0.02, size=(m, 1))
+                              .astype(np.float32))
+        w_scale = jnp.float32(0.01)
         best_us, best_tiles = None, None
         for bm, bn, bk in tile_sweep:
             f = jax.jit(lambda a_, e_, t=(bm, bn, bk): ecc_qmatmul(
@@ -137,11 +144,26 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
         e["fused_us"] = round(best_us, 1)
         e["fused_ref_us"] = round(
             _time(jax.jit(ref.ecc_qmatmul_ref), a, enc, reps=reps), 1)
+        # int8 requantize epilogue: int32 acc * (a_scale*w_scale) -> bf16
+        best_us, best_tiles = None, None
+        for bm, bn in sorted({(t[0], t[1]) for t in tile_sweep}):
+            f = jax.jit(lambda a_, e_, s_, t=(bm, bn): ecc_qmatmul(
+                a_, e_, w_scale, a_scale=s_, bm=t[0], bn=t[1]))
+            us = _time(f, a, enc, a_scale, reps=reps)
+            if best_us is None or us < best_us:
+                best_us, best_tiles = us, (bm, bn, 0)
+        e["int8_tiles"] = list(best_tiles)
+        e["fused_int8_us"] = round(best_us, 1)
+        ref_int8 = jax.jit(lambda a_, e_, s_: (
+            ref.ecc_qmatmul_ref(a_, e_).astype(jnp.float32) *
+            (s_ * w_scale)).astype(jnp.bfloat16))
+        e["int8_ref_us"] = round(_time(ref_int8, a, enc, a_scale, reps=reps),
+                                 1)
     return entries
 
 
 def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP) -> dict:
-    """Write BENCH_kernels.json in the ``bench_kernels/v2`` schema that
+    """Write BENCH_kernels.json in the ``bench_kernels/v3`` schema that
     ``protection.AutotuneTable`` loads (validated by round-tripping through
     it before writing)."""
     platform = jax.devices()[0].platform
@@ -152,7 +174,7 @@ def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP) -> dict:
     payload = {"schema": protection.BENCH_KERNELS_SCHEMA,
                "platform": platform,
                "pallas_interpret": platform != "tpu",
-               "op": "in-place-decode64",
+               "op": "in-place-decode64+fused-qmatmul",
                "entries": entries}
     protection.AutotuneTable.from_dict(payload)  # schema self-check
     with open(path, "w") as f:
@@ -166,7 +188,7 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-shape xla-vs-pallas decode + "
                          "fused-tile table (BENCH_kernels.json, "
-                         "bench_kernels/v2)")
+                         "bench_kernels/v3)")
     ap.add_argument("--tiles-smoke", action="store_true",
                     help="tiny fused-tile sweep (CI smoke; interpret mode)")
     args = ap.parse_args(argv)
@@ -181,10 +203,12 @@ def main(argv=None):
         payload = write_bench_kernels(args.json, tile_sweep=sweep)
         for e in payload["entries"]:
             tiles = "x".join(str(t) for t in e.get("tiles", ()))
+            i8 = "x".join(str(t) for t in e.get("int8_tiles", ()))
             print(f"autotune_decode_{e['shape'][0]}x{e['shape'][1]},"
                   f"xla={e['xla_us']:.0f}us,pallas={e['pallas_us']:.0f}us,"
                   f"best={e['best']},tiles={tiles},"
-                  f"fused={e.get('fused_us', 0):.0f}us")
+                  f"fused={e.get('fused_us', 0):.0f}us,int8_tiles={i8},"
+                  f"fused_int8={e.get('fused_int8_us', 0):.0f}us")
         print(f"# wrote {args.json} ({payload['platform']}, "
               f"pallas_interpret={payload['pallas_interpret']})")
 

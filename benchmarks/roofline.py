@@ -117,12 +117,17 @@ def analyze(rec):
 def fused_vs_decode_rows(bench_path="BENCH_kernels.json", m=128):
     """Structural roofline bound for the fused decode+matmul vs the XLA
     decode-then-matmul path, per autotune shape — the bound the measured
-    BENCH_kernels ``fused_us`` / ``fused_ref_us`` numbers compare against.
+    BENCH_kernels ``fused_us`` / ``fused_ref_us`` / ``fused_int8_us``
+    numbers compare against.
 
-    fused:  HBM traffic = a (M*K int8) + enc (K*N uint8) + out (M*N*4);
-            decode never round-trips through HBM.
+    fused (raw int8): HBM traffic = a (M*K int8) + enc (K*N uint8) +
+            out (M*N*4); decode never round-trips through HBM.
     decode-then-matmul: adds a full decoded-weight write + read (2*K*N),
             the exact per-step cost the decode-at-use serve step deletes.
+    float serving path: bf16 activations (2*M*K) + f32 out, bf16 MXU peak.
+    int8 fused epilogue: int8 activations (M*K — HALF the float path's
+            activation traffic) + bf16 out (M*N*2 — half the f32 out),
+            int8 MXU peak (2x the bf16 MACs/s).
     """
     shapes = [(1024, 1024), (2048, 4096)]
     try:
@@ -137,13 +142,26 @@ def fused_vs_decode_rows(bench_path="BENCH_kernels.json", m=128):
         split_bytes = fused_bytes + 2 * k * n
         t_fused = max(flops / PEAK_INT8, fused_bytes / HBM_BW) * 1e6
         t_split = max(flops / PEAK_INT8, split_bytes / HBM_BW) * 1e6
+        # serving-path structural rows: float (bf16 a, f32 out, bf16 MXU)
+        # vs the int8 epilogue (int8 a, bf16 out, int8 MXU)
+        float_bytes = 2 * m * k + k * n + 4 * m * n
+        int8_bytes = m * k + k * n + 2 * m * n
+        t_float = max(flops / PEAK_FLOPS, float_bytes / HBM_BW) * 1e6
+        t_int8 = max(flops / PEAK_INT8, int8_bytes / HBM_BW) * 1e6
         r = {"shape": [k, n], "fused_roof_us": round(t_fused, 2),
              "decode_then_matmul_roof_us": round(t_split, 2),
-             "traffic_ratio": round(split_bytes / fused_bytes, 3)}
+             "traffic_ratio": round(split_bytes / fused_bytes, 3),
+             "float_fused_roof_us": round(t_float, 2),
+             "int8_fused_roof_us": round(t_int8, 2),
+             "int8_speedup": round(t_float / t_int8, 3),
+             "int8_traffic_ratio": round(float_bytes / int8_bytes, 3)}
         rows.append(r)
         print(f"roofline_fused_qmatmul_{k}x{n},{t_fused:.1f},"
               f"decode_then_matmul_us={t_split:.1f}"
               f"_traffic_ratio={r['traffic_ratio']}")
+        print(f"roofline_int8_fused_{k}x{n},{t_int8:.1f},"
+              f"float_us={t_float:.1f}_speedup={r['int8_speedup']}"
+              f"_traffic_ratio={r['int8_traffic_ratio']}")
     return rows
 
 

@@ -8,24 +8,43 @@ the VPU bit-twiddling overlaps with MXU matmul work on neighbouring tiles.
 Layout: W (K, N) int8 row-major -> 8-byte ECC blocks run along N, so any
 (BK, BN) tile with BN % 8 == 0 contains whole blocks and decodes locally.
 
-Grid (ceil(M/BM), ceil(N/BN), ceil(K/BK)), K innermost; edge tiles are
+Grid (ceil(N/BN), ceil(M/BM), ceil(K/BK)) — K innermost so each output
+tile's accumulation visits are CONSECUTIVE (a TPU output block only
+persists across back-to-back grid steps; the old M-outermost order kept
+that property too, this one adds decode reuse). A VMEM scratch holds the
+decoded K-strip for the current N tile: the first M tile decodes each
+(BK, BN) weight tile into its strip slot, every later M tile reuses it —
+each weight tile is ECC-decoded ONCE per (N, K) tile instead of
+``ceil(M/BM)`` times, so the VPU decode work no longer scales with batch.
+The N grid dim is marked ``parallel`` (``dimension_semantics``) so Mosaic
+can pipeline/split independent output column strips; M and K carry the
+scratch/accumulation dependences and stay ``arbitrary``. Edge tiles are
 masked (activation columns past K zeroed, flag counts restricted to real
 blocks) so production shapes need no divisibility beyond N % 8 == 0.
-Default tiles 128x128x128: MXU-aligned (multiples of 128 in every matmul
-dim), VMEM footprint per step = BM*BK (a) + BK*BN (w, uint8) + BM*BN*4
-(acc) = 16+16+64 KiB for the int8 path.
+Default tiles 128x128 with full-K strips (bk=0): VMEM footprint = BM*K (a)
++ K*BN (w enc) + ~K*BN (decoded strip) + BM*BN*4 (acc) — 16+16+16+64 KiB
+per 128-wide strip of a K=128 layer. The decoded strip is ~K*BN bytes
+REGARDLESS of ``bk`` (decode-once needs the whole K strip resident), so
+for huge-K layers shrink ``bn`` to bound VMEM; ``bk`` only sizes the a/w
+staging blocks.
 
-Two activation paths share the kernel:
+Three activation paths share the kernel:
 
-* int8 ``a`` -> int32 accumulator (the quantized-serving MXU path);
+* int8 ``a`` -> int32 accumulator (the raw quantized MXU path);
+* int8 ``a`` + ``a_scale`` -> the fused REQUANTIZE EPILOGUE: the int32
+  accumulator is scaled by ``a_scale * w_scale`` (optionally after an int32
+  bias add) and cast to ``out_dtype`` (bf16 default) in VMEM — int8 MXU
+  throughput plus halved output traffic, a drop-in replacement for the
+  float path in quantized serving;
 * float ``a`` (bf16/f32, requires ``w_scale``) -> the decoded tile is
   dequantized in VMEM (``(q * w_scale).astype(a.dtype)``) and the matmul
   accumulates f32 — the value path is identical to decode-then-matmul, so
   fused serving stays numerically identical to the per-step baseline.
 
 ``with_flags=True`` additionally returns ``(corrected, due)`` int32 counts
-over all weight blocks (each block counted ONCE, on the first M tile) — the
-per-layer fault-accounting side channel the serving step surfaces.
+over all weight blocks. Counting happens inside the same predicated block
+as the decode itself (first M tile only), so the flag totals double as a
+runtime witness that each weight tile decodes exactly once per (N, K) tile.
 """
 from __future__ import annotations
 
@@ -34,39 +53,41 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ecc
 from . import ecc_decode
 
 
-def _kernel(a_ref, w_ref, scale_ref, rowmask_ref, cols_ref, out_ref,
-            flags_ref, *, dims, float_path):
+def _kernel(*refs, dims, path, has_bias):
     m, n, k = dims
-    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    if path == "requant":
+        (a_ref, w_ref, scale_ref, ascale_ref) = refs[:4]
+        bias_ref = refs[4] if has_bias else None
+        rowmask_ref, cols_ref, out_ref, flags_ref, wdec_ref = refs[4 + has_bias:]
+    else:
+        (a_ref, w_ref, scale_ref, rowmask_ref, cols_ref,
+         out_ref, flags_ref, wdec_ref) = refs
+    j, i, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    bm, bk = a_ref.shape
 
-    @pl.when(jnp.logical_and(jnp.logical_and(i == 0, j == 0), kk == 0))
+    @pl.when(jnp.logical_and(i == 0, kk == 0))
     def _init_flags():
         flags_ref[...] = jnp.zeros_like(flags_ref)
 
-    @pl.when(kk == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    a = a_ref[...]  # (BM, BK)
-    bm, bk = a.shape
-    # mask activation columns past K so edge tiles contribute nothing
-    kcol = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
-    a = jnp.where(kcol < k, a, jnp.zeros_like(a))
-
-    w_enc = w_ref[...]  # (BK, BN) uint8, ECC-encoded
-    bk2, bn = w_enc.shape
-    dec, fl = ecc_decode._decode_tile(
-        w_enc.reshape(bk2 * bn // 8, 8), rowmask_ref[...], cols_ref[...])
-
-    # per-block flag counts: each weight block counted once (first M tile),
-    # restricted to real (non-edge-padding) blocks
+    # decode ONCE per (N, K) tile — the first M tile fills this K-strip slot
+    # of the VMEM scratch, every later M tile reuses it. Flag counting lives
+    # inside the same predicate (each real block counted exactly once,
+    # M-grid independent by construction: re-decoding would multiply the
+    # counts by the M tile count).
     @pl.when(i == 0)
-    def _count():
+    def _decode():
+        w_enc = w_ref[...]  # (BK, BN) uint8, ECC-encoded
+        bk2, bn = w_enc.shape
+        dec, fl = ecc_decode._decode_tile(
+            w_enc.reshape(bk2 * bn // 8, 8), rowmask_ref[...], cols_ref[...])
+        wdec_ref[pl.ds(kk * bk2, bk2), :] = jax.lax.bitcast_convert_type(
+            dec.reshape(bk2, bn), jnp.int8)
         blk = fl.reshape(bk2, bn // 8)
         rowv = (kk * bk2 +
                 jax.lax.broadcasted_iota(jnp.int32, blk.shape, 0)) < k
@@ -78,26 +99,57 @@ def _kernel(a_ref, w_ref, scale_ref, rowmask_ref, cols_ref, out_ref,
         flags_ref[0, 0] += jnp.sum(single.astype(jnp.int32))
         flags_ref[0, 1] += jnp.sum(double.astype(jnp.int32))
 
-    w_q = jax.lax.bitcast_convert_type(dec.reshape(bk2, bn), jnp.int8)
-    if float_path:
+    a = a_ref[...]  # (BM, BK)
+    # mask activation columns past K so edge tiles contribute nothing
+    kcol = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
+    a = jnp.where(kcol < k, a, jnp.zeros_like(a))
+    w_q = wdec_ref[pl.ds(kk * bk, bk), :]
+
+    if path == "float":
         w = (w_q.astype(jnp.float32) * scale_ref[0, 0]).astype(a.dtype)
+
+        @pl.when(kk == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
         out_ref[...] += jax.lax.dot_general(
             a, w, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-    else:
+    elif path == "int8":
+        @pl.when(kk == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
         out_ref[...] += jax.lax.dot_general(
             a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
+    else:  # requant epilogue: full-K tile (single kk), exact int32 acc
+        acc = jax.lax.dot_general(
+            a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        if has_bias:
+            acc = acc + bias_ref[...]  # (1, BN) int32, accumulator scale
+        s = ascale_ref[...] * scale_ref[0, 0]  # (BM, 1) f32
+        out_ref[...] = (acc.astype(jnp.float32) * s).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
-                                             "with_flags"))
+                                             "with_flags", "out_dtype"))
 def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
+                a_scale=None, bias=None, out_dtype=None,
                 bm: int = 128, bn: int = 128, bk: int = 0,
                 interpret: bool = True, with_flags: bool = False):
     """``a (M,K) @ decode(w_enc (K,N) uint8)``, decode fused into the matmul.
 
     int8 ``a``   -> (M, N) int32 accumulator (``w_scale`` ignored).
+    int8 ``a`` + ``a_scale`` (per-row ``(M,)``/``(M,1)`` or scalar, requires
+                    ``w_scale``) -> the fused requantize epilogue:
+                    ``(acc [+ bias]) * (a_scale * w_scale)`` cast to
+                    ``out_dtype`` (default bf16) in VMEM. ``bias`` is an
+                    optional (N,) int32 at the accumulator scale. The tile is
+                    full-K (``bk`` ignored) so the int32 accumulation is one
+                    exact MXU pass — bit-identical to quantize->decode->
+                    matmul done in XLA.
     float ``a``  -> (M, N) f32 = ``a @ (decode(w_enc) * w_scale)`` — requires
                     ``w_scale``; pass ``bk=0`` (default: full K per tile) to
                     keep the accumulation order identical to one XLA dot.
@@ -105,7 +157,10 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
                     #double-detected) over all weight blocks.
 
     Tiles need not divide (M, N, K) — edge tiles are masked. N % 8 == 0 is
-    structural (ECC blocks run along N).
+    structural (ECC blocks run along N). The first M tile decodes each
+    weight tile into a K-strip VMEM scratch that later M tiles reuse, so
+    per-call decode work is ceil(N/BN) * ceil(K/BK) tiles — independent of
+    M.
     """
     m, k = a.shape
     k2, n = w_enc.shape
@@ -114,36 +169,70 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
     if float_path and w_scale is None:
         raise ValueError("float activations need w_scale for the in-VMEM "
                          "dequantization")
-    if bk == 0:
+    if float_path and a_scale is not None:
+        raise ValueError("a_scale is the int8 requantize epilogue; float "
+                         "activations carry their own scale")
+    requant = (not float_path) and a_scale is not None
+    if requant and w_scale is None:
+        raise ValueError("the requantize epilogue needs w_scale")
+    if bias is not None and not requant:
+        raise ValueError("bias is only fused by the requantize epilogue")
+    path = "float" if float_path else ("requant" if requant else "int8")
+    if bk == 0 or requant:
         bk = k  # full-K tile: one dot per output tile, XLA-identical order
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     bn = max(8, bn - bn % 8)  # whole ECC blocks per tile
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    grid = (pl.cdiv(n, bn), pl.cdiv(m, bm), pl.cdiv(k, bk))
     scale = jnp.asarray(w_scale if w_scale is not None else 1.0,
                         jnp.float32).reshape(1, 1)
-    out_dtype = jnp.float32 if float_path else jnp.int32
-    kern = functools.partial(_kernel, dims=(m, n, k), float_path=float_path)
+    if path == "float":
+        out_dt = jnp.float32
+    elif path == "int8":
+        out_dt = jnp.int32
+    else:
+        out_dt = jnp.dtype(out_dtype) if out_dtype is not None else jnp.bfloat16
+    kern = functools.partial(_kernel, dims=(m, n, k), path=path,
+                             has_bias=bias is not None)
+
+    inputs = [a, w_enc, scale]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda j, i, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda j, i, kk: (kk, j)),
+        pl.BlockSpec((1, 1), lambda j, i, kk: (0, 0)),
+    ]
+    if requant:
+        ascale = jnp.broadcast_to(
+            jnp.asarray(a_scale, jnp.float32).reshape(-1, 1)
+            if jnp.ndim(a_scale) else
+            jnp.asarray(a_scale, jnp.float32).reshape(1, 1), (m, 1))
+        inputs.append(ascale)
+        in_specs.append(pl.BlockSpec((bm, 1), lambda j, i, kk: (i, 0)))
+        if bias is not None:
+            inputs.append(jnp.asarray(bias, jnp.int32).reshape(1, n))
+            in_specs.append(pl.BlockSpec((1, bn), lambda j, i, kk: (0, j)))
+    inputs += [jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE)]
+    in_specs += [
+        pl.BlockSpec((7, 8), lambda j, i, kk: (0, 0)),
+        pl.BlockSpec((8, 8), lambda j, i, kk: (0, 0)),
+    ]
+
     out, flags = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((7, 8), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((8, 8), lambda i, j, kk: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
+            pl.BlockSpec((1, 2), lambda j, i, kk: (j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, n), out_dtype),
-            jax.ShapeDtypeStruct((1, 2), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), out_dt),
+            jax.ShapeDtypeStruct((grid[0], 2), jnp.int32),
         ],
+        scratch_shapes=[pltpu.VMEM((grid[2] * bk, bn), jnp.int8)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(a, w_enc, scale, jnp.asarray(ecc.ROWMASK64),
-      jnp.asarray(ecc.COLS64_BYBYTE))
+    )(*inputs)
     if with_flags:
-        return out, flags.reshape(2)
+        return out, flags.sum(axis=0)
     return out

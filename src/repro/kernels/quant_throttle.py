@@ -19,18 +19,29 @@ from repro.core import quant, wot
 DEFAULT_BLK = 4096
 
 
-def _absmax_kernel(w_ref, out_ref):
+def _row_valid(i, blk, nblk, shape):
+    """Row mask for the (possibly ragged) edge block: rows past nblk are
+    grid padding whose contents are unspecified."""
+    rows = i * blk + jax.lax.broadcasted_iota(jnp.int32, shape, dimension=0)
+    return rows < nblk
+
+
+def _absmax_kernel(w_ref, out_ref, *, blk, nblk):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[0] = jnp.maximum(out_ref[0], jnp.max(jnp.abs(w_ref[...])))
+    w = jnp.abs(w_ref[...])
+    w = jnp.where(_row_valid(i, blk, nblk, w.shape), w, jnp.zeros_like(w))
+    out_ref[0] = jnp.maximum(out_ref[0], jnp.max(w))
 
 
-def _qt_kernel(w_ref, scale_ref, q_ref):
+def _qt_kernel(w_ref, scale_ref, q_ref, *, blk, nblk):
+    i = pl.program_id(0)
     w = w_ref[...]                       # (bn, 8) f32
+    w = jnp.where(_row_valid(i, blk, nblk, w.shape), w, jnp.zeros_like(w))
     scale = scale_ref[0]
     q = jnp.clip(jnp.round(w / scale), -quant.QMAX, quant.QMAX)
     pos = jax.lax.broadcasted_iota(jnp.int32, w.shape, dimension=1)
@@ -44,13 +55,16 @@ def quantize_throttle(w_blocks: jnp.ndarray, *, blk: int = DEFAULT_BLK,
                       interpret: bool = True):
     """(nblk, 8) f32 -> (int8 q (nblk, 8) WOT-compliant, scale f32 ()).
 
-    Deployment-exact: equals quantize() then throttle_q()."""
+    nblk need not divide into ``blk`` tiles: the grid is ``pl.cdiv`` and the
+    edge block is masked by a row-iota, so arbitrary leaf sizes quantize
+    without host-side padding. Deployment-exact: equals quantize() then
+    throttle_q()."""
     nblk = w_blocks.shape[0]
     blk = min(blk, nblk)
-    assert nblk % blk == 0
+    grid = (pl.cdiv(nblk, blk),)
     absmax = pl.pallas_call(
-        _absmax_kernel,
-        grid=(nblk // blk,),
+        functools.partial(_absmax_kernel, blk=blk, nblk=nblk),
+        grid=grid,
         in_specs=[pl.BlockSpec((blk, 8), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
@@ -58,8 +72,8 @@ def quantize_throttle(w_blocks: jnp.ndarray, *, blk: int = DEFAULT_BLK,
     )(w_blocks.astype(jnp.float32))
     scale = jnp.maximum(absmax, 1e-12) / quant.QMAX
     q = pl.pallas_call(
-        _qt_kernel,
-        grid=(nblk // blk,),
+        functools.partial(_qt_kernel, blk=blk, nblk=nblk),
+        grid=grid,
         in_specs=[pl.BlockSpec((blk, 8), lambda i: (i, 0)),
                   pl.BlockSpec((1,), lambda i: (0,))],
         out_specs=pl.BlockSpec((blk, 8), lambda i: (i, 0)),

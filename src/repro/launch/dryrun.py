@@ -104,7 +104,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
              sp=True, decode_per_step=True, decode_at_use=None, chunk=2048,
              save_hlo: str | None = None, microbatch=None,
              policy: str | None = None, smoke: bool = False, layers=None,
-             with_flags=None, mesh_shape=None,
+             with_flags=None, mesh_shape=None, act_quant: str | None = None,
              baseline: dict | None = None) -> dict:
     """Compile one cell and return its JSONL record.
 
@@ -114,6 +114,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
                    into each weight's point of use; False compiles the
                    whole-tree decode-per-step ablation. The record carries
                    ``decode_mode`` so the two compile side by side.
+    act_quant:     "dynamic" compiles the int8 activation-quantized at-use
+                   step (``decode_mode`` becomes "at-use-int8"); the record
+                   carries ``act_quant`` so the int8 cell diffs against the
+                   float at-use cell of the same policy.
     layers:        optional n_layers override (depth scaling for the
                    decoded-tree HBM story at smoke scale).
     baseline:      a previous record (same cell, ``unprotected`` policy) to
@@ -140,11 +144,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
         decode_at_use = decode_per_step
     if shape.kind == "decode" and not decode_per_step:
         decode_at_use = False  # decode-once baseline: weights arrive decoded
+    if act_quant and not (serving and decode_at_use):
+        act_quant = None  # int8 activations ride the at-use serving path only
     if serving:
         rec["decode_mode"] = (
+            "at-use-int8" if act_quant else
             "at-use" if decode_at_use else
             "per-step" if (decode_per_step or shape.kind == "prefill")
             else "once")
+        if act_quant:
+            rec["act_quant"] = act_quant
     if policy and serving:
         rec["policy"] = policy
     ok, why = specs.cell_supported(cfg, shape)
@@ -158,6 +167,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
               else {"chunk": chunk})
         if serving:
             kw["decode_at_use"] = decode_at_use
+            if act_quant:
+                kw["act_quant"] = act_quant
         if shape.kind == "train" and microbatch is not None:
             kw["microbatch"] = microbatch
         if shape.kind == "train":
@@ -245,6 +256,11 @@ def main():
     ap.add_argument("--serve-modes", default="at-use,per-step",
                     help="comma list of decode modes compiled per policy "
                          "serving cell (at-use | per-step)")
+    ap.add_argument("--act-quant", action="store_true",
+                    help="also compile an int8 activation-quantized at-use "
+                         "cell per policy serving cell (decode_mode "
+                         "'at-use-int8', dynamic per-token scales), diffed "
+                         "against the float at-use cell")
     ap.add_argument("--mesh", default=None, metavar="DxM[xP]",
                     help="override mesh dims, e.g. 2x4 (data x model)")
     ap.add_argument("--devices", type=int, default=512,
@@ -282,6 +298,11 @@ def main():
     for m in modes:
         if m not in ("at-use", "per-step"):
             ap.error(f"unknown serve mode {m!r}; one of at-use, per-step")
+    if args.act_quant:
+        if args.no_decode_per_step:
+            ap.error("--act-quant needs the decode-at-use serving path; "
+                     "drop --no-decode-per-step")
+        modes.append("at-use-int8")
     if args.no_decode_per_step:
         modes = [None]  # decode-once baseline: the mode axis is meaningless
 
@@ -357,8 +378,32 @@ def main():
                       f"{f' mode={mode}' if mode else ''} ...", flush=True)
                 kw = dict(common)
                 if mode is not None:
-                    kw["decode_at_use"] = mode == "at-use"
+                    kw["decode_at_use"] = mode != "per-step"
+                    if mode == "at-use-int8":
+                        kw["act_quant"] = "dynamic"
                 rec = run_cell(a, s, mp, policy=pol, baseline=baseline, **kw)
+                if mode == "at-use-int8":
+                    # the delta the int8 path is judged by: vs the FLOAT
+                    # at-use cell of the same (cell, policy); null deltas
+                    # when that cell is missing (e.g. --serve-modes without
+                    # at-use) rather than silently diffing against nothing
+                    fkey = (a, s, mesh_name, pol, "at-use")
+                    frec = prev.get(fkey)
+                    if rec.get("status") == "ok":
+                        deltas = {"hbm_delta_bytes": None,
+                                  "wire_delta_bytes": None}
+                        if frec and frec.get("status") == "ok":
+                            fpeak = _peak_bytes(frec.get("memory", {}))
+                            peak = _peak_bytes(rec.get("memory", {}))
+                            if None not in (peak, fpeak):
+                                deltas["hbm_delta_bytes"] = peak - fpeak
+                            fwire = frec.get("collectives", {}).get(
+                                "total_wire_bytes")
+                            if fwire is not None:
+                                deltas["wire_delta_bytes"] = (
+                                    rec["collectives"]["total_wire_bytes"]
+                                    - fwire)
+                        rec["vs_float_at_use"] = deltas
                 emit(rec)
                 if rec.get("status") in ("ok", "skipped"):
                     done.add((a, s, mesh_name, pol, key_mode))

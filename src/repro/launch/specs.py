@@ -116,7 +116,7 @@ def serving_plan(cfg: ArchConfig, mesh, *, fsdp=None, policy=None):
 
 def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                 decode_per_step=True, decode_at_use=None, with_flags=False,
-                policy=None, plan=None, abstract=None):
+                policy=None, plan=None, abstract=None, act_quant=None):
     """Protected-serving decode cell (one new token, KV cache of seq_len).
 
     The cell is plan-driven: ``plan`` (or ``policy``, materialized here)
@@ -128,7 +128,9 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     decode_at_use (default: follows decode_per_step) picks the fused
     decode-at-use step; False compiles the whole-tree decode-per-step
     ablation. with_flags adds the per-layer (corrected, DUE) counts as a
-    third (replicated) output."""
+    third (replicated) output. act_quant ("dynamic" | "static" | "plan")
+    compiles the int8 activation-quantized at-use step instead of the
+    float one."""
     lm.set_sharding_ctx(None)
     if plan is None:
         plan, abstract = serving_plan(cfg, mesh, fsdp=fsdp, policy=policy)
@@ -149,7 +151,8 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     step_inner = protected.make_serve_step(cfg, plan=plan,
                                            decode_per_step=decode_per_step,
                                            decode_at_use=decode_at_use,
-                                           with_flags=with_flags)
+                                           with_flags=with_flags,
+                                           act_quant=act_quant)
 
     def step(enc_params, cache, tokens, pos):
         return step_inner(enc_params, cache, tokens, pos)
@@ -164,7 +167,7 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
 
 def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                  chunk=2048, sp=None, decode_at_use=True, with_flags=False,
-                 policy=None, plan=None, abstract=None):
+                 policy=None, plan=None, abstract=None, act_quant=None):
     """Protected-serving prefill cell: full-sequence forward -> logits.
 
     sp auto: OFF when head-sharded attention can engage (n_heads divides the
@@ -203,7 +206,8 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
 
     prefill = protected.make_prefill(cfg, plan=plan, chunk=chunk,
                                      decode_at_use=decode_at_use,
-                                     with_flags=with_flags)
+                                     with_flags=with_flags,
+                                     act_quant=act_quant)
 
     def step(enc_params, tokens, extras):
         return prefill(enc_params, tokens, extras)
@@ -221,14 +225,15 @@ def cell(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw):
         return train_cell(cfg, shape, mesh,
                           **{k: v for k, v in kw.items()
                              if k not in ("policy", "plan", "abstract",
-                                          "decode_at_use", "with_flags")})
+                                          "decode_at_use", "with_flags",
+                                          "act_quant")})
     if shape.kind == "prefill":
         return prefill_cell(cfg, shape, mesh, **kw)
     return decode_cell(cfg, shape, mesh,
                        **{k: v for k, v in kw.items()
                           if k in ("fsdp", "decode_per_step", "decode_at_use",
                                    "with_flags", "policy", "plan",
-                                   "abstract")})
+                                   "abstract", "act_quant")})
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:

@@ -76,6 +76,36 @@ def drain_flags():
     return total
 
 
+# --------------------------------------------------------------------------
+# activation-stats sink: the int8 calibration pass sets a dict sink; every
+# decode-at-use matmul records its float activation absmax keyed by the
+# leaf's plan path, and lm.forward drains per scanned layer so the scan
+# emits per-layer maxima (reduced to per-leaf static a_scale values by
+# serving.protected.calibrate_act_scales). None => recording is a no-op.
+# --------------------------------------------------------------------------
+
+_ACT_SINK: dict | None = None
+
+
+def set_act_sink(sink: dict | None):
+    global _ACT_SINK
+    _ACT_SINK = sink
+
+
+def record_act(key: str, absmax):
+    if _ACT_SINK is not None:
+        prev = _ACT_SINK.get(key)
+        _ACT_SINK[key] = absmax if prev is None else jnp.maximum(prev, absmax)
+
+
+def drain_acts() -> dict:
+    """Clear and return the recorded {leaf path: absmax f32} map."""
+    out = dict(_ACT_SINK) if _ACT_SINK else {}
+    if _ACT_SINK:
+        _ACT_SINK.clear()
+    return out
+
+
 def constrain_heads(t):
     """(B, H, S, D) attention tensor -> shard heads over 'model' when the
     head count divides the axis. Keeps softmax/scores fully local per shard
@@ -292,7 +322,8 @@ def _proj(x, w, b=None, wt=Identity):
     else:
         y = x @ w.astype(x.dtype)
     if b is not None:
-        y = y + b.astype(x.dtype)
+        # y's dtype, not x's: int8-quantized activations produce float y
+        y = y + b.astype(y.dtype)
     return y
 
 

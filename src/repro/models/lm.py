@@ -225,7 +225,8 @@ def gqa_or_mla(cfg, p, x, positions, wt, chunk):
 
 def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
             enc_embeds=None, wt=Identity, dtype=jnp.bfloat16,
-            chunk: int = 2048, layer_transform=None, collect_flags=False):
+            chunk: int = 2048, layer_transform=None, collect_flags=False,
+            collect_acts=False):
     """tokens: (B, S) int32 -> logits (B, S', V). For vlm, prefix_embeds
     (B, P, D) is prepended; for encdec, enc_embeds (B, Se, D) feeds the
     encoder (frontends are stubs per the assignment). layer_transform maps
@@ -234,8 +235,15 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
     collect_flags=True drains the layers-module fault-flags sink once per
     scanned layer and returns ``(logits, flags)`` where flags maps each
     scanned subtree ("layers", "tail", "enc_layers") to a (n, 2) int32
-    array of per-layer (corrected, due) counts."""
+    array of per-layer (corrected, due) counts.
+
+    collect_acts=True drains the activation-stats sink the same way and
+    returns ``(logits, acts)`` (or ``(logits, flags, acts)`` with both)
+    where acts maps each scanned subtree to a {leaf path: (n,) f32 absmax}
+    dict — the int8 calibration pass reduces these to static a_scale
+    values."""
     flags: dict = {}
+    acts: dict = {}
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family == "vlm" and prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
@@ -244,14 +252,20 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
+    def drain():
+        return (L.drain_flags() if collect_flags else None,
+                L.drain_acts() if collect_acts else None)
+
     enc_out = None
     if cfg.family == "encdec":
-        enc_out, enc_flags = _encode(cfg, params, enc_embeds, wt=wt,
-                                     dtype=dtype,
-                                     layer_transform=layer_transform,
-                                     collect_flags=collect_flags)
+        enc_out, enc_flags, enc_acts = _encode(
+            cfg, params, enc_embeds, wt=wt, dtype=dtype,
+            layer_transform=layer_transform, collect_flags=collect_flags,
+            collect_acts=collect_acts)
         if collect_flags:
             flags["enc_layers"] = enc_flags
+        if collect_acts:
+            acts["enc_layers"] = enc_acts
 
     lt_layers = _scoped_lt(layer_transform, "layers")
     lt_tail = _scoped_lt(layer_transform, "tail")
@@ -265,12 +279,14 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
             x = _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk)
         else:
             x = _block_full(cfg, lp, x, positions, wt, chunk)
-        return x, (L.drain_flags() if collect_flags else None)
+        return x, drain()
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, layer_flags = jax.lax.scan(blk_fn, x, params["layers"])
+    x, (layer_flags, layer_acts) = jax.lax.scan(blk_fn, x, params["layers"])
     if collect_flags:
         flags["layers"] = layer_flags
+    if collect_acts:
+        acts["layers"] = layer_acts
 
     if cfg.family == "hybrid" and "tail" in params:
         def tail_blk(carry, lp):
@@ -281,17 +297,25 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
                                                           cfg.norm), cfg, wt)
             x = x + L.swiglu(lp["rg0_mlp"], L.apply_norm(x, lp["rg0_ln2"],
                                                          cfg.norm), wt)
-            return x, (L.drain_flags() if collect_flags else None)
-        x, tail_flags = jax.lax.scan(
+            return x, drain()
+        x, (tail_flags, tail_acts) = jax.lax.scan(
             jax.checkpoint(tail_blk) if cfg.remat else tail_blk,
             x, params["tail"])
         if collect_flags:
             flags["tail"] = tail_flags
+        if collect_acts:
+            acts["tail"] = tail_acts
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     out = L.logits(x, head, wt)
-    return (out, flags) if collect_flags else out
+    if collect_flags and collect_acts:
+        return out, flags, acts
+    if collect_flags:
+        return out, flags
+    if collect_acts:
+        return out, acts
+    return out
 
 
 def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
@@ -306,7 +330,7 @@ def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
 
 
 def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None,
-            collect_flags=False):
+            collect_flags=False, collect_acts=False):
     x = enc_embeds.astype(dtype)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -319,11 +343,13 @@ def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None,
         x = x + L.gqa_attention(lp["attn"], L.apply_norm(x, lp["ln1"], cfg.norm),
                                 cfg, positions=positions, wt=wt, causal=False)
         x = x + L.gelu_mlp(lp["mlp"], L.apply_norm(x, lp["ln2"], cfg.norm), wt)
-        return x, (L.drain_flags() if collect_flags else None)
+        return x, (L.drain_flags() if collect_flags else None,
+                   L.drain_acts() if collect_acts else None)
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, enc_flags = jax.lax.scan(blk_fn, x, params["enc_layers"])
-    return L.apply_norm(x, params["enc_final_norm"], cfg.norm), enc_flags
+    x, (enc_flags, enc_acts) = jax.lax.scan(blk_fn, x, params["enc_layers"])
+    return (L.apply_norm(x, params["enc_final_norm"], cfg.norm), enc_flags,
+            enc_acts)
 
 
 def loss_fn(cfg: ArchConfig, params, batch, *, wt=Identity,

@@ -26,7 +26,7 @@ from repro.core import ecc
 
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
            "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA",
-           "BENCH_KERNELS_SCHEMA_V1"]
+           "BENCH_KERNELS_SCHEMA_V1", "BENCH_KERNELS_SCHEMA_V2"]
 
 
 class Backend:
@@ -113,7 +113,8 @@ class PallasBackend(Backend):
 BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
 
 BENCH_KERNELS_SCHEMA_V1 = "bench_kernels/v1"
-BENCH_KERNELS_SCHEMA = "bench_kernels/v2"
+BENCH_KERNELS_SCHEMA_V2 = "bench_kernels/v2"
+BENCH_KERNELS_SCHEMA = "bench_kernels/v3"
 
 
 class AutotuneTable:
@@ -124,12 +125,22 @@ class AutotuneTable:
     "pallas_us": float, "best": "xla"|"pallas"}``; ``bench_kernels/v2``
     entries additionally carry ``"tiles": [bm, bn, bk]`` (the fused
     decode+matmul kernel's best tile sweep result for that shape) and
-    ``"fused_us"``. v1 artifacts still load — their entries simply have no
-    tile opinion. :meth:`lookup` / :meth:`lookup_tiles` resolve an exact
-    shape match first, then the nearest entry by 64-bit-block count within
-    a 4x factor, else ``None`` — so the policy's default backend (and the
-    kernel's default tiles) still decide for shapes the benchmark never
-    measured.
+    ``"fused_us"``; ``bench_kernels/v3`` entries add the int8-epilogue rows
+    ``"int8_tiles": [bm, bn, 0]`` and ``"fused_int8_us"`` (the quantized
+    serving path — the epilogue always runs full-K tiles, so bk is 0).
+    v1/v2 artifacts still load — their entries simply have no (int8) tile
+    opinion.
+
+    :meth:`lookup` (backend choice) resolves an exact shape match first,
+    then the nearest entry by 64-bit-block count within a 4x factor, else
+    ``None`` — so the policy's default backend still decides for shapes the
+    benchmark never measured. :meth:`lookup_tiles` /
+    :meth:`lookup_int8_tiles` are softer: tiles are a hint, not a route, so
+    past the exact match they fall back to the nearest tile-bearing entry by
+    block count with NO ratio cap (the old behaviour silently used the
+    kernel's hardcoded defaults instead); :meth:`lookup_tiles_src` also
+    reports where the answer came from (``"exact"`` | ``"nearest"`` | ``""``)
+    so plans can surface extrapolated tile choices.
     """
 
     def __init__(self, entries=(), *, platform: str = "", source: str = "",
@@ -144,8 +155,9 @@ class AutotuneTable:
             e["shape"] = shape
             e.setdefault("nblocks",
                          int(math.prod(shape)) // 8 if shape else 0)
-            if e.get("tiles") is not None:
-                e["tiles"] = tuple(int(t) for t in e["tiles"])
+            for key in ("tiles", "int8_tiles"):
+                if e.get(key) is not None:
+                    e[key] = tuple(int(t) for t in e[key])
             self.entries.append(e)
         self.platform = platform
         self.source = source
@@ -177,28 +189,50 @@ class AutotuneTable:
         e = self._nearest(shape)
         return e["best"] if e is not None else None
 
+    def lookup_tiles_src(self, shape, *, key: str = "tiles") -> tuple:
+        """-> ``(tiles | None, source)`` for a weight shape, with source
+        ``"exact"`` (shape match), ``"nearest"`` (nearest tile-bearing entry
+        by block count — tiles extrapolate, unlike backend choices, so no
+        ratio cap), or ``""`` (no entry carries this tile key at all)."""
+        shape = tuple(int(s) for s in shape)
+        hit = self._by_shape.get(shape)
+        if hit is not None and hit.get(key):
+            return tuple(hit[key]), "exact"
+        with_tiles = [e for e in self.entries if e.get(key)]
+        nblk = int(math.prod(shape)) // 8 if shape else 0
+        if nblk <= 0 or not with_tiles:
+            return None, ""
+        nearest = min(with_tiles,
+                      key=lambda e: abs(math.log(max(e["nblocks"], 1) / nblk)))
+        return tuple(nearest[key]), "nearest"
+
     def lookup_tiles(self, shape) -> tuple | None:
-        """Best fused-kernel (bm, bn, bk) for a weight shape, or None (no
-        close-enough entry, or a v1 entry with no tile sweep)."""
-        e = self._nearest(shape)
-        tiles = e.get("tiles") if e is not None else None
-        return tuple(tiles) if tiles else None
+        """Best fused-kernel (bm, bn, bk) for a weight shape — exact match
+        or nearest tile-bearing entry; None only when no entry has tiles
+        (a v1 artifact)."""
+        return self.lookup_tiles_src(shape)[0]
+
+    def lookup_int8_tiles(self, shape) -> tuple | None:
+        """Best int8-epilogue (bm, bn, 0) tiles — same resolution as
+        :meth:`lookup_tiles`; None for pre-v3 artifacts."""
+        return self.lookup_tiles_src(shape, key="int8_tiles")[0]
 
     def to_dict(self) -> dict:
         return {"schema": self.schema, "platform": self.platform,
                 "entries": [{**e, "shape": list(e["shape"]),
-                             **({"tiles": list(e["tiles"])}
-                                if e.get("tiles") else {})}
+                             **{k: list(e[k]) for k in
+                                ("tiles", "int8_tiles") if e.get(k)}}
                             for e in self.entries]}
 
     @classmethod
     def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
         schema = d.get("schema", "")
-        if schema and schema not in (BENCH_KERNELS_SCHEMA,
-                                     BENCH_KERNELS_SCHEMA_V1):
+        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V2,
+                 BENCH_KERNELS_SCHEMA_V1)
+        if schema and schema not in known:
             raise ValueError(
-                f"unsupported autotune schema {schema!r} (expected "
-                f"{BENCH_KERNELS_SCHEMA!r} or {BENCH_KERNELS_SCHEMA_V1!r})")
+                f"unsupported autotune schema {schema!r} (expected one of "
+                f"{known})")
         return cls(d.get("entries", ()), platform=d.get("platform", ""),
                    source=source, schema=schema or BENCH_KERNELS_SCHEMA_V1)
 

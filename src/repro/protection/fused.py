@@ -5,17 +5,26 @@ with a ``ProtectedWeight`` view instead of decoding the whole tree up front.
 The view defers ALL codec work to the weight's point of use inside the
 model:
 
-* ``matmul(x)`` — the projection path. On the Pallas route for 2-D
-  same-shape in-place images this calls the fused ``kernels.ecc_qmatmul``
-  (decode in VMEM on the way to the MXU — zero decoded bytes ever hit HBM);
-  every other route decodes just this leaf inline and matmuls.
+* ``matmul(x)`` — the projection path. Float activations take the fused
+  ``kernels.ecc_qmatmul`` float path on the Pallas route (decode in VMEM on
+  the way to the MXU — zero decoded bytes ever hit HBM) or a per-leaf inline
+  decode + matmul elsewhere. With an activation-quant decision
+  (``act_quant`` = "static" calibrated scale | "dynamic" per-token absmax)
+  the view quantizes the activations to int8 first and runs the kernel's
+  fused requantize epilogue — int8 MXU throughput, int32 accumulation, and
+  a bf16 result straight out of VMEM. The non-fused int8 route (XLA backend,
+  flat images) is the literal quantize -> decode -> int8-matmul -> rescale
+  sequence, bit-identical to the epilogue (both scale one exact int32
+  accumulator by ``a_scale * w_scale`` in f32).
 * ``astype(dtype)`` — the fallback for non-projection uses (router einsums,
   gate matmuls, 3-D expert weights): decodes just this leaf, with flags.
 
 Both paths report ``(corrected, due)`` int32 counts through the ``record``
 callback, which the serving step wires to the per-layer flags sink in
 ``models.layers`` — the FT-CNN-style fault accounting that used to be
-discarded by the kernel.
+discarded by the kernel. An optional ``observe`` callback receives each
+float activation absmax — the calibration pass uses it to derive static
+``a_scale`` values from a small batch.
 
 ``models.layers._proj`` recognizes the view by its ``decode_at_use`` class
 attribute (duck typing — layers never imports this module).
@@ -26,8 +35,11 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
+from repro.core import quant
+
 from .backends import get_backend
 from .policy import decode_leaf_with_flags
+from .schemes import get_scheme
 from .tensor import ProtectedTensor
 
 __all__ = ["ProtectedWeight", "can_fuse"]
@@ -54,23 +66,42 @@ def is_matmul_weight(path: str) -> bool:
 class ProtectedWeight:
     """One leaf's decode-at-use view (see module docstring).
 
-    pt:      the (already per-layer-sliced) ProtectedTensor.
-    backend: Backend instance or name for this leaf's codec compute.
-    tiles:   optional (bm, bn, bk) for the fused kernel (from the autotune
-             table); None uses the kernel defaults (full-K tiles).
-    record:  ``record(corrected, due)`` flags callback (no-op when None).
+    pt:         the (already per-layer-sliced) ProtectedTensor.
+    backend:    Backend instance or name for this leaf's codec compute.
+    tiles:      optional (bm, bn, bk) for the fused float path (autotune);
+                None uses the kernel defaults (full-K tiles).
+    int8_tiles: optional (bm, bn, 0) for the fused int8 epilogue.
+    record:     ``record(corrected, due)`` flags callback (no-op when None).
+    act_quant:  None (float activations) | "dynamic" (per-token absmax) |
+                "static" (needs ``a_scale``) — the int8 MXU serve path.
+    a_scale:    calibrated static activation scale (float).
+    observe:    ``observe(absmax)`` callback fed each float activation's
+                absmax (the calibration hook; no-op when None).
     """
 
     decode_at_use = True  # the marker layers._proj dispatches on
 
     def __init__(self, pt: ProtectedTensor, backend="xla", *,
                  tiles: Optional[tuple] = None,
-                 record: Optional[Callable] = None):
+                 int8_tiles: Optional[tuple] = None,
+                 record: Optional[Callable] = None,
+                 act_quant: Optional[str] = None,
+                 a_scale: Optional[float] = None,
+                 observe: Optional[Callable] = None):
+        if act_quant not in (None, "static", "dynamic"):
+            raise ValueError(f"act_quant {act_quant!r}; one of "
+                             f"(None, 'static', 'dynamic')")
+        if act_quant == "static" and a_scale is None:
+            raise ValueError("act_quant='static' needs a calibrated a_scale")
         self.pt = pt
         self.backend = get_backend(backend)
         self.fuse = can_fuse(pt, self.backend)
         self.tiles = tiles
+        self.int8_tiles = int8_tiles
+        self.act_quant = act_quant
+        self.a_scale = a_scale
         self._record = record
+        self._observe = observe
 
     # -- array-protocol surface (enough for every call site in layers.py) ----
 
@@ -93,22 +124,80 @@ class ProtectedWeight:
         self.record(corrected, due)
         return w
 
+    # -- int8 path internals -------------------------------------------------
+
+    def _decode_q(self):
+        """Decode to RAW int8 weights (no dequantization), with flags."""
+        scheme = get_scheme(self.pt.scheme_id)
+        q, corrected, due = scheme.decode_with_flags(self.pt.enc,
+                                                     self.pt.checks,
+                                                     self.backend)
+        if self.pt.is_flat:
+            q = q.reshape(-1)[: self.pt.n_weights].reshape(self.pt.orig_shape)
+        return q, corrected, due
+
+    def _quantize_x(self, x2):
+        """(M, K) float -> (int8 q, f32 a_scale (scalar | (M, 1)))."""
+        xf = x2.astype(jnp.float32)
+        if self.act_quant == "static":
+            a_scale = jnp.asarray(self.a_scale, jnp.float32)
+        else:  # dynamic per-token absmax
+            a_scale = quant.compute_scale(xf, axis=1)  # (M, 1)
+        q, _ = quant.quantize(xf, scale=a_scale)
+        return q, a_scale
+
+    def _int8_matmul(self, q_x, a_scale, out_dtype):
+        """``q_x (M,K) int8 @ decode(enc)`` with the fused requantize
+        epilogue (Pallas route) or the inline quantize->decode->matmul
+        reference (every other route) — bit-identical value paths: one
+        exact int32 accumulator scaled by ``a_scale * w_scale`` in f32."""
+        if self.fuse:
+            from repro.kernels.ecc_qmatmul import ecc_qmatmul
+            interpret = getattr(self.backend, "interpret", True)
+            bm, bn, _bk = (self.int8_tiles or self.tiles or (128, 128, 0))
+            out, flags = ecc_qmatmul(q_x, self.pt.enc, self.pt.scale,
+                                     a_scale=a_scale, out_dtype=out_dtype,
+                                     bm=bm, bn=bn, interpret=interpret,
+                                     with_flags=True)
+            self.record(flags[0], flags[1])
+            return out
+        q_w, corrected, due = self._decode_q()
+        self.record(corrected, due)
+        # quant.int8_matmul is the single source of the epilogue's value
+        # path: exact int32 accumulator * (a_scale * w_scale) in f32
+        return quant.int8_matmul(q_x, q_w, a_scale,
+                                 self.pt.scale).astype(out_dtype)
+
+    # -- the projection entry point ------------------------------------------
+
     def matmul(self, x):
         """``x @ decode(self)`` with decode at the point of use.
 
-        Fused route: the Pallas kernel dequantizes each decoded tile in VMEM
-        (identical value path to decode-then-matmul) and returns the block
-        flag counts. Inline route: decode this leaf, then a plain matmul.
+        Float ``x``: fused float path / inline decode (value path identical
+        to decode-then-matmul); with an ``act_quant`` decision, ``x`` is
+        quantized here and served over the int8 MXU path instead. int8 ``x``
+        is accepted when a static ``a_scale`` says what the integers mean.
         """
+        lead = x.shape[:-1]
+        a2 = x.reshape(-1, x.shape[-1])
+        n_out = self.pt.orig_shape[-1]
         if not jnp.issubdtype(x.dtype, jnp.floating):
-            # int8 activations need the raw int32 accumulator + explicit
-            # activation scaling — use kernels.ecc_qmatmul / Backend.qmatmul
-            # directly; silently casting the accumulator to x.dtype would
-            # truncate it.
-            raise TypeError(
-                f"ProtectedWeight.matmul serves float activations (got "
-                f"{x.dtype}); for the quantized int8 path call "
-                f"protection.qmatmul / kernels.ecc_qmatmul directly")
+            # pre-quantized activations: meaningful only at a known scale
+            if self.act_quant != "static":
+                raise TypeError(
+                    f"ProtectedWeight.matmul got raw {x.dtype} activations "
+                    f"without a static a_scale; serve float activations, or "
+                    f"plan.with_act_quant('static', scales) so the view "
+                    f"knows the quantization scale")
+            out = self._int8_matmul(a2, jnp.asarray(self.a_scale, jnp.float32),
+                                    jnp.bfloat16)
+            return out.reshape(*lead, n_out)
+        if self._observe is not None:
+            self._observe(jnp.max(jnp.abs(a2.astype(jnp.float32))))
+        if self.act_quant is not None:
+            q_x, a_scale = self._quantize_x(a2)
+            out = self._int8_matmul(q_x, a_scale, x.dtype)
+            return out.astype(x.dtype).reshape(*lead, n_out)
         if not self.fuse:
             return x @ self.astype(x.dtype)
         from repro.kernels.ecc_qmatmul import ecc_qmatmul
@@ -117,8 +206,6 @@ class ProtectedWeight:
         # the accumulation order — and hence every logit — is bit-identical
         # to decode-then-matmul. The autotune bk only tunes the int8 path.
         bm, bn, _bk = self.tiles or (128, 128, 0)
-        lead = x.shape[:-1]
-        a2 = x.reshape(-1, x.shape[-1])
         out, flags = ecc_qmatmul(a2, self.pt.enc, self.pt.scale,
                                  bm=bm, bn=bn, bk=0, interpret=interpret,
                                  with_flags=True)
@@ -127,4 +214,4 @@ class ProtectedWeight:
 
     def __repr__(self):
         return (f"ProtectedWeight({self.pt!r}, backend={self.backend.name!r}, "
-                f"fuse={self.fuse})")
+                f"fuse={self.fuse}, act_quant={self.act_quant!r})")

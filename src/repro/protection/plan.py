@@ -73,6 +73,16 @@ class LeafPlan:
     spec:        sharding spec of the stored image (a ``ProtectedTensor`` of
                  ``PartitionSpec`` for protected leaves) or None when the
                  plan was built without ``param_spec_fn``.
+    tiles:       fused decode+matmul (bm, bn, bk) for this leaf's per-layer
+                 (K, N) = ``shape[-2:]`` matmul, from the policy's autotune
+                 table (None without a table / for non-matmul shapes).
+    int8_tiles:  int8-epilogue (bm, bn, 0) tiles, same resolution.
+    tiles_src:   where the tiles came from: "exact" | "nearest" | "".
+    act_quant:   activation-quantization decision for the serve step:
+                 None (float activations) | "dynamic" (per-token absmax) |
+                 "static" (calibrated ``a_scale``). Set via
+                 :meth:`ProtectionPlan.with_act_quant`.
+    a_scale:     calibrated static activation scale (float) or None.
     """
 
     path: str
@@ -90,6 +100,11 @@ class LeafPlan:
     spec: Any = dataclasses.field(default=None, compare=False)
     backend_obj: Any = dataclasses.field(default=None, compare=False,
                                          repr=False)
+    tiles: Optional[tuple] = None
+    int8_tiles: Optional[tuple] = None
+    tiles_src: str = ""
+    act_quant: Optional[str] = None
+    a_scale: Optional[float] = None
 
     @property
     def protected(self) -> bool:
@@ -192,7 +207,55 @@ class ProtectionPlan:
             "by_backend": self.by_backend(),
             "n_flat_padded": sum(lp.layout == "flat-padded" for lp in prot),
             "n_flat_sharded": sum(lp.flat_sharded for lp in prot),
+            "tiles_src": self._count(prot, "tiles_src"),
+            "act_quant": self._count(prot, "act_quant"),
         }
+
+    @staticmethod
+    def _count(leaves, field) -> dict:
+        """{value: count} over truthy values of one LeafPlan field."""
+        out: dict = {}
+        for lp in leaves:
+            v = getattr(lp, field)
+            if v:
+                out[v] = out.get(v, 0) + 1
+        return out
+
+    # -- activation quantization ---------------------------------------------
+
+    def with_act_quant(self, mode: str = "dynamic",
+                       scales: Optional[dict] = None) -> "ProtectionPlan":
+        """A new plan whose protected matmul leaves carry activation-quant
+        decisions for the int8 serve path.
+
+        mode="dynamic":  every protected leaf with a matmul-shaped image
+                         (ndim >= 2) quantizes its activations per token
+                         (absmax) at use. Leaves consumed elementwise (conv
+                         kernels, embeddings) ignore the marker.
+        mode="static":   ``scales`` maps leaf paths to calibrated activation
+                         scales (see ``serving.protected.calibrate_act_
+                         scales``); exactly the calibrated leaves go static,
+                         everything else keeps float activations — the
+                         calibration run defines the quantized set.
+        """
+        if mode not in ("static", "dynamic"):
+            raise ValueError(f"act-quant mode {mode!r}; one of "
+                             f"('static', 'dynamic')")
+        if mode == "static" and not scales:
+            raise ValueError("static activation quantization needs calibrated"
+                             " scales — run calibrate_act_scales() first")
+        scales = scales or {}
+        leaves = {}
+        for p, lp in self.leaves.items():
+            if not lp.protected or len(lp.shape) < 2:
+                leaves[p] = lp
+            elif mode == "static":
+                leaves[p] = dataclasses.replace(
+                    lp, act_quant="static", a_scale=float(scales[p])) \
+                    if p in scales else lp
+            else:
+                leaves[p] = dataclasses.replace(lp, act_quant="dynamic")
+        return ProtectionPlan(self.policy, leaves, mesh_axes=self.mesh_axes)
 
     def coverage(self):
         """The plan as a :class:`CoverageReport` (the legacy view)."""
@@ -330,6 +393,20 @@ def make_plan(policy, params, *, mesh=None,
         checks = int((n + pad) * scheme.check_ratio)
         stored = n + pad + checks
         be, be_src = policy.resolve_backend(p, shape)
+        # fused-kernel tiles for the per-layer matmul: stacked leaves
+        # (L, K, N) slice to (K, N) inside the scan, so the tile shape is
+        # always the trailing two dims
+        tiles = int8_tiles = None
+        tiles_src = ""
+        if policy.autotune is not None and len(shape) >= 2:
+            tiles, f_src = policy.autotune.lookup_tiles_src(shape[-2:])
+            int8_tiles, i_src = policy.autotune.lookup_tiles_src(
+                shape[-2:], key="int8_tiles")
+            # one marker per leaf: "exact" only when every resolved tile
+            # kind matched the shape; any extrapolation surfaces as "nearest"
+            srcs = {s for s in (f_src, i_src) if s}
+            tiles_src = ("nearest" if "nearest" in srcs
+                         else "exact" if srcs else "")
         spec = None
         if param_spec_fn is not None:
             if aligned:
@@ -347,7 +424,8 @@ def make_plan(policy, params, *, mesh=None,
             backend_src=be_src, layout="same-shape" if aligned
             else "flat-padded", shape=shape, n_weights=n, enc_shape=enc_shape,
             pad_bytes=pad, check_bytes=checks, stored_bytes=stored, spec=spec,
-            backend_obj=be)
+            backend_obj=be, tiles=tiles, int8_tiles=int8_tiles,
+            tiles_src=tiles_src)
     return ProtectionPlan(policy, leaves,
                           mesh_axes=tuple(sizes) if sizes else None)
 

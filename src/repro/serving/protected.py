@@ -21,6 +21,7 @@ policy, coverage, injection) lives in ``repro.protection``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax
@@ -81,15 +82,26 @@ def make_plan(params, policy: Optional[protection.ProtectionPolicy] = None,
 
 
 class _Router:
-    """Per-leaf decode route: (backend, fused tiles) from the plan (leaf
-    rules > autotune > policy default) or from the policy-wide ``backend``
-    when serving without a plan."""
+    """Per-leaf decode route: (backend, fused tiles, activation-quant mode)
+    from the plan (leaf rules > autotune > policy default) or from the
+    policy-wide ``backend`` when serving without a plan.
 
-    def __init__(self, plan, backend):
+    act_quant: None (float activations) | "dynamic" | "static" (serve-step
+    override applied to every capable leaf) | "plan" (follow each leaf's
+    ``LeafPlan.act_quant`` decision). calibrate=True runs the float path
+    but wires each matmul's activation absmax into the layers act sink.
+    """
+
+    def __init__(self, plan, backend, *, act_quant=None, calibrate=False):
+        if act_quant not in (None, "static", "dynamic", "plan"):
+            raise ValueError(f"act_quant {act_quant!r}; one of "
+                             f"(None, 'static', 'dynamic', 'plan')")
         self.plan = plan
         self.backend = protection.get_backend(backend)
         self.autotune = getattr(getattr(plan, "policy", None),
                                 "autotune", None)
+        self.act_quant = act_quant
+        self.calibrate = calibrate
 
     def backend_for(self, path: str):
         """Resolved backend for a leaf by its FULL plan path (the scoped
@@ -102,9 +114,27 @@ class _Router:
             return lp.backend_obj or protection.get_backend(lp.backend)
         return self.backend
 
-    def tiles_for(self, shape):
-        lookup = getattr(self.autotune, "lookup_tiles", None)
-        return lookup(shape) if lookup is not None else None
+    def tiles_for(self, shape, *, key="tiles"):
+        lookup = getattr(self.autotune, "lookup_tiles_src", None)
+        return lookup(shape, key=key)[0] if lookup is not None else None
+
+    def act_for(self, path: str) -> tuple:
+        """-> (act_quant mode | None, a_scale | None) for one leaf."""
+        lp = self.plan.leaves.get(path) if self.plan is not None else None
+        if self.act_quant is None:
+            return None, None
+        if self.act_quant == "dynamic":
+            return "dynamic", None
+        if self.act_quant == "static":
+            # the calibrated set defines what serves int8; uncalibrated
+            # leaves keep float activations rather than guessing a scale
+            if lp is not None and lp.a_scale is not None:
+                return "static", lp.a_scale
+            return None, None
+        # "plan": follow the per-leaf decision
+        if lp is not None:
+            return lp.act_quant, lp.a_scale
+        return None, None
 
     def wrap(self, path: str, pt: ProtectedTensor, dtype):
         """Decode-at-use view for a matmul-consumed leaf; leaves that are
@@ -116,8 +146,19 @@ class _Router:
                 pt, dtype, backend=be)
             L.record_flags(corrected, due)
             return w
-        return ProtectedWeight(pt, be, tiles=self.tiles_for(pt.orig_shape),
-                               record=L.record_flags)
+        lp = self.plan.leaves.get(path) if self.plan is not None else None
+        shape = tuple(pt.orig_shape)
+        tiles = (lp.tiles if lp is not None and lp.tiles is not None
+                 else self.tiles_for(shape))
+        int8_tiles = (lp.int8_tiles
+                      if lp is not None and lp.int8_tiles is not None
+                      else self.tiles_for(shape, key="int8_tiles"))
+        aq, a_scale = self.act_for(path)
+        return ProtectedWeight(
+            pt, be, tiles=tiles, int8_tiles=int8_tiles,
+            record=L.record_flags, act_quant=aq, a_scale=a_scale,
+            observe=(functools.partial(L.record_act, path)
+                     if self.calibrate else None))
 
 
 def _scan_ready(subtree, prefix: str, router: _Router, dtype):
@@ -200,7 +241,8 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
                     decode_per_step: bool = True,
                     decode_at_use: Optional[bool] = None,
                     dtype=jnp.bfloat16, backend="xla",
-                    with_flags: bool = False):
+                    with_flags: bool = False,
+                    act_quant: Optional[str] = None):
     """serve_step(enc_params, cache, tokens, pos) -> (logits, cache)
     (``+ flags`` with ``with_flags=True``).
 
@@ -214,11 +256,21 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
     the policy-wide route. ``with_flags=True`` (decode-at-use only) adds a
     flags dict: per-layer (corrected, DUE) int32 counts plus the "top" row
     for embed/head.
+
+    ``act_quant`` switches projections onto the int8 MXU path (activations
+    quantized at the point of use, served through the fused kernel's
+    requantize epilogue on the Pallas route): "dynamic" (per-token absmax),
+    "static" (calibrated per-leaf scales — see :func:`calibrate_act_scales`
+    and ``plan.with_act_quant``), or "plan" (follow each leaf's plan
+    decision). Decode-at-use only.
     """
     if decode_at_use is None:
         decode_at_use = decode_per_step
+    if act_quant is not None and not (decode_at_use and decode_per_step):
+        raise ValueError("act_quant needs the decode-at-use serve step (the "
+                         "whole-tree decode paths serve float weights)")
     if decode_at_use and decode_per_step:
-        router = _Router(plan, backend)
+        router = _Router(plan, backend, act_quant=act_quant)
         lt = _layer_transform(router, dtype)
 
         def serve_step(enc_params, cache, tokens, pos):
@@ -255,13 +307,16 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
 
 def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
                  chunk: int = 2048, backend="xla",
-                 decode_at_use: bool = True, with_flags: bool = False):
+                 decode_at_use: bool = True, with_flags: bool = False,
+                 act_quant: Optional[str] = None):
     """prefill(enc_params, tokens, extras) -> logits (``+ flags`` with
     ``with_flags=True``). Decode-at-use by default, same routing as
-    :func:`make_serve_step`; ``decode_at_use=False`` keeps the whole-tree
-    decode ablation."""
+    :func:`make_serve_step` (including the ``act_quant`` int8 path);
+    ``decode_at_use=False`` keeps the whole-tree decode ablation."""
+    if act_quant is not None and not decode_at_use:
+        raise ValueError("act_quant needs the decode-at-use prefill")
     if decode_at_use:
-        router = _Router(plan, backend)
+        router = _Router(plan, backend, act_quant=act_quant)
         lt = _layer_transform(router, dtype)
 
         def prefill(enc_params, tokens, extras=None):
@@ -295,6 +350,46 @@ def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
         return lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
                           **extras)
     return prefill
+
+
+def calibrate_act_scales(cfg: ArchConfig, enc_params, tokens, *, plan=None,
+                         backend="xla", dtype=jnp.bfloat16, chunk: int = 2048,
+                         extras=None) -> dict:
+    """Calibrate static activation scales from a small batch.
+
+    Runs the float decode-at-use prefill over ``tokens`` (B, S) with every
+    projection's activation absmax recorded at its point of use (the same
+    per-leaf routing as serving, so exactly the leaves that will consume the
+    scales observe them — scanned layers report through the scan, so each
+    stacked leaf gets the max over its layers). Returns ``{leaf path:
+    a_scale}`` with ``a_scale = absmax / 127`` — feed it to
+    ``plan.with_act_quant("static", scales)`` and serve with
+    ``make_serve_step(..., act_quant="static"`` or ``"plan")``.
+    """
+    router = _Router(plan, backend, calibrate=True)
+    lt = _layer_transform(router, dtype)
+    L.set_act_sink({})
+    try:
+        params = _use_tree(enc_params, router, dtype)
+        extras = extras or {}
+        _, acts = lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
+                             layer_transform=lt, collect_acts=True, **extras)
+        top = L.drain_acts()  # embed/head record outside the scans
+    finally:
+        L.set_act_sink(None)
+    # same floor as quant.compute_scale: a projection whose calibration
+    # activations were all zero must not bake a_scale=0 (divide-by-zero at
+    # serve time)
+    def scale(absmax):
+        return max(float(absmax), 1e-12) / 127.0
+
+    scales: dict = {}
+    for sub in acts.values():          # {"layers": {path: (n_layers,)}, ...}
+        for path, per_layer in (sub or {}).items():
+            scales[path] = scale(jnp.max(per_layer))
+    for path, absmax in top.items():
+        scales[path] = scale(absmax)
+    return scales
 
 
 def spec_tree(enc_params_or_params, param_spec_fn, *, mesh=None):

@@ -96,40 +96,85 @@ def test_autotune_lookup_4x_ratio_boundary():
     assert t.lookup((520, 64)) is None      # 4160 blocks: just beyond 0.25
 
 
-def test_autotune_v2_tiles_and_v1_backward_compat(tmp_path):
-    v2 = {"schema": protection.BENCH_KERNELS_SCHEMA, "platform": "cpu",
+def test_autotune_v3_tiles_and_v2_v1_backward_compat(tmp_path):
+    v3 = {"schema": protection.BENCH_KERNELS_SCHEMA, "platform": "cpu",
+          "entries": [{"shape": [256, 256], "xla_us": 5.0, "pallas_us": 3.0,
+                       "best": "pallas", "tiles": [128, 128, 0],
+                       "fused_us": 2.5, "int8_tiles": [64, 128, 0],
+                       "fused_int8_us": 1.5}]}
+    v2 = {"schema": protection.BENCH_KERNELS_SCHEMA_V2, "platform": "cpu",
           "entries": [{"shape": [256, 256], "xla_us": 5.0, "pallas_us": 3.0,
                        "best": "pallas", "tiles": [128, 128, 0],
                        "fused_us": 2.5}]}
     v1 = {"schema": protection.BENCH_KERNELS_SCHEMA_V1, "platform": "cpu",
           "entries": [{"shape": [256, 256], "xla_us": 5.0, "pallas_us": 3.0,
                        "best": "pallas"}]}
-    p2, p1 = tmp_path / "v2.json", tmp_path / "v1.json"
+    p3, p2, p1 = tmp_path / "v3.json", tmp_path / "v2.json", tmp_path / "v1.json"
+    p3.write_text(json.dumps(v3))
     p2.write_text(json.dumps(v2))
     p1.write_text(json.dumps(v1))
+    t3 = protection.AutotuneTable.from_json(p3)
+    assert t3.lookup((256, 256)) == "pallas"
+    assert t3.lookup_tiles((256, 256)) == (128, 128, 0)
+    assert t3.lookup_int8_tiles((256, 256)) == (64, 128, 0)
+    assert t3.to_dict()["schema"] == protection.BENCH_KERNELS_SCHEMA
+    # v2 artifacts still load: float tiles yes, int8 tiles no
     t2 = protection.AutotuneTable.from_json(p2)
     assert t2.lookup((256, 256)) == "pallas"
     assert t2.lookup_tiles((256, 256)) == (128, 128, 0)
     assert t2.lookup_tiles((128, 512)) == (128, 128, 0)  # nearest-by-blocks
-    assert t2.lookup_tiles((9999, 9999)) is None
-    assert t2.to_dict()["schema"] == protection.BENCH_KERNELS_SCHEMA
+    assert t2.lookup_int8_tiles((256, 256)) is None
+    assert t2.to_dict()["schema"] == protection.BENCH_KERNELS_SCHEMA_V2
     # v1 artifacts still load: backend opinion yes, tile opinion no
     t1 = protection.AutotuneTable.from_json(p1)
     assert t1.lookup((256, 256)) == "pallas"
     assert t1.lookup_tiles((256, 256)) is None
     assert t1.to_dict()["schema"] == protection.BENCH_KERNELS_SCHEMA_V1
-    # round-trip of a v2 table preserves tiles
-    rt = protection.AutotuneTable.from_dict(t2.to_dict())
+    # round-trip of a v3 table preserves both tile kinds
+    rt = protection.AutotuneTable.from_dict(t3.to_dict())
     assert rt.lookup_tiles((256, 256)) == (128, 128, 0)
+    assert rt.lookup_int8_tiles((256, 256)) == (64, 128, 0)
 
 
-def test_checked_in_artifact_is_v2_with_tiles():
+def test_autotune_tiles_nearest_fallback_with_source():
+    """Tiles are hints, not routes: unseen shapes fall back to the nearest
+    tile-bearing entry by block count with NO 4x cap (the backend lookup
+    keeps its cap), and the source marker says when that happened."""
+    t = protection.AutotuneTable(
+        entries=[{"shape": [32, 256], "xla_us": 1.0, "pallas_us": 2.0,
+                  "best": "xla", "tiles": [128, 256, 0],
+                  "int8_tiles": [64, 64, 0]},
+                 {"shape": [2048, 4096], "xla_us": 9.0, "pallas_us": 9.9,
+                  "best": "xla", "tiles": [128, 512, 128]}])
+    assert t.lookup_tiles_src((32, 256)) == ((128, 256, 0), "exact")
+    # far beyond the 4x window: backend has no opinion, tiles still resolve
+    assert t.lookup((9999, 9992)) is None
+    assert t.lookup_tiles_src((9999, 9992)) == ((128, 512, 128), "nearest")
+    # int8 tiles skip entries that don't carry them
+    assert t.lookup_tiles_src((9999, 9992), key="int8_tiles") == \
+        ((64, 64, 0), "nearest")
+    # the plan surfaces the marker
+    rng = np.random.default_rng(3)
+    params = {"wq": jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32)),
+              "wo": jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))}
+    policy = protection.ProtectionPolicy(
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2, autotune=t)
+    plan = protection.make_plan(policy, params)
+    assert plan["wq"].tiles == (128, 256, 0)
+    assert plan["wq"].tiles_src == "exact"
+    assert plan["wo"].tiles == (128, 256, 0)   # nearest by block count
+    assert plan["wo"].tiles_src == "nearest"
+    assert plan.summary()["tiles_src"] == {"exact": 1, "nearest": 1}
+
+
+def test_checked_in_artifact_is_v3_with_tiles():
     import os
     path = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                         "BENCH_kernels.json")
     t = protection.AutotuneTable.from_json(path)
     assert t.schema == protection.BENCH_KERNELS_SCHEMA
     assert any(t.lookup_tiles(e["shape"]) for e in t.entries)
+    assert any(t.lookup_int8_tiles(e["shape"]) for e in t.entries)
 
 
 # ---------------------------------------------------------------------------

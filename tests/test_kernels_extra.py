@@ -68,6 +68,22 @@ def test_quantize_throttle_matches_deploy_path(nblk):
     assert wot.satisfies_constraint(jnp.asarray(np.asarray(q_k).reshape(-1)))
 
 
+@pytest.mark.parametrize("nblk,blk", [(5000, 4096), (100, 64), (4097, 4096),
+                                      (65, 64)])
+def test_quantize_throttle_non_divisible_edge_block(nblk, blk):
+    """Regression: arbitrary leaf sizes quantize without host-side padding —
+    the old nblk % blk == 0 assert rejected any leaf that wasn't a tile
+    multiple. The cdiv grid's masked edge block must neither corrupt the
+    absmax (garbage rows zeroed) nor the quantized tail."""
+    rng = np.random.default_rng(nblk)
+    w = jnp.asarray(rng.normal(size=(nblk, 8)).astype(np.float32) * 2)
+    q_k, scale_k = quantize_throttle(w, blk=blk)
+    q_r, scale_r = quant.quantize(w)
+    q_r = wot.throttle_q(q_r.reshape(-1)).reshape(w.shape)
+    assert float(jnp.abs(scale_k - scale_r)) < 1e-9
+    assert (np.asarray(q_k) == np.asarray(q_r)).all()
+
+
 def test_ops_deploy_pipeline_end_to_end():
     """deploy_quantize -> encode_weights -> decode_weights wrappers chain."""
     from repro.kernels import ops

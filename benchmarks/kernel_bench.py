@@ -7,13 +7,15 @@ kernel on TPU v5e (bytes moved, flops, roofline-bound time).
 
 ``--json BENCH_kernels.json`` additionally times the in-place decode on BOTH
 backends per weight shape, sweeps fused decode+matmul tiles for the float
-path AND the int8 requantize-epilogue path, and writes the
-``bench_kernels/v3`` artifact that ``protection.AutotuneTable`` consumes —
-per-leaf backend AND tile choices (float ``tiles`` + ``int8_tiles``) are
-then reproducible from a checked-in file instead of call-site defaults
-(``--tiles-smoke`` shrinks the sweep for CI).  On a CPU host the Pallas
-timings are interpret-mode (always slower — recorded, with
-``pallas_interpret: true``, so a TPU re-run can overwrite them).
+path AND the int8 requantize-epilogue path, times fused page-attention
+(decode-at-use over the protected KV cache) against its decode-then-attend
+reference per KV scheme, and writes the ``bench_kernels/v4`` artifact that
+``protection.AutotuneTable`` consumes — per-leaf backend AND tile choices
+(float ``tiles`` + ``int8_tiles``) are then reproducible from a checked-in
+file instead of call-site defaults (``--tiles-smoke`` shrinks the sweep for
+CI).  On a CPU host the Pallas timings are interpret-mode (always slower —
+recorded, with ``pallas_interpret: true``, so a TPU re-run can overwrite
+them).
 """
 from __future__ import annotations
 
@@ -162,8 +164,56 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
     return entries
 
 
-def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP) -> dict:
-    """Write BENCH_kernels.json in the ``bench_kernels/v3`` schema that
+# (batch, seq, kv_heads, head_dim) decode-attention shapes for the paged
+# protected KV cache rows. Queries use 2x the kv heads (GQA rep=2).
+ATTENTION_SHAPES = ((2, 128, 2, 32), (2, 256, 4, 64))
+
+
+def bench_paged_attention(shapes=ATTENTION_SHAPES, reps=3):
+    """Fused page-attention (decode-at-use over the protected KV cache) vs
+    the XLA decode-then-attend reference, per shape and KV scheme — the
+    ``bench_kernels/v4`` ``attention`` rows. Each row also records whether
+    the two paths agreed bit-for-bit on this host (the kernel's contract)."""
+    from repro.kernels import paged_attention
+    from repro.serving import kvcache
+    rng = np.random.default_rng(13)
+    rows = []
+    for b, s, kv, hd in shapes:
+        h = 2 * kv
+        q = jnp.asarray(rng.standard_normal((b, h, 1, hd)),
+                        dtype=jnp.bfloat16)
+        kf = jnp.asarray(rng.standard_normal((b, s, kv, hd)),
+                         dtype=jnp.float32)
+        vf = jnp.asarray(rng.standard_normal((b, s, kv, hd)),
+                         dtype=jnp.float32)
+        pos = jnp.full((b,), s - 1, jnp.int32)
+        for scheme in kvcache.KV_SCHEMES:
+            pol = kvcache.KVProtectionPolicy(scheme=scheme)
+            ke, kch, ksc = kvcache._encode_kv(kf, pol)
+            ve, vch, vsc = kvcache._encode_kv(vf, pol)
+
+            def fused(q_, scheme=scheme, strips=(ke, kch, ksc, ve, vch, vsc)):
+                return paged_attention.fused_page_attention(
+                    q_, *strips, pos, scheme=scheme)[0]
+
+            def ref(q_, pol=pol, strips=(ke, kch, ksc, ve, vch, vsc)):
+                return kvcache._reference_paged_attention(
+                    q_, *strips, pos, pol)[0]
+
+            f, r = jax.jit(fused), jax.jit(ref)
+            fused_us = _time(f, q, reps=reps)
+            ref_us = _time(r, q, reps=reps)
+            rows.append({"shape": [b, s, kv, hd], "scheme": scheme,
+                         "fused_us": round(fused_us, 1),
+                         "ref_us": round(ref_us, 1),
+                         "bitexact": bool(np.array_equal(
+                             np.asarray(f(q)), np.asarray(r(q))))})
+    return rows
+
+
+def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP,
+                        attention=None) -> dict:
+    """Write BENCH_kernels.json in the ``bench_kernels/v4`` schema that
     ``protection.AutotuneTable`` loads (validated by round-tripping through
     it before writing)."""
     platform = jax.devices()[0].platform
@@ -171,11 +221,14 @@ def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP) -> dict:
         entries = bench_backend_decode()
         if tile_sweep:
             entries = bench_fused_tiles(entries, tile_sweep=tile_sweep)
+    if attention is None:
+        attention = bench_paged_attention()
     payload = {"schema": protection.BENCH_KERNELS_SCHEMA,
                "platform": platform,
                "pallas_interpret": platform != "tpu",
                "op": "in-place-decode64+fused-qmatmul",
-               "entries": entries}
+               "entries": entries,
+               "attention": attention}
     protection.AutotuneTable.from_dict(payload)  # schema self-check
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -187,8 +240,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-shape xla-vs-pallas decode + "
-                         "fused-tile table (BENCH_kernels.json, "
-                         "bench_kernels/v3)")
+                         "fused-tile + paged-attention table "
+                         "(BENCH_kernels.json, bench_kernels/v4)")
     ap.add_argument("--tiles-smoke", action="store_true",
                     help="tiny fused-tile sweep (CI smoke; interpret mode)")
     args = ap.parse_args(argv)
@@ -209,6 +262,11 @@ def main(argv=None):
                   f"best={e['best']},tiles={tiles},"
                   f"fused={e.get('fused_us', 0):.0f}us,int8_tiles={i8},"
                   f"fused_int8={e.get('fused_int8_us', 0):.0f}us")
+        for r in payload.get("attention", ()):
+            shp = "x".join(str(t) for t in r["shape"])
+            print(f"paged_attention_{shp}_{r['scheme']},"
+                  f"{r['fused_us']:.0f},ref_us={r['ref_us']:.0f}"
+                  f"_bitexact={str(r['bitexact']).lower()}")
         print(f"# wrote {args.json} ({payload['platform']}, "
               f"pallas_interpret={payload['pallas_interpret']})")
 

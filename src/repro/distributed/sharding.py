@@ -82,6 +82,15 @@ def cache_spec(path, leaf, *, data="data", model="model") -> P:
     ndim = leaf.ndim
     if name in ("k", "v", "cross_k", "cross_v"):       # (L,B,S,kv,hd)
         return P(None, data, model, None, None)
+    if name in ("k_pages", "v_pages", "k_checks", "v_checks"):
+        # (L, P, ps, kv, hd | hd/8) paged pools: identity page tables are
+        # batch-major, so the pool dim follows the batch ('data') sharding;
+        # pages are indivisible ECC units, so ps/kv/hd stay whole
+        return P(None, data, None, None, None)
+    if name in ("k_scale", "v_scale"):                 # (L,P,ps)
+        return P(None, data, None)
+    if name == "kv_table":                             # (L,B,npg) — tiny;
+        return P(None, None, None)                     # replicate
     if name in ("latent", "k_rope"):                   # (L,B,S,r)
         return P(None, data, model, None)
     if name == "state":                                # (L,B,h,p,n)

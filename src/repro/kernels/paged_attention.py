@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused ECC page decode + single-token attention.
+
+The paged KV cache (``serving.kvcache``) keeps keys/values ECC-encoded at
+rest; this kernel decodes each sequence's pages in VMEM on their way into
+the attention dots — the serving-state twin of ``ecc_qmatmul``'s
+decode-at-use weight path. Protection then costs zero HBM space (in-place
+scheme) AND zero extra HBM traffic: the encoded strip is what streams in,
+and no decoded copy of the cache ever lands in HBM.
+
+Grid (B, KV): one step owns the whole gathered (S, hd) K and V strips for
+one (batch, kv-head) pair, block-decodes them (per-token flag counts),
+dequantizes with the per-token page scales, and computes all rep = H/KV
+query heads of that group in full-sequence form. Deliberately NO online
+softmax: the op/dtype sequence exactly mirrors ``layers.decode_attention``
+(bf16 score dot -> f32 scale + mask -> ``jax.nn.softmax`` -> dtype cast ->
+PV dot), which is what makes the fused path BIT-IDENTICAL to the XLA
+decode-then-attend reference *compiled as one program* (the serving paths
+always jit it; eager op-by-op execution materializes an intermediate bf16
+rounding of the score dot that fused compilation elides, costing ~1 ulp).
+VMEM holds the full strip (~2*S*hd encoded
+bytes + the dequantized copies) — fine for decode contexts to a few k
+tokens; a page-chunked online-softmax variant would scale further but
+forfeits the bit-identity contract.
+
+The page-table gather itself (pool -> (B, S, ...) strips) stays in XLA
+before the ``pallas_call``: gathers are layout transforms XLA schedules
+well, while the kernel owns everything that must not leave VMEM decoded.
+Flags (corrected, DUE) are masked to valid (``<= pos``) tokens inside the
+kernel, summed per (batch, kv-head) cell, and reduced outside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import ecc
+from . import ecc_decode
+
+KV_SCHEMES = ("faulty", "parity-zero", "in-place")
+
+
+def _kernel(q_ref, ke_ref, kch_ref, ksc_ref, ve_ref, vch_ref, vsc_ref,
+            pos_ref, rowmask_ref, cols_ref, o_ref, flags_ref, *, scheme, s):
+    qb = q_ref[0, 0]                                   # (rep, hd)
+    hd = qb.shape[-1]
+    pos = pos_ref[0, 0]
+    # 2-D iotas throughout (Mosaic rejects rank-1 iota outside interpret)
+    tok = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
+    valid_col = tok <= pos                             # (s, 1)
+
+    def dec(enc_ref, ch_ref):
+        """-> (int8 (s, hd), corrected, due) — flags already valid-masked."""
+        enc = enc_ref[0, :, 0, :]                      # (s, hd) uint8
+        if scheme == "faulty":
+            z = jnp.zeros((), jnp.int32)
+            return jax.lax.bitcast_convert_type(enc, jnp.int8), z, z
+        if scheme == "parity-zero":
+            ch = ch_ref[0, :, 0, :]                    # (s, hd // 8)
+            # constant-free restatement of ecc.decode_parity8 (whose packed
+            # weight tables would be captured consts inside a Pallas kernel):
+            # byte j's stored parity is bit (j % 8) of check byte j // 8.
+            par = (jax.lax.population_count(enc) & 1).astype(jnp.uint8)
+            sh = (jax.lax.broadcasted_iota(jnp.int32, (s, hd), 1) % 8
+                  ).astype(jnp.uint8)
+            stored = (jnp.repeat(ch, 8, axis=1) >> sh) & jnp.uint8(1)
+            bad = par != stored
+            data = jnp.where(bad, jnp.uint8(0), enc)
+            cor = jnp.sum(jnp.where(valid_col, bad.astype(jnp.int32), 0))
+            return (jax.lax.bitcast_convert_type(data, jnp.int8), cor,
+                    jnp.zeros((), jnp.int32))
+        dcd, fl = ecc_decode._decode_tile(enc.reshape(s * hd // 8, 8),
+                                          rowmask_ref[...], cols_ref[...])
+        fl = fl.reshape(s, hd // 8)
+        cor = jnp.sum(jnp.where(valid_col, (fl & 1).astype(jnp.int32), 0))
+        due = jnp.sum(jnp.where(valid_col, ((fl >> 1) & 1).astype(jnp.int32),
+                                0))
+        return jax.lax.bitcast_convert_type(dcd.reshape(s, hd), jnp.int8), \
+            cor, due
+
+    kq, kcor, kdue = dec(ke_ref, kch_ref)
+    vq, vcor, vdue = dec(ve_ref, vch_ref)
+    cdt = qb.dtype
+    kf = (kq.astype(jnp.float32) * ksc_ref[0][:, None]).astype(cdt)  # (s, hd)
+    vf = (vq.astype(jnp.float32) * vsc_ref[0][:, None]).astype(cdt)
+    # score path mirrors layers.decode_attention op for op (bit-identity)
+    sc = jax.lax.dot_general(qb, kf,
+                             dimension_numbers=(((1,), (1,)), ((), ())))
+    sc = sc.astype(jnp.float32) * (1.0 / np.sqrt(hd))  # (rep, s)
+    sc = jnp.where(valid_col.reshape(1, s), sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1).astype(cdt)
+    o_ref[0, 0] = jax.lax.dot_general(
+        pr, vf, dimension_numbers=(((1,), (0,)), ((), ()))).astype(o_ref.dtype)
+    flags_ref[0, 0] = jnp.stack([kcor + vcor, kdue + vdue])
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "interpret"))
+def fused_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
+                         scheme: str = "in-place", interpret: bool = True):
+    """Fused decode-at-use attention over gathered encoded KV strips.
+
+    q:        (B, H, 1, hd) float query (hd % 8 == 0).
+    ke/ve:    (B, S, KV, hd) uint8 encoded strips (``kvcache._gather_seq``).
+    kch/vch:  (B, S, KV, hd // 8) uint8 parity check bytes, or None.
+    ksc/vsc:  (B, S) f32 per-token scales.
+    pos:      (B,) int32 current positions; tokens > pos are masked.
+
+    Returns ``(o (B, H, 1, hd) q.dtype, flags (2,) int32)`` — o bit-identical
+    to decode-then-``layers.decode_attention``, flags = (corrected, DUE)
+    counts over valid tokens of both strips.
+    """
+    if scheme not in KV_SCHEMES:
+        raise ValueError(f"scheme {scheme!r}; one of {KV_SCHEMES}")
+    b, h, _, hd = q.shape
+    s, kv = ke.shape[1], ke.shape[2]
+    rep = h // kv
+    nb = hd // 8
+    if kch is None:
+        kch = jnp.zeros((b, s, kv, nb), jnp.uint8)
+        vch = jnp.zeros((b, s, kv, nb), jnp.uint8)
+    q4 = q[:, :, 0, :].reshape(b, kv, rep, hd)  # head g*rep+r -> (g, r)
+    pos2 = pos.reshape(b, 1).astype(jnp.int32)
+
+    kern = functools.partial(_kernel, scheme=scheme, s=s)
+    strip = lambda bi, g: (bi, 0, g, 0)
+    out, flags = pl.pallas_call(
+        kern,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, g: (bi, g, 0, 0)),
+            pl.BlockSpec((1, s, 1, hd), strip),
+            pl.BlockSpec((1, s, 1, nb), strip),
+            pl.BlockSpec((1, s), lambda bi, g: (bi, 0)),
+            pl.BlockSpec((1, s, 1, hd), strip),
+            pl.BlockSpec((1, s, 1, nb), strip),
+            pl.BlockSpec((1, s), lambda bi, g: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, g: (bi, 0)),
+            pl.BlockSpec((7, 8), lambda bi, g: (0, 0)),
+            pl.BlockSpec((8, 8), lambda bi, g: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, g: (bi, g, 0, 0)),
+            pl.BlockSpec((1, 1, 2), lambda bi, g: (bi, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, kv, 2), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q4, ke, kch, ksc, ve, vch, vsc, pos2,
+      jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE))
+    return out.reshape(b, h, 1, hd), flags.sum(axis=(0, 1))

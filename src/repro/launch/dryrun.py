@@ -12,6 +12,14 @@ cells: each record carries the materialized ProtectionPlan's per-scheme
 stored bytes plus peak-HBM and collective-traffic deltas against the
 ``unprotected`` (int8, zero checks) baseline of the same cell.
 
+The ``--kv-policy`` axis does the same for serving STATE: decode cells
+compile against the paged protected KV cache
+(``repro.serving.kvcache``) under each named KV preset, the record
+carries the cache's stored/check/scale byte split (see docs/kvcache.md),
+and each protected-KV cell is diffed against the ``unprotected`` paged
+cell of the same (cell, policy, mode) — the CI envelope asserts that
+delta stays under 10% of the unprotected-KV peak.
+
 Importing this module is side-effect-free; the CLI entry point calls
 :func:`setup_host_devices` (which mutates ``XLA_FLAGS``) before touching
 jax, and tests can import :func:`run_cell` without clobbering their
@@ -105,7 +113,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
              save_hlo: str | None = None, microbatch=None,
              policy: str | None = None, smoke: bool = False, layers=None,
              with_flags=None, mesh_shape=None, act_quant: str | None = None,
-             baseline: dict | None = None) -> dict:
+             baseline: dict | None = None,
+             kv_policy: str | None = None) -> dict:
     """Compile one cell and return its JSONL record.
 
     policy:        named protection preset for serving cells (train cells
@@ -123,6 +132,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
     baseline:      a previous record (same cell, ``unprotected`` policy) to
                    diff against — fills ``hbm_delta_bytes`` /
                    ``wire_delta_bytes``.
+    kv_policy:     named KV protection preset (decode cells only): compile
+                   against the paged protected KV cache and record its
+                   stored/check/scale byte split under ``kv``.
     """
     import jax
     import numpy as np
@@ -140,6 +152,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
            "mesh": _mesh_name(multi_pod, mesh_shape), "fsdp": fsdp, "sp": sp,
            "smoke": smoke}
     serving = shape.kind != "train"
+    if kv_policy is not None and shape.kind != "decode":
+        kv_policy = None  # the paged cache is decode-step state
     if decode_at_use is None:
         decode_at_use = decode_per_step
     if shape.kind == "decode" and not decode_per_step:
@@ -181,6 +195,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
             kw.update(plan=plan, abstract=abstract, with_flags=flags)
             rec["protection"] = _plan_record(plan)
             rec["protection"]["flags_output"] = bool(flags)
+        if kv_policy:
+            from repro.serving import kvcache
+            kvp = kvcache.get_kv_policy(kv_policy)
+            kw["kv_policy"] = kvp
+            rec["kv_policy"] = kv_policy
+            b_, s_ = shape.global_batch, shape.seq_len
+            cache_abs = jax.eval_shape(
+                lambda: kvcache.init_paged_cache(cfg, b_, s_, kvp))
+            rec["kv"] = {**kvcache.kv_bytes(cache_abs),
+                         "dense_bytes": kvcache.dense_kv_bytes(cfg, b_, s_),
+                         "scheme": kvp.scheme, "fused": kvp.fused,
+                         "page_size": kvp.page_size}
         step, args, in_sh, out_sh = specs.cell(cfg, shape, mesh, fsdp=fsdp, **kw)
         from jax.sharding import NamedSharding, PartitionSpec as P
         as_named = lambda tree: jax.tree.map(
@@ -269,6 +295,12 @@ def main():
                     help="comma-separated protection presets to sweep over "
                          "serving cells (each diffed vs the 'unprotected' "
                          "baseline cell)")
+    ap.add_argument("--kv-policy", default=None,
+                    help="comma-separated KV protection presets (see "
+                         "repro.serving.kvcache.KV_POLICY_PRESETS) swept "
+                         "over decode cells; protected-KV cells diff their "
+                         "peak HBM vs the 'unprotected' paged cell of the "
+                         "same (cell, policy, mode)")
     ap.add_argument("--resume", action="store_true",
                     help="skip cells already recorded ok in --out")
     args = ap.parse_args()
@@ -284,6 +316,16 @@ def main():
         if p not in protection.POLICY_PRESETS:
             ap.error(f"unknown policy preset {p!r}; one of "
                      f"{sorted(protection.POLICY_PRESETS)}")
+    from repro.serving import kvcache
+    kv_policies = [p.strip() for p in args.kv_policy.split(",") if p.strip()] \
+        if args.kv_policy else []
+    for p in kv_policies:
+        if p not in kvcache.KV_POLICY_PRESETS:
+            ap.error(f"unknown kv policy preset {p!r}; one of "
+                     f"{sorted(kvcache.KV_POLICY_PRESETS)}")
+    # the unprotected paged cell is every protected-KV cell's HBM baseline:
+    # compile it first so the deltas land on the same pass
+    kv_policies.sort(key=lambda p: p != "unprotected")
 
     cells = []
     archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
@@ -315,7 +357,7 @@ def main():
                 r = json.loads(line)
                 if r.get("status") in ("ok", "skipped"):
                     key = (r["arch"], r["shape"], r["mesh"], r.get("policy"),
-                           r.get("decode_mode"))
+                           r.get("decode_mode"), r.get("kv_policy"))
                     done.add(key)
                     prev[key] = r
 
@@ -345,6 +387,8 @@ def main():
         serving = SHAPES[s].kind != "train"
         cell_policies = policies if (policies and serving) else [None]
         cell_modes = modes if (policies and serving) else [None]
+        cell_kvs = kv_policies if (kv_policies
+                                   and SHAPES[s].kind == "decode") else [None]
         baseline = None
         base_mode = ("at-use" if not args.no_decode_per_step else
                      "per-step" if SHAPES[s].kind == "prefill" else "once")
@@ -352,7 +396,7 @@ def main():
                                            for p in cell_policies):
             # the delta baseline: same cell, int8 storage, zero checks,
             # decode-at-use (no whole-tree decode inflating its peak)
-            bkey = (a, s, mesh_name, "unprotected", base_mode)
+            bkey = (a, s, mesh_name, "unprotected", base_mode, None)
             if bkey in done:
                 baseline = prev.get(bkey)
             else:
@@ -364,30 +408,33 @@ def main():
                 prev[bkey] = baseline
         for pol in cell_policies:
             for mode in cell_modes:
+              for kvp in cell_kvs:
                 key_mode = mode if mode is not None else \
                     (base_mode if serving else None)
                 if (pol == "unprotected" and baseline is not None
-                        and mode == base_mode):
+                        and mode == base_mode and kvp is None):
                     continue  # already emitted as the baseline
-                if (a, s, mesh_name, pol, key_mode) in done:
+                if (a, s, mesh_name, pol, key_mode, kvp) in done:
                     print(f"[skip-done] {a} {s} {mesh_name} {pol or ''} "
-                          f"{key_mode or ''}", flush=True)
+                          f"{key_mode or ''} {kvp or ''}", flush=True)
                     continue
                 print(f"[cell] {a} {s} {mesh_name}"
                       f"{f' policy={pol}' if pol else ''}"
-                      f"{f' mode={mode}' if mode else ''} ...", flush=True)
+                      f"{f' mode={mode}' if mode else ''}"
+                      f"{f' kv={kvp}' if kvp else ''} ...", flush=True)
                 kw = dict(common)
                 if mode is not None:
                     kw["decode_at_use"] = mode != "per-step"
                     if mode == "at-use-int8":
                         kw["act_quant"] = "dynamic"
-                rec = run_cell(a, s, mp, policy=pol, baseline=baseline, **kw)
+                rec = run_cell(a, s, mp, policy=pol, baseline=baseline,
+                               kv_policy=kvp, **kw)
                 if mode == "at-use-int8":
                     # the delta the int8 path is judged by: vs the FLOAT
                     # at-use cell of the same (cell, policy); null deltas
                     # when that cell is missing (e.g. --serve-modes without
                     # at-use) rather than silently diffing against nothing
-                    fkey = (a, s, mesh_name, pol, "at-use")
+                    fkey = (a, s, mesh_name, pol, "at-use", kvp)
                     frec = prev.get(fkey)
                     if rec.get("status") == "ok":
                         deltas = {"hbm_delta_bytes": None,
@@ -404,10 +451,24 @@ def main():
                                     rec["collectives"]["total_wire_bytes"]
                                     - fwire)
                         rec["vs_float_at_use"] = deltas
+                if (kvp not in (None, "unprotected")
+                        and rec.get("status") == "ok"):
+                    # the CI envelope delta: protected-KV vs the unprotected
+                    # paged cell of the same (cell, policy, mode)
+                    tkey = (a, s, mesh_name, pol, key_mode, "unprotected")
+                    trec = prev.get(tkey)
+                    kv_delta = {"hbm_delta_bytes": None, "hbm_ratio": None}
+                    if trec and trec.get("status") == "ok":
+                        tpeak = _peak_bytes(trec.get("memory", {}))
+                        peak = _peak_bytes(rec.get("memory", {}))
+                        if None not in (peak, tpeak) and tpeak:
+                            kv_delta["hbm_delta_bytes"] = peak - tpeak
+                            kv_delta["hbm_ratio"] = (peak - tpeak) / tpeak
+                    rec["kv_vs_unprotected"] = kv_delta
                 emit(rec)
                 if rec.get("status") in ("ok", "skipped"):
-                    done.add((a, s, mesh_name, pol, key_mode))
-                    prev[(a, s, mesh_name, pol, key_mode)] = rec
+                    done.add((a, s, mesh_name, pol, key_mode, kvp))
+                    prev[(a, s, mesh_name, pol, key_mode, kvp)] = rec
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro import configs, protection
 from repro.models import lm
-from repro.serving import protected
+from repro.serving import kvcache, protected
 
 
 def inject_tree(enc_params, rate: float, seed: int):
@@ -84,6 +84,11 @@ def main():
                          "(overrides --scheme)")
     ap.add_argument("--autotune", default=None, metavar="BENCH_kernels.json",
                     help="shape-keyed backend table for per-leaf dispatch")
+    ap.add_argument("--kv-policy", default=None,
+                    choices=sorted(kvcache.KV_POLICY_PRESETS),
+                    help="serve against the paged protected KV cache under "
+                         "this preset; with --fault-rate, faults are also "
+                         "injected into the LIVE cache pools mid-run")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -113,29 +118,56 @@ def main():
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 
+    kvp = kvcache.get_kv_policy(args.kv_policy)
     serve_step = jax.jit(protected.make_serve_step(cfg, plan=plan,
-                                                   with_flags=True))
-    cache = lm.init_cache(cfg, args.batch, max(64, args.tokens * 2))
+                                                   with_flags=True,
+                                                   kv_policy=kvp))
+    max_len = max(64, args.tokens * 2)
+    cache = kvcache.init_cache(cfg, args.batch, max_len, kv_policy=kvp)
+    if kvp is not None:
+        kb = kvcache.kv_bytes(cache)
+        dense = kvcache.dense_kv_bytes(cfg, args.batch, max_len)
+        print(f"[serve] paged KV cache ({kvp.scheme}, page_size="
+              f"{kvp.page_size}): stored {kb['stored']}B + checks "
+              f"{kb['checks']}B + scales {kb['scales']}B (dense bf16 cache: "
+              f"{dense}B)")
     tokens = jnp.zeros((args.batch, 1), jnp.int32)
     t0 = time.time()
     out, step_flags = [], []
     for t in range(args.tokens):
+        if (kvp is not None and args.fault_rate and t == args.tokens // 2
+                and t > 0):
+            # the serving-state fault story: hit the LIVE pools mid-run, so
+            # every later step decodes (and corrects) a faulted history
+            tree = kvcache.as_protected_tree(cache, kvp)
+            dirty = protection.inject_tree_device(
+                tree, args.fault_rate, jax.random.PRNGKey(args.seed + 3))
+            cache = kvcache.from_protected_tree(cache, dirty)
+            print(f"[serve] injected faults into the live KV pools at "
+                  f"step {t}")
         pos = jnp.full((args.batch,), t, jnp.int32)
         logits, cache, flags = serve_step(enc, cache, tokens, pos)
         tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(int(tokens[0, 0]))
         step_flags.append(flags)  # device arrays; summed after the timer
     dt = time.time() - t0
-    corrected = due = 0
+    corrected = due = kv_corrected = kv_due = 0
     for flags in step_flags:
-        for v in flags.values():
+        for k, v in flags.items():
             pair = jnp.sum(jnp.asarray(v).reshape(-1, 2), axis=0)
-            corrected += int(pair[0])
-            due += int(pair[1])
+            if k == "layers_kv":
+                kv_corrected += int(pair[0])
+                kv_due += int(pair[1])
+            else:
+                corrected += int(pair[0])
+                due += int(pair[1])
     print(f"[serve] {args.tokens} steps x batch {args.batch} in {dt:.2f}s "
           f"({args.tokens * args.batch / dt:.1f} tok/s)")
     print(f"[serve] decode-at-use fault accounting over the run: "
           f"{corrected} corrected, {due} DUE (detected-uncorrectable)")
+    if kvp is not None:
+        print(f"[serve] KV decode-at-use accounting: {kv_corrected} "
+              f"corrected, {kv_due} DUE")
     print(f"[serve] sample continuation: {out}")
 
 

@@ -116,7 +116,8 @@ def serving_plan(cfg: ArchConfig, mesh, *, fsdp=None, policy=None):
 
 def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                 decode_per_step=True, decode_at_use=None, with_flags=False,
-                policy=None, plan=None, abstract=None, act_quant=None):
+                policy=None, plan=None, abstract=None, act_quant=None,
+                kv_policy=None):
     """Protected-serving decode cell (one new token, KV cache of seq_len).
 
     The cell is plan-driven: ``plan`` (or ``policy``, materialized here)
@@ -130,8 +131,11 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
     ablation. with_flags adds the per-layer (corrected, DUE) counts as a
     third (replicated) output. act_quant ("dynamic" | "static" | "plan")
     compiles the int8 activation-quantized at-use step instead of the
-    float one."""
+    float one. kv_policy (a KVProtectionPolicy or preset name) swaps the
+    dense ring buffers for the paged protected KV cache."""
+    from repro.serving import kvcache
     lm.set_sharding_ctx(None)
+    kvp = kvcache.get_kv_policy(kv_policy)
     if plan is None:
         plan, abstract = serving_plan(cfg, mesh, fsdp=fsdp, policy=policy)
     elif abstract is None:
@@ -139,7 +143,8 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
             lambda: lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
     b, s = shape.global_batch, shape.seq_len
     enc = jax.eval_shape(plan.encode_tree, abstract)
-    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    cache = jax.eval_shape(
+        lambda: kvcache.init_cache(cfg, b, s, kv_policy=kvp))
     tokens = _sds((b, 1), jnp.int32)
     pos = _sds((b,), jnp.int32)
 
@@ -152,7 +157,8 @@ def decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, fsdp=None,
                                            decode_per_step=decode_per_step,
                                            decode_at_use=decode_at_use,
                                            with_flags=with_flags,
-                                           act_quant=act_quant)
+                                           act_quant=act_quant,
+                                           kv_policy=kvp)
 
     def step(enc_params, cache, tokens, pos):
         return step_inner(enc_params, cache, tokens, pos)
@@ -233,7 +239,7 @@ def cell(cfg: ArchConfig, shape: ShapeConfig, mesh, **kw):
                        **{k: v for k, v in kw.items()
                           if k in ("fsdp", "decode_per_step", "decode_at_use",
                                    "with_flags", "policy", "plan",
-                                   "abstract", "act_quant")})
+                                   "abstract", "act_quant", "kv_policy")})
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:

@@ -77,6 +77,41 @@ def drain_flags():
 
 
 # --------------------------------------------------------------------------
+# KV fault-flags sink: the paged protected KV cache records the (corrected,
+# due) counts each layer's decode-at-use attention observed over its valid
+# cached tokens — kept separate from the weight sink so per-layer rows
+# report weight and state faults side by side. Same trace-time contract.
+# --------------------------------------------------------------------------
+
+_KV_FLAGS_SINK: list | None = None
+
+
+def set_kv_flags_sink(sink: list | None):
+    global _KV_FLAGS_SINK
+    _KV_FLAGS_SINK = sink
+
+
+def kv_flags_sink() -> list | None:
+    return _KV_FLAGS_SINK
+
+
+def record_kv_flags(corrected, due):
+    if _KV_FLAGS_SINK is not None:
+        _KV_FLAGS_SINK.append((corrected, due))
+
+
+def drain_kv_flags():
+    """Sum and clear the recorded KV (corrected, due) pairs -> (2,) int32."""
+    total = jnp.zeros((2,), jnp.int32)
+    if _KV_FLAGS_SINK:
+        total = sum((jnp.stack([jnp.asarray(c, jnp.int32).reshape(()),
+                                jnp.asarray(d, jnp.int32).reshape(())])
+                     for c, d in _KV_FLAGS_SINK), total)
+        _KV_FLAGS_SINK.clear()
+    return total
+
+
+# --------------------------------------------------------------------------
 # activation-stats sink: the int8 calibration pass sets a dict sink; every
 # decode-at-use matmul records its float activation absmax keyed by the
 # leaf's plan path, and lm.forward drains per scanned layer so the scan
@@ -372,9 +407,16 @@ def gqa_decode(p, x, cfg, cache, *, pos, wt=Identity, window=0):
     rep = h // kv
     kh = jnp.repeat(kc, rep, axis=2).transpose(0, 2, 1, 3)  # (B,H,Smax,hd)
     vh = jnp.repeat(vc, rep, axis=2).transpose(0, 2, 1, 3)
-    if window:  # ring buffer: all slots valid once wrapped, else <= pos
-        valid = jnp.logical_or(jnp.arange(smax)[None, :] <= pos[:, None],
-                               (pos >= smax)[:, None])
+    if window:
+        # ring buffer: slot j holds the newest token t <= pos with
+        # t % smax == j, whose age is (pos - j) % smax. A slot is valid iff
+        # that age is inside the window AND the slot was ever written
+        # (age <= pos). The old "all slots valid once pos >= smax" mask
+        # silently widened the window to smax whenever the cache was
+        # allocated larger than the window, admitting stale tokens.
+        age = (pos[:, None] - jnp.arange(smax)[None, :]) % smax
+        valid = jnp.logical_and(age < min(window, smax),
+                                age <= pos[:, None])
     else:
         valid = jnp.arange(smax)[None, :] <= pos[:, None]
     o = decode_attention(q.transpose(0, 2, 1, 3), kh, vh, valid)

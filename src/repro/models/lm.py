@@ -416,19 +416,35 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     raise ValueError(f)
 
 
+def _paged_attn_decode(lp, h, cfg, lc, pos, wt, kv_policy):
+    from repro.serving import kvcache  # deferred: serving builds on lm
+    if kv_policy is None:
+        raise ValueError("cache is paged (k_pages present) but no kv_policy "
+                         "was passed to decode_step")
+    return kvcache.paged_gqa_decode(lp["attn"], h, cfg, lc, pos=pos, wt=wt,
+                                    policy=kvcache.get_kv_policy(kv_policy))
+
+
 def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
                 wt=Identity, dtype=jnp.bfloat16, layer_transform=None,
-                collect_flags=False):
+                collect_flags=False, kv_policy=None):
     """One decode step. tokens: (B,1) int32; pos: (B,) int32.
     Returns (logits (B,1,V), new_cache); with collect_flags=True,
     (logits, new_cache, flags) where flags maps "layers" (and "tail") to
     (n, 2) int32 per-layer (corrected, due) fault counts drained from the
-    layers-module flags sink."""
+    layers-module flags sink.
+
+    When ``cache`` is a paged protected KV cache
+    (``serving.kvcache.init_paged_cache``; marked by its "k_pages" pools),
+    attention routes through the decode-at-use paged path under
+    ``kv_policy`` and collect_flags additionally returns a "layers_kv" row
+    of per-layer KV (corrected, due) counts."""
     flags: dict = {}
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family in ("vlm", "hybrid"):
         x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
     f = cfg.family
+    kv_paged = "k_pages" in cache
 
     lt_layers = _scoped_lt(layer_transform, "layers")
     lt_tail = _scoped_lt(layer_transform, "tail")
@@ -439,8 +455,13 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
             lp = lt_layers(lp)
         if f in ("dense", "vlm", "encdec"):
             h = L.apply_norm(x, lp["ln1"], cfg.norm)
-            o, newkv = L.gqa_decode(lp["attn"], h, cfg,
-                                    {"k": lc["k"], "v": lc["v"]}, pos=pos, wt=wt)
+            if kv_paged:
+                o, newkv = _paged_attn_decode(lp, h, cfg, lc, pos, wt,
+                                              kv_policy)
+            else:
+                o, newkv = L.gqa_decode(lp["attn"], h, cfg,
+                                        {"k": lc["k"], "v": lc["v"]},
+                                        pos=pos, wt=wt)
             x = x + o
             nc = dict(newkv)
             if f == "encdec":
@@ -460,6 +481,9 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
                 o, newkv = L.mla_decode(lp["attn"], h, cfg,
                                         {"latent": lc["latent"],
                                          "k_rope": lc["k_rope"]}, pos=pos, wt=wt)
+            elif kv_paged:
+                o, newkv = _paged_attn_decode(lp, h, cfg, lc, pos, wt,
+                                              kv_policy)
             else:
                 o, newkv = L.gqa_decode(lp["attn"], h, cfg,
                                         {"k": lc["k"], "v": lc["v"]},
@@ -494,15 +518,26 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
         raise ValueError(f)
 
     layer_cache = {k_: v for k_, v in cache.items() if not k_.startswith("tail")}
+    collect_kv = collect_flags and kv_paged
 
     def scan_blk(x, lp_lc):
         x, nc = blk(x, lp_lc)
-        return x, (nc, L.drain_flags() if collect_flags else None)
+        return x, (nc, L.drain_flags() if collect_flags else None,
+                   L.drain_kv_flags() if collect_kv else None)
 
-    x, (new_cache, layer_flags) = jax.lax.scan(
-        scan_blk, x, (params["layers"], layer_cache))
+    prev_kv_sink = L.kv_flags_sink()
+    if collect_kv:
+        L.set_kv_flags_sink([])
+    try:
+        x, (new_cache, layer_flags, layer_kv_flags) = jax.lax.scan(
+            scan_blk, x, (params["layers"], layer_cache))
+    finally:
+        if collect_kv:
+            L.set_kv_flags_sink(prev_kv_sink)
     if collect_flags:
         flags["layers"] = layer_flags
+        if collect_kv:
+            flags["layers_kv"] = layer_kv_flags
 
     out_cache = dict(new_cache)
     if f == "hybrid" and "tail" in params:
@@ -530,3 +565,72 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     logits = L.logits(x, head, wt)
     return (logits, out_cache, flags) if collect_flags else (logits, out_cache)
+
+
+def prefill_with_cache(cfg: ArchConfig, params, cache, tokens, *, wt=Identity,
+                       dtype=jnp.bfloat16, chunk: int = 2048,
+                       layer_transform=None, collect_flags=False,
+                       kv_policy=None):
+    """Full-sequence prefill that also fills a paged protected KV cache.
+
+    tokens: (B, S) int32; ``cache`` from ``serving.kvcache.init_paged_cache``
+    (S <= page capacity). Unlike ``forward``, every layer's K/V stream is
+    encoded into its pages and the attention runs over the decoded-at-use
+    pages, so the logits reflect exactly the state subsequent
+    ``decode_step`` calls will read. Returns (logits (B, S, V), new_cache);
+    with collect_flags=True additionally a flags dict with "layers" (weight)
+    and "layers_kv" (KV) per-layer (corrected, due) rows."""
+    from repro.serving import kvcache  # deferred: serving builds on lm
+    if "k_pages" not in cache:
+        raise ValueError("prefill_with_cache expects a paged cache "
+                         "(serving.kvcache.init_paged_cache)")
+    policy = kvcache.get_kv_policy(kv_policy)
+    if policy is None:
+        raise ValueError("kv_policy is required for a paged cache")
+    if not kvcache.supports_paged(cfg):
+        raise ValueError(f"paged prefill unsupported for family "
+                         f"{cfg.family!r}")
+    f = cfg.family
+    flags: dict = {}
+    x = L.embed(tokens, params["embed"], dtype)
+    if f in ("vlm", "hybrid"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    lt_layers = _scoped_lt(layer_transform, "layers")
+
+    def blk(x, lp_lc):
+        lp, lc = lp_lc
+        if lt_layers is not None:
+            lp = lt_layers(lp)
+        x = _constrain_residual(x)
+        h = L.apply_norm(x, lp["ln1"], cfg.norm)
+        o, newkv = kvcache.paged_gqa_prefill(lp["attn"], h, cfg, lc,
+                                             positions=positions, wt=wt,
+                                             policy=policy, chunk=chunk)
+        x = x + o
+        h2 = L.apply_norm(x, lp["ln2"], cfg.norm)
+        if f == "moe":
+            x = x + L.moe(lp["moe"], h2, cfg, wt)
+        else:
+            x = x + L.swiglu(lp["mlp"], h2, wt)
+        return x, (newkv, L.drain_flags() if collect_flags else None,
+                   L.drain_kv_flags() if collect_flags else None)
+
+    prev_kv_sink = L.kv_flags_sink()
+    if collect_flags:
+        L.set_kv_flags_sink([])
+    try:
+        x, (new_cache, layer_flags, layer_kv_flags) = jax.lax.scan(
+            blk, x, (params["layers"], cache))
+    finally:
+        if collect_flags:
+            L.set_kv_flags_sink(prev_kv_sink)
+    if collect_flags:
+        flags["layers"] = layer_flags
+        flags["layers_kv"] = layer_kv_flags
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = L.logits(x, head, wt)
+    return (logits, new_cache, flags) if collect_flags else (logits, new_cache)

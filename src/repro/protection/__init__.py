@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA,
                        BENCH_KERNELS_SCHEMA_V1, BENCH_KERNELS_SCHEMA_V2,
+                       BENCH_KERNELS_SCHEMA_V3,
                        AutotuneTable, Backend, PallasBackend, XlaBackend,
                        get_backend)
 from .campaign import (CampaignResult, accuracy_eval, due_campaign, due_eval,
@@ -55,7 +56,7 @@ __all__ = [
     "spec_tree", "space_overhead", "ProtectedWeight", "can_fuse",
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
     "AutotuneTable", "BENCH_KERNELS_SCHEMA", "BENCH_KERNELS_SCHEMA_V1",
-    "BENCH_KERNELS_SCHEMA_V2",
+    "BENCH_KERNELS_SCHEMA_V2", "BENCH_KERNELS_SCHEMA_V3",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
     "CampaignResult", "run_campaign", "run_campaign_host",
     "fidelity_campaign", "due_campaign", "accuracy_eval", "fidelity_eval",

@@ -26,7 +26,8 @@ from repro.core import ecc
 
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
            "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA",
-           "BENCH_KERNELS_SCHEMA_V1", "BENCH_KERNELS_SCHEMA_V2"]
+           "BENCH_KERNELS_SCHEMA_V1", "BENCH_KERNELS_SCHEMA_V2",
+           "BENCH_KERNELS_SCHEMA_V3"]
 
 
 class Backend:
@@ -114,7 +115,8 @@ BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
 
 BENCH_KERNELS_SCHEMA_V1 = "bench_kernels/v1"
 BENCH_KERNELS_SCHEMA_V2 = "bench_kernels/v2"
-BENCH_KERNELS_SCHEMA = "bench_kernels/v3"
+BENCH_KERNELS_SCHEMA_V3 = "bench_kernels/v3"
+BENCH_KERNELS_SCHEMA = "bench_kernels/v4"
 
 
 class AutotuneTable:
@@ -128,8 +130,13 @@ class AutotuneTable:
     ``"fused_us"``; ``bench_kernels/v3`` entries add the int8-epilogue rows
     ``"int8_tiles": [bm, bn, 0]`` and ``"fused_int8_us"`` (the quantized
     serving path — the epilogue always runs full-K tiles, so bk is 0).
-    v1/v2 artifacts still load — their entries simply have no (int8) tile
-    opinion.
+    ``bench_kernels/v4`` artifacts additionally carry a top-level
+    ``"attention"`` list: fused page-attention (decode-at-use over the
+    protected KV cache) vs decode-then-attend reference timings per
+    ``(batch, seq, kv_heads, head_dim)`` shape and KV scheme — surfaced on
+    :attr:`attention` for reporting, not consulted by the lookups.
+    v1/v2/v3 artifacts still load — their entries simply have no (int8)
+    tile opinion and an empty :attr:`attention`.
 
     :meth:`lookup` (backend choice) resolves an exact shape match first,
     then the nearest entry by 64-bit-block count within a 4x factor, else
@@ -144,7 +151,8 @@ class AutotuneTable:
     """
 
     def __init__(self, entries=(), *, platform: str = "", source: str = "",
-                 schema: str = BENCH_KERNELS_SCHEMA):
+                 schema: str = BENCH_KERNELS_SCHEMA, attention=()):
+        self.attention = [dict(a) for a in attention]
         self.entries = []
         for e in entries:
             e = dict(e)
@@ -218,23 +226,27 @@ class AutotuneTable:
         return self.lookup_tiles_src(shape, key="int8_tiles")[0]
 
     def to_dict(self) -> dict:
-        return {"schema": self.schema, "platform": self.platform,
-                "entries": [{**e, "shape": list(e["shape"]),
-                             **{k: list(e[k]) for k in
-                                ("tiles", "int8_tiles") if e.get(k)}}
-                            for e in self.entries]}
+        d = {"schema": self.schema, "platform": self.platform,
+             "entries": [{**e, "shape": list(e["shape"]),
+                          **{k: list(e[k]) for k in
+                             ("tiles", "int8_tiles") if e.get(k)}}
+                         for e in self.entries]}
+        if self.attention:
+            d["attention"] = [dict(a) for a in self.attention]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
         schema = d.get("schema", "")
-        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V2,
-                 BENCH_KERNELS_SCHEMA_V1)
+        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V3,
+                 BENCH_KERNELS_SCHEMA_V2, BENCH_KERNELS_SCHEMA_V1)
         if schema and schema not in known:
             raise ValueError(
                 f"unsupported autotune schema {schema!r} (expected one of "
                 f"{known})")
         return cls(d.get("entries", ()), platform=d.get("platform", ""),
-                   source=source, schema=schema or BENCH_KERNELS_SCHEMA_V1)
+                   source=source, schema=schema or BENCH_KERNELS_SCHEMA_V1,
+                   attention=d.get("attention", ()))
 
     @classmethod
     def from_json(cls, path) -> "AutotuneTable":

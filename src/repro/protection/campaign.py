@@ -71,6 +71,9 @@ class CampaignResult:
     backend: str               # protection backend ("xla" | "pallas")
     platform: str              # jax device platform ("cpu", "tpu", ...)
     device: str                # jax device kind string
+    target: str = "weights"    # what the faults hit: "weights" | "kv" | "both"
+    layer_rows: tuple = ()     # (n_layers, 2) per-layer KV (corrected, due)
+    #                            at max(rates) — () unless target covers KV
 
     # -- derived views -------------------------------------------------------
 
@@ -96,6 +99,7 @@ class CampaignResult:
         d = dataclasses.asdict(self)
         d["rates"] = list(self.rates)
         d["grid"] = [list(row) for row in self.grid]
+        d["layer_rows"] = [list(row) for row in self.layer_rows]
         d["derived"] = {"mean": list(self.mean()), "std": list(self.std()),
                         "drop": list(self.drop())}
         return d
@@ -106,6 +110,8 @@ class CampaignResult:
         kw = {k: v for k, v in d.items() if k in fields}
         kw["rates"] = tuple(kw["rates"])
         kw["grid"] = tuple(tuple(row) for row in kw["grid"])
+        kw["layer_rows"] = tuple(tuple(int(v) for v in row)
+                                 for row in kw.get("layer_rows", ()))
         return cls(**kw)
 
     def to_json(self, **kw) -> str:
@@ -323,20 +329,50 @@ def fidelity_campaign(tree, policy=None, rates=(1e-4,), trials=2, key=None,
 
 
 def due_campaign(tree, policy=None, rates=(1e-4,), trials=2, key=None,
-                 batch="vmap", *, what="due") -> CampaignResult:
+                 batch="vmap", *, what="due", target="weights",
+                 kv_tree=None) -> CampaignResult:
     """Fault-accounting campaign: metric = total detected-uncorrectable
     (double-error, DUE) count across protected leaves per cell — the same
     per-leaf flags the decode-at-use serve step reports per layer, swept
     over the (rate x trial) grid in one compiled program.  At the paper's
     fault model the in-place (64,57,1) code corrects all singles, so the DUE
     curve is exactly the residual risk curve; ``what="corrected"`` sweeps
-    the repair counts instead."""
+    the repair counts instead.
+
+    ``target`` picks what the faults hit: "weights" (default, ``tree``),
+    "kv" (a paged KV cache's ProtectedTensor pools — build ``kv_tree`` with
+    :func:`repro.serving.kvcache.as_protected_tree`), or "both" (one grid
+    over the combined state).  When the target covers KV, the result also
+    carries ``layer_rows``: per-layer (corrected, DUE) counts from one
+    representative injection at ``max(rates)`` — the serving-state analogue
+    of the per-layer weight flags."""
+    if target not in ("weights", "kv", "both"):
+        raise ValueError(f"target {target!r}; one of "
+                         f"('weights', 'kv', 'both')")
+    if target != "weights" and kv_tree is None:
+        raise ValueError(f"target={target!r} needs kv_tree (see "
+                         f"repro.serving.kvcache.as_protected_tree)")
     policy = _as_policy(policy if policy is not None else "in-place")
     key = jax.random.PRNGKey(0) if key is None else key
-    enc = tree if _is_encoded(tree) else policy.encode_tree(tree)
+    if target == "kv":
+        enc = kv_tree
+    else:
+        wtree = tree if _is_encoded(tree) else policy.encode_tree(tree)
+        enc = wtree if target == "weights" else {"weights": wtree,
+                                                 "kv": kv_tree}
     ev = due_eval(backend=policy.backend, what=what)
-    return _run_grid(enc, ev, rates, trials, key, batch, policy.backend,
-                     f"{what}_count")
+    res = _run_grid(enc, ev, rates, trials, key, batch, policy.backend,
+                    f"{what}_count")
+    res = dataclasses.replace(res, target=target)
+    if target != "weights":
+        from repro.serving import kvcache  # deferred: serving builds on us
+        dirty = inject_tree_device(kv_tree, max(rates), key,
+                                   max_rate=max(rates))
+        rows = np.asarray(kvcache.tree_layer_flags(
+            dirty, backend=getattr(policy.backend, "name", policy.backend)))
+        res = dataclasses.replace(
+            res, layer_rows=tuple(tuple(int(v) for v in r) for r in rows))
+    return res
 
 
 def run_campaign_host(params, fwd, tmpl, policy, rates=RATES, trials=5,

@@ -132,10 +132,12 @@ class ProtectionPlan:
     that does not match the plan.
     """
 
-    def __init__(self, policy, leaves: dict, *, mesh_axes=None):
+    def __init__(self, policy, leaves: dict, *, mesh_axes=None,
+                 kv_policy=None):
         self.policy = policy
         self.leaves = leaves
         self.mesh_axes = mesh_axes
+        self.kv_policy = kv_policy
 
     # -- lookup --------------------------------------------------------------
 
@@ -209,6 +211,10 @@ class ProtectionPlan:
             "n_flat_sharded": sum(lp.flat_sharded for lp in prot),
             "tiles_src": self._count(prot, "tiles_src"),
             "act_quant": self._count(prot, "act_quant"),
+            "kv_policy": ({"scheme": self.kv_policy.scheme,
+                           "fused": self.kv_policy.fused,
+                           "page_size": self.kv_policy.page_size}
+                          if self.kv_policy is not None else None),
         }
 
     @staticmethod
@@ -255,7 +261,23 @@ class ProtectionPlan:
                     if p in scales else lp
             else:
                 leaves[p] = dataclasses.replace(lp, act_quant="dynamic")
-        return ProtectionPlan(self.policy, leaves, mesh_axes=self.mesh_axes)
+        return ProtectionPlan(self.policy, leaves, mesh_axes=self.mesh_axes,
+                              kv_policy=self.kv_policy)
+
+    # -- serving-state (KV cache) protection ----------------------------------
+
+    def with_kv_policy(self, kv_policy) -> "ProtectionPlan":
+        """A new plan that also carries a serving-state decision: the
+        ``KVProtectionPolicy`` (or preset name) protecting the paged KV
+        cache. Weight leaves are untouched — KV pages are protected
+        per-token at write time, not planned per leaf — but serving
+        entry points (``make_serve_step`` / ``make_prefill``) default
+        their ``kv_policy`` from the plan, so one object routes both the
+        weight and the serving-state protection story."""
+        from repro.serving import kvcache  # deferred: serving builds on us
+        return ProtectionPlan(self.policy, self.leaves,
+                              mesh_axes=self.mesh_axes,
+                              kv_policy=kvcache.get_kv_policy(kv_policy))
 
     def coverage(self):
         """The plan as a :class:`CoverageReport` (the legacy view)."""

@@ -1,1 +1,2 @@
+from . import kvcache  # noqa: F401
 from . import protected  # noqa: F401

@@ -242,7 +242,8 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
                     decode_at_use: Optional[bool] = None,
                     dtype=jnp.bfloat16, backend="xla",
                     with_flags: bool = False,
-                    act_quant: Optional[str] = None):
+                    act_quant: Optional[str] = None,
+                    kv_policy=None):
     """serve_step(enc_params, cache, tokens, pos) -> (logits, cache)
     (``+ flags`` with ``with_flags=True``).
 
@@ -263,7 +264,20 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
     "static" (calibrated per-leaf scales — see :func:`calibrate_act_scales`
     and ``plan.with_act_quant``), or "plan" (follow each leaf's plan
     decision). Decode-at-use only.
+
+    ``kv_policy`` (a :class:`~repro.serving.kvcache.KVProtectionPolicy` or
+    preset name) serves against a paged protected KV cache from
+    :func:`~repro.serving.kvcache.init_paged_cache`; with ``with_flags`` the
+    flags dict then also carries the per-layer "layers_kv" KV rows. Works in
+    every decode mode — KV protection is orthogonal to how the weights
+    decode. When ``kv_policy`` is not given it defaults from
+    ``plan.kv_policy`` (set via ``ProtectionPlan.with_kv_policy``), so one
+    plan object can carry both the weight and the serving-state decisions.
     """
+    from . import kvcache
+    if kv_policy is None and plan is not None:
+        kv_policy = getattr(plan, "kv_policy", None)
+    kvp = kvcache.get_kv_policy(kv_policy)
     if decode_at_use is None:
         decode_at_use = decode_per_step
     if act_quant is not None and not (decode_at_use and decode_per_step):
@@ -281,7 +295,8 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
                 top_flags = L.drain_flags() if with_flags else None
                 out = lm.decode_step(cfg, params, cache, tokens, pos,
                                      dtype=dtype, layer_transform=lt,
-                                     collect_flags=with_flags)
+                                     collect_flags=with_flags,
+                                     kv_policy=kvp)
                 if with_flags:  # the output head decodes after the scans
                     top_flags = top_flags + L.drain_flags()
             finally:
@@ -300,7 +315,8 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
 
     def serve_step(enc_params, cache, tokens, pos):
         params = decode(enc_params) if decode_per_step else enc_params
-        return lm.decode_step(cfg, params, cache, tokens, pos, dtype=dtype)
+        return lm.decode_step(cfg, params, cache, tokens, pos, dtype=dtype,
+                              kv_policy=kvp)
 
     return serve_step
 
@@ -308,33 +324,66 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
 def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
                  chunk: int = 2048, backend="xla",
                  decode_at_use: bool = True, with_flags: bool = False,
-                 act_quant: Optional[str] = None):
+                 act_quant: Optional[str] = None, kv_policy=None):
     """prefill(enc_params, tokens, extras) -> logits (``+ flags`` with
     ``with_flags=True``). Decode-at-use by default, same routing as
     :func:`make_serve_step` (including the ``act_quant`` int8 path);
-    ``decode_at_use=False`` keeps the whole-tree decode ablation."""
+    ``decode_at_use=False`` keeps the whole-tree decode ablation.
+
+    With ``kv_policy`` the returned callable is instead
+    ``prefill(enc_params, cache, tokens, extras=None) -> (logits, cache)``
+    (``+ flags``): it fills the paged protected KV cache through
+    ``lm.prefill_with_cache`` so decode steps can continue from it, and the
+    flags dict gains the per-layer "layers_kv" rows."""
+    from . import kvcache
+    if kv_policy is None and plan is not None:
+        kv_policy = getattr(plan, "kv_policy", None)
+    kvp = kvcache.get_kv_policy(kv_policy)
     if act_quant is not None and not decode_at_use:
         raise ValueError("act_quant needs the decode-at-use prefill")
+
+    def parse_args(args, extras):
+        """(tokens[, extras]) without kv_policy; (cache, tokens[, extras])
+        with — extras stays positional-compatible either way."""
+        want = 2 if kvp is not None else 1
+        if len(args) not in (want, want + 1):
+            raise TypeError(f"prefill takes {want} positional args after "
+                            f"enc_params (+ optional extras); got {len(args)}")
+        if len(args) == want + 1:
+            extras = args[-1]
+        cache = args[0] if kvp is not None else None
+        tokens = args[want - 1]
+        return cache, tokens, extras or {}
+
     if decode_at_use:
         router = _Router(plan, backend, act_quant=act_quant)
         lt = _layer_transform(router, dtype)
 
-        def prefill(enc_params, tokens, extras=None):
+        def prefill(enc_params, *args, extras=None):
+            cache, tokens, extras = parse_args(args, extras)
             sink: list = []
             L.set_flags_sink(sink if with_flags else None)
             try:
                 params = _use_tree(enc_params, router, dtype)
                 top_flags = L.drain_flags() if with_flags else None
-                extras = extras or {}
-                out = lm.forward(cfg, params, tokens, dtype=dtype,
-                                 chunk=chunk, layer_transform=lt,
-                                 collect_flags=with_flags, **extras)
+                if kvp is not None:
+                    out = lm.prefill_with_cache(
+                        cfg, params, cache, tokens, dtype=dtype, chunk=chunk,
+                        layer_transform=lt, collect_flags=with_flags,
+                        kv_policy=kvp)
+                else:
+                    out = lm.forward(cfg, params, tokens, dtype=dtype,
+                                     chunk=chunk, layer_transform=lt,
+                                     collect_flags=with_flags, **extras)
                 if with_flags:  # the output head decodes after the scans
                     top_flags = top_flags + L.drain_flags()
             finally:
                 L.set_flags_sink(None)
             if not with_flags:
                 return out
+            if kvp is not None:
+                logits, new_cache, flags = out
+                return logits, new_cache, {"top": top_flags, **flags}
             logits, flags = out
             return logits, {"top": top_flags, **flags}
 
@@ -344,9 +393,13 @@ def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
         raise ValueError("with_flags needs the decode-at-use prefill")
     decode = _decoder(plan, dtype, backend)
 
-    def prefill(enc_params, tokens, extras=None):
+    def prefill(enc_params, *args, extras=None):
+        cache, tokens, extras = parse_args(args, extras)
         params = decode(enc_params)
-        extras = extras or {}
+        if kvp is not None:
+            return lm.prefill_with_cache(cfg, params, cache, tokens,
+                                         dtype=dtype, chunk=chunk,
+                                         kv_policy=kvp)
         return lm.forward(cfg, params, tokens, dtype=dtype, chunk=chunk,
                           **extras)
     return prefill

@@ -1,0 +1,229 @@
+"""Burst-load serving benchmark: seeded request waves through the
+continuous-batching front-end, with an SLO comparison against the
+unprotected-KV twin.
+
+Replays a deterministic wave workload (``repro.serving.frontend.
+make_waves``) through the request-level front-end under one or more KV
+protection policies and fault rates, and emits:
+
+* ``telemetry_<policy>_r<rate>.jsonl`` — the raw event stream
+* ``requests_<policy>_r<rate>.csv``   — one row per request
+* ``summary.json``                    — per-cell roll-ups (throughput,
+  p50/p95/p99 TTFT + per-token latency, queue depth, DUE-per-request,
+  page-pool accounting) plus an ``slo`` section comparing each protected
+  cell's p99 per-token latency against the unprotected twin at the same
+  fault rate.
+
+  PYTHONPATH=src python benchmarks/burst_sim.py --smoke \
+      --out-dir results/burst [--kv-policies unprotected,in-place] \
+      [--fault-rates 0,1e-3] [--seed 0]
+
+``--smoke`` is the CI micro-run: 2 waves x 3 requests on the
+deepseek-7b smoke config — small enough to compile and drain on a CPU
+runner, large enough to exercise admission, queueing, eviction, and page
+reuse. Determinism contract: for a fixed ``--seed`` the deterministic
+view of every telemetry stream (wall-clock fields stripped) and every
+token stream is bit-identical run-to-run; CI asserts the SLO envelope on
+top (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs, protection  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.serving import frontend, kvcache, protected  # noqa: E402
+from repro.serving import telemetry  # noqa: E402
+
+
+def _cell_tag(policy: str, rate: float) -> str:
+    return f"{policy}_r{rate:g}"
+
+
+def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
+             slots, max_len, n_pages, seed, out_dir=None):
+    """(policy x rate) grid over one workload; shares one jitted serve
+    step per policy across its rate axis (and across twin comparisons) so
+    wall-clock cells differ by faults, not compile noise."""
+    cells = {}
+    for pol_name in kv_policies:
+        kvp = kvcache.get_kv_policy(pol_name)
+        if not kvp.fused:
+            import dataclasses
+            kvp = dataclasses.replace(kvp, per_slot_flags=True)
+        step = jax.jit(protected.make_serve_step(
+            cfg, plan=plan, with_flags=True, kv_policy=kvp))
+        for rate in fault_rates:
+            tag = _cell_tag(pol_name, rate)
+            tpath = (os.path.join(out_dir, f"telemetry_{tag}.jsonl")
+                     if out_dir else None)
+            # run every cell three times: the first eats serve-step and
+            # injection compiles (keeping them out of the latency
+            # percentiles); the two measured runs double as the
+            # bit-determinism check, and each wall-clock percentile takes
+            # the min of the pair — a scheduler hiccup in one run cannot
+            # flip the SLO gate.
+            warm_ev, _, warm_res = frontend.run_burst(
+                cfg, enc, plan=plan, waves=waves, slots=slots,
+                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
+                fault_rate=rate, fault_seed=seed, serve_step=step)
+            ev_a, summ_a, res_a = frontend.run_burst(
+                cfg, enc, plan=plan, waves=waves, slots=slots,
+                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
+                fault_rate=rate, fault_seed=seed, serve_step=step)
+            events, summ, results = frontend.run_burst(
+                cfg, enc, plan=plan, waves=waves, slots=slots,
+                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
+                fault_rate=rate, fault_seed=seed, serve_step=step,
+                telemetry_path=tpath)
+            det_views = [telemetry.deterministic_view(e)
+                         for e in (warm_ev, ev_a, events)]
+            deterministic = (det_views[0] == det_views[1] == det_views[2]
+                             and warm_res == res_a == results)
+            for sect in ("per_token_ms", "ttft_s"):
+                summ[sect] = {k: (min(v, summ_a[sect][k])
+                                  if v is not None
+                                  and summ_a[sect][k] is not None else v)
+                              for k, v in summ[sect].items()}
+            summ["cell"] = {"kv_policy": pol_name, "fault_rate": rate,
+                            "seed": seed, "slots": slots,
+                            "max_len": max_len,
+                            "bit_deterministic": deterministic}
+            if out_dir:
+                telemetry.write_requests_csv(
+                    events, os.path.join(out_dir, f"requests_{tag}.csv"))
+            cells[tag] = {"summary": summ, "results": results}
+            p99 = summ["per_token_ms"]["p99"]
+            p99s = f"{p99:.2f}ms" if p99 is not None else "n/a"
+            print(f"[burst] {tag}: {summ['requests']['finished']}/"
+                  f"{summ['requests']['submitted']} finished in "
+                  f"{summ['steps']} steps, "
+                  f"{summ['throughput']['tokens_per_step']:.2f} tok/step, "
+                  f"p99 per-token {p99s}, "
+                  f"DUE total {summ['due']['total']}, "
+                  f"leaked pages {summ['pool']['leaked_pages']}")
+    return cells
+
+
+def slo_section(cells, kv_policies, fault_rates):
+    """Per (protected policy, rate): p99 per-token latency ratio vs the
+    unprotected twin at the same rate — the envelope CI asserts."""
+    slo = []
+    if "unprotected" not in kv_policies:
+        return slo
+    for pol in kv_policies:
+        if pol == "unprotected":
+            continue
+        for rate in fault_rates:
+            base = cells[_cell_tag("unprotected", rate)]["summary"]
+            prot = cells[_cell_tag(pol, rate)]["summary"]
+            b99 = base["per_token_ms"]["p99"]
+            p99 = prot["per_token_ms"]["p99"]
+            slo.append({
+                "kv_policy": pol, "fault_rate": rate,
+                "p99_per_token_ms": p99,
+                "unprotected_p99_per_token_ms": b99,
+                "p99_ratio": (p99 / b99) if (p99 and b99) else None,
+                "due_total": prot["due"]["total"],
+                "leaked_pages": prot["pool"]["leaked_pages"],
+                "tokens_match_unprotected":
+                    cells[_cell_tag(pol, rate)]["results"] ==
+                    cells[_cell_tag("unprotected", rate)]["results"]
+                    if rate == 0 else None,
+            })
+    return slo
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI micro-run: 2 waves x 3 requests, tiny dims")
+    ap.add_argument("--waves", type=int, default=4)
+    ap.add_argument("--wave-size", type=int, default=6)
+    ap.add_argument("--gap-steps", type=int, default=8)
+    ap.add_argument("--prompt-len", default="4,12",
+                    help="lo,hi prompt-length range")
+    ap.add_argument("--max-new", default="4,8",
+                    help="lo,hi generation-length range")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="pool size incl. per-slot parking pages "
+                         "(default: full occupancy)")
+    ap.add_argument("--kv-policies", default="unprotected,in-place")
+    ap.add_argument("--fault-rates", default="0",
+                    help="comma list of per-bit KV fault rates")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="all-in-place",
+                    choices=sorted(protection.POLICY_PRESETS),
+                    help="weight-protection preset")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # one page per slot (prompt+gen <= 10 < page_size 16): keeps the
+        # KV-decode fraction of step time small enough that the protected
+        # twin's p99 per-token SLO ratio has real margin under 1.10 on a
+        # noisy CPU runner
+        args.waves, args.wave_size, args.gap_steps = 2, 3, 4
+        args.slots, args.max_len = 2, 16
+        args.prompt_len, args.max_new = "3,6", "2,4"
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = configs.get_smoke(args.arch)
+    kv_policies = args.kv_policies.split(",")
+    fault_rates = [float(r) for r in args.fault_rates.split(",")]
+    p_lo, p_hi = (int(x) for x in args.prompt_len.split(","))
+    n_lo, n_hi = (int(x) for x in args.max_new.split(","))
+
+    print(f"[burst] {cfg.name} smoke config, {args.waves} waves x "
+          f"{args.wave_size} reqs, slots={args.slots}, "
+          f"kv={kv_policies}, rates={fault_rates}, seed={args.seed}")
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    policy = protection.get_policy_preset(args.policy)
+    plan = policy.plan(params)
+    enc = plan.encode_tree(params)
+
+    waves = frontend.make_waves(
+        seed=args.seed, n_waves=args.waves, wave_size=args.wave_size,
+        vocab=cfg.vocab, prompt_len=(p_lo, p_hi), max_new=(n_lo, n_hi),
+        gap_steps=args.gap_steps)
+    cells = run_grid(cfg, enc, plan, waves, kv_policies=kv_policies,
+                     fault_rates=fault_rates, slots=args.slots,
+                     max_len=args.max_len, n_pages=args.pages,
+                     seed=args.seed, out_dir=args.out_dir)
+    out = {
+        "schema": telemetry.SUMMARY_SCHEMA,
+        "arch": cfg.name,
+        "workload": {"seed": args.seed, "waves": args.waves,
+                     "wave_size": args.wave_size,
+                     "gap_steps": args.gap_steps,
+                     "prompt_len": [p_lo, p_hi], "max_new": [n_lo, n_hi]},
+        "cells": {tag: c["summary"] for tag, c in cells.items()},
+        "slo": slo_section(cells, kv_policies, fault_rates),
+    }
+    for row in out["slo"]:
+        ratio = row["p99_ratio"]
+        print(f"[burst] SLO {row['kv_policy']} @rate {row['fault_rate']}: "
+              f"p99 ratio {ratio:.3f}x vs unprotected"
+              if ratio is not None else
+              f"[burst] SLO {row['kv_policy']}: no latency samples")
+    if args.out_dir:
+        path = os.path.join(args.out_dir, "summary.json")
+        telemetry.write_summary(out, path)
+        print(f"[burst] wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

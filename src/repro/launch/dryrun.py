@@ -173,7 +173,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
     ok, why = specs.cell_supported(cfg, shape)
     if not ok:
         rec.update(status="skipped", reason=why)
-        return rec
+        return _tag_cell(rec)
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
@@ -251,6 +251,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp=None,
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:],
                    elapsed_s=round(time.time() - t0, 1))
+    return _tag_cell(rec)
+
+
+def _tag_cell(rec: dict) -> dict:
+    """Stamp the record with its unique grid coordinate — one string key
+    downstream scripts (CI envelope asserts, telemetry joins) can group
+    on instead of reconstructing axis tuples per schema version."""
+    parts = [rec["arch"], rec["shape"], rec["mesh"]]
+    for axis in ("policy", "decode_mode", "act_quant", "kv_policy"):
+        if rec.get(axis):
+            parts.append(f"{axis}={rec[axis]}")
+    rec["cell"] = ":".join(parts)
     return rec
 
 

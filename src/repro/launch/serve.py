@@ -66,6 +66,50 @@ def fault_smoke_check(enc, policy, rate: float, seed: int):
     return res
 
 
+def run_burst_mode(cfg, enc, plan, args):
+    """``--burst``: replay a seeded wave workload through the
+    request-level front-end (see :mod:`repro.serving.frontend` and
+    docs/serving.md) and print the telemetry roll-up."""
+    import os
+
+    from repro.serving import frontend, telemetry
+
+    kvp = args.kv_policy or "in-place"
+    waves = frontend.make_waves(seed=args.seed, n_waves=2,
+                                wave_size=args.batch, vocab=cfg.vocab,
+                                prompt_len=(4, 8),
+                                max_new=(4, args.tokens),
+                                gap_steps=6)
+    tpath = None
+    if args.burst_out:
+        os.makedirs(args.burst_out, exist_ok=True)
+        tpath = os.path.join(args.burst_out, "telemetry.jsonl")
+    events, summ, _ = frontend.run_burst(
+        cfg, enc, plan=plan, waves=waves, slots=max(2, args.batch // 2),
+        max_len=max(32, args.tokens * 2), kv_policy=kvp,
+        fault_rate=args.fault_rate, fault_seed=args.seed,
+        telemetry_path=tpath)
+    r, t, d, p = (summ["requests"], summ["throughput"], summ["due"],
+                  summ["pool"])
+    print(f"[serve] burst ({kvp} KV): {r['finished']}/{r['submitted']} "
+          f"requests in {summ['steps']} steps "
+          f"({t['tokens_per_step']:.2f} tok/step)")
+    print(f"[serve] TTFT p50/p95/p99: {summ['ttft_steps']['p50']}/"
+          f"{summ['ttft_steps']['p95']}/{summ['ttft_steps']['p99']} steps; "
+          f"per-token p99 {summ['per_token_ms']['p99']:.2f}ms")
+    print(f"[serve] KV faults: {d['corrected_total']} corrected, "
+          f"{d['total']} DUE ({d['requests_with_due']} requests); "
+          f"pages leaked {p['leaked_pages']}")
+    if args.burst_out:
+        telemetry.write_requests_csv(
+            events, os.path.join(args.burst_out, "requests.csv"))
+        telemetry.write_summary(summ,
+                                os.path.join(args.burst_out,
+                                             "summary.json"))
+        print(f"[serve] wrote {args.burst_out}/telemetry.jsonl, "
+              f"requests.csv, summary.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -89,6 +133,16 @@ def main():
                     help="serve against the paged protected KV cache under "
                          "this preset; with --fault-rate, faults are also "
                          "injected into the LIVE cache pools mid-run")
+    ap.add_argument("--burst", action="store_true",
+                    help="serve a seeded burst workload through the "
+                         "request-level front-end (continuous batching, "
+                         "admission control, telemetry summary) instead of "
+                         "the fixed-batch loop; uses --kv-policy (default "
+                         "in-place), --fault-rate as the live-KV injection "
+                         "rate, and --seed for the workload")
+    ap.add_argument("--burst-out", default=None, metavar="DIR",
+                    help="with --burst: write telemetry JSONL + "
+                         "requests CSV + summary JSON here")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -117,6 +171,10 @@ def main():
         fault_smoke_check(enc, policy, args.fault_rate, args.seed)
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
+
+    if args.burst:
+        run_burst_mode(cfg, enc, plan, args)
+        return
 
     kvp = kvcache.get_kv_policy(args.kv_policy)
     serve_step = jax.jit(protected.make_serve_step(cfg, plan=plan,

@@ -101,14 +101,21 @@ def record_kv_flags(corrected, due):
 
 
 def drain_kv_flags():
-    """Sum and clear the recorded KV (corrected, due) pairs -> (2,) int32."""
-    total = jnp.zeros((2,), jnp.int32)
+    """Sum and clear the recorded KV (corrected, due) pairs.
+
+    Entries are scalars by default -> (2,) int32. When the KV policy asks
+    for per-slot attribution (``KVProtectionPolicy.per_slot_flags``) each
+    entry is a (B,) row instead and the result is (2, B) int32 — the shape
+    flows through the layer scan unchanged, so ``flags["layers_kv"]``
+    becomes (n_layers, 2, B).
+    """
     if _KV_FLAGS_SINK:
-        total = sum((jnp.stack([jnp.asarray(c, jnp.int32).reshape(()),
-                                jnp.asarray(d, jnp.int32).reshape(())])
-                     for c, d in _KV_FLAGS_SINK), total)
+        pairs = [jnp.stack([jnp.asarray(c, jnp.int32),
+                            jnp.asarray(d, jnp.int32)])
+                 for c, d in _KV_FLAGS_SINK]
         _KV_FLAGS_SINK.clear()
-    return total
+        return sum(pairs[1:], pairs[0])
+    return jnp.zeros((2,), jnp.int32)
 
 
 # --------------------------------------------------------------------------

@@ -1,2 +1,4 @@
+from . import frontend  # noqa: F401
 from . import kvcache  # noqa: F401
 from . import protected  # noqa: F401
+from . import telemetry  # noqa: F401

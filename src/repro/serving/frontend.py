@@ -1,0 +1,387 @@
+"""Request-level serving front-end: slot-based continuous batching over
+the paged protected KV cache.
+
+Everything below ``make_serve_step`` was batch-shaped until now; this
+module adds the request layer — a :class:`RequestQueue` with admission
+control, a per-slot lifecycle (prefill -> decode -> finish/evict, pages
+freed back to the pool), and a seeded burst-load driver — all driven by
+ONE compiled serve step over a churning request mix.
+
+Design points
+-------------
+* **One compiled step.** Prefill is fed token-by-token through the same
+  jitted ``serve_step`` as decode: an active slot's next input token is
+  ``prompt[consumed]`` while the prompt lasts, then its own last sampled
+  token; ``pos = consumed``. The step that consumes the LAST prompt token
+  yields the request's first generated token. No separate prefill
+  executable, no recompiles as the mix churns.
+* **Parking pages.** Pool pages ``0..slots-1`` are reserved, one per
+  slot (:func:`~repro.serving.kvcache.init_paged_cache` with
+  ``n_pages``). An idle slot's page-table row points wholly at its own
+  parking page, so the keep-alive token it writes each step (pos 0) can
+  never scribble on a live request's pages. The
+  :class:`~repro.serving.kvcache.PageAllocator` never hands them out.
+* **Determinism.** Sampling is greedy argmax; admission is FIFO;
+  page allocation is lowest-id-first; fault injection keys fold in the
+  logical step. A seeded burst replay is bit-deterministic — asserted via
+  :func:`~repro.serving.telemetry.deterministic_view`.
+* **Per-request fault attribution.** The front-end forces
+  ``per_slot_flags`` on reference-path KV policies, so
+  ``flags["layers_kv"]`` is (n_layers, 2, B) and each finish event
+  carries the (corrected, DUE) counts *that request's* cached tokens saw.
+  Fused-attention policies reduce flags to scalars in-kernel; there the
+  per-step totals are attributed to all active slots as a batch-level
+  upper bound (documented in docs/serving.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.serving import kvcache, telemetry
+from repro.serving import protected as sp
+
+__all__ = [
+    "Request", "RequestQueue", "ServingFrontend",
+    "make_waves", "run_burst",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: generate up to ``max_new`` tokens after
+    ``prompt``. ``arrival_step`` is the logical step the burst driver
+    submits it at (0 = immediately)."""
+    rid: int
+    prompt: tuple
+    max_new: int
+    arrival_step: int = 0
+
+    def __post_init__(self):
+        if len(self.prompt) == 0:
+            raise ValueError("empty prompt")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+class RequestQueue:
+    """FIFO admission queue. ``push`` validates that the request can EVER
+    be served (fits the per-slot table and the allocatable pool) — those
+    are rejected outright; transient exhaustion just queues."""
+
+    def __init__(self, max_total_tokens: int, max_pages: int,
+                 page_size: int):
+        self.max_total_tokens = max_total_tokens
+        self.max_pages = max_pages
+        self.page_size = page_size
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def reject_reason(self, req: Request) -> Optional[str]:
+        if req.total_tokens > self.max_total_tokens:
+            return (f"prompt+max_new {req.total_tokens} exceeds max_len "
+                    f"{self.max_total_tokens}")
+        need = kvcache.pages_needed(req.total_tokens, self.page_size)
+        if need > self.max_pages:
+            return (f"needs {need} pages, pool only has "
+                    f"{self.max_pages} allocatable")
+        return None
+
+    def push(self, req: Request) -> Optional[str]:
+        """Queue ``req``; returns a rejection reason instead if it can
+        never be admitted."""
+        reason = self.reject_reason(req)
+        if reason is None:
+            self._q.append(req)
+        return reason
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+
+class _Slot:
+    """Mutable per-slot lifecycle state (host side)."""
+
+    __slots__ = ("req", "consumed", "generated", "pages", "enqueue_step",
+                 "admit_step", "first_step", "enqueue_s", "first_s",
+                 "kv_corrected", "kv_due")
+
+    def __init__(self, req: Request, pages, step: int,
+                 enqueue_step: int, enqueue_s: float):
+        self.req = req
+        self.consumed = 0
+        self.generated: list = []
+        self.pages = pages
+        self.enqueue_step = enqueue_step
+        self.admit_step = step
+        self.first_step: Optional[int] = None
+        self.enqueue_s = enqueue_s
+        self.first_s: Optional[float] = None
+        self.kv_corrected = 0
+        self.kv_due = 0
+
+
+class ServingFrontend:
+    """Continuous-batching loop: ``submit`` requests, call :meth:`step`
+    (or :meth:`run`) until drained. Emits telemetry throughout; finished
+    requests land in :attr:`results` as ``{rid: [token, ...]}``."""
+
+    def __init__(self, cfg: ArchConfig, enc_params, *, plan=None,
+                 slots: int = 4, max_len: int = 128,
+                 n_pages: Optional[int] = None, kv_policy="in-place",
+                 serve_step=None, collector=None, dtype=jnp.bfloat16,
+                 act_quant: Optional[str] = None):
+        kvp = kvcache.get_kv_policy(kv_policy)
+        if not kvp.fused:  # per-request attribution (see module docstring)
+            kvp = dataclasses.replace(kvp, per_slot_flags=True)
+        self.cfg, self.policy, self.slots_n = cfg, kvp, slots
+        npg = -(-max_len // kvp.page_size)
+        self.max_len = npg * kvp.page_size
+        if n_pages is None:
+            n_pages = slots + slots * npg      # parking + full occupancy
+        self.cache = kvcache.init_paged_cache(cfg, batch=slots,
+                                              max_len=self.max_len,
+                                              policy=kvp, n_pages=n_pages)
+        self.allocator = kvcache.PageAllocator(n_pages, reserved=slots)
+        self.queue = RequestQueue(self.max_len,
+                                  self.allocator.free_count,
+                                  kvp.page_size)
+        if serve_step is None:
+            serve_step = jax.jit(sp.make_serve_step(
+                cfg, plan=plan, with_flags=True, kv_policy=kvp,
+                dtype=dtype, act_quant=act_quant))
+        self.serve_step = serve_step
+        self.enc_params = enc_params
+        self.telemetry = collector or telemetry.TelemetryCollector()
+        self.step_no = 0
+        self.results: dict = {}
+        self._slots: list = [None] * slots
+        self._pending_meta: dict = {}   # rid -> (enqueue_step, enqueue_s)
+        self.telemetry.emit("init", slots=slots, n_pages=n_pages,
+                            pool_free=self.allocator.free_count,
+                            page_size=kvp.page_size, max_len=self.max_len,
+                            scheme=kvp.scheme, fused=kvp.fused,
+                            per_slot_flags=kvp.per_slot_flags)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request):
+        now = time.perf_counter()
+        reason = self.queue.push(req)
+        if reason is not None:
+            self.telemetry.emit("reject", rid=req.rid, step=self.step_no,
+                                reason=reason)
+            return
+        self._pending_meta[req.rid] = (self.step_no, now)
+        self.telemetry.emit("enqueue", rid=req.rid, step=self.step_no,
+                            prompt_len=len(req.prompt),
+                            max_new=req.max_new, t_s=now)
+
+    def _admit(self):
+        """FIFO head-of-line admission: admit while a slot is free AND the
+        pool can serve the head request's full page budget up front."""
+        while self.queue.peek() is not None:
+            free_slot = next((i for i, s in enumerate(self._slots)
+                              if s is None), None)
+            if free_slot is None:
+                return
+            req = self.queue.peek()
+            need = kvcache.pages_needed(req.total_tokens,
+                                        self.policy.page_size)
+            if not self.allocator.can(need):
+                return                      # transient exhaustion: wait
+            self.queue.pop()
+            pages = self.allocator.alloc(need)
+            self.cache = kvcache.set_slot_pages(self.cache, free_slot,
+                                                pages)
+            enq_step, enq_s = self._pending_meta.pop(req.rid)
+            self._slots[free_slot] = _Slot(req, pages, self.step_no,
+                                           enq_step, enq_s)
+            self.telemetry.emit("admit", rid=req.rid, step=self.step_no,
+                                slot=free_slot, n_pages=need,
+                                queue_depth=len(self.queue),
+                                pool_free=self.allocator.free_count)
+
+    # -- the serving loop --------------------------------------------------
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    def _finish(self, idx: int):
+        s = self._slots[idx]
+        now = time.perf_counter()
+        n_gen = len(s.generated)
+        self.results[s.req.rid] = list(s.generated)
+        # reuse hygiene: zero the pages BEFORE they re-enter the pool, and
+        # park the slot's table row again
+        self.cache = kvcache.zero_pages(self.cache, s.pages)
+        self.cache = kvcache.set_slot_pages(self.cache, idx, ())
+        self.allocator.free(s.pages)
+        self._slots[idx] = None
+        ev = {"rid": s.req.rid, "step": self.step_no, "slot": idx,
+              "n_generated": n_gen, "kv_corrected": int(s.kv_corrected),
+              "kv_due": int(s.kv_due),
+              "pool_free": self.allocator.free_count}
+        if s.first_s is not None:
+            ev["ttft_s"] = s.first_s - s.enqueue_s
+            ev["tpot_ms"] = ((now - s.first_s) / max(1, n_gen - 1)) * 1e3
+        self.telemetry.emit("finish", **ev)
+
+    def step(self):
+        """One loop iteration: admit, run the compiled step over all
+        slots (idle slots feed a keep-alive token into their parking
+        page), sample greedily, advance lifecycles, emit telemetry."""
+        self._admit()
+        t0 = time.perf_counter()
+        tokens = np.zeros((self.slots_n, 1), np.int32)
+        pos = np.zeros((self.slots_n,), np.int32)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            if s.consumed < len(s.req.prompt):
+                tokens[i, 0] = s.req.prompt[s.consumed]
+            else:
+                tokens[i, 0] = s.generated[-1]
+            pos[i] = s.consumed
+        logits, self.cache, flags = self.serve_step(
+            self.enc_params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos))
+        sampled = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        kv = np.asarray(flags["layers_kv"]).sum(axis=0)   # (2,) | (2, B)
+        w = np.asarray(flags["top"]) + np.asarray(flags["layers"]).sum(0)
+        t1 = time.perf_counter()
+
+        per_slot = kv.ndim == 2
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            if per_slot:
+                s.kv_corrected += int(kv[0, i])
+                s.kv_due += int(kv[1, i])
+            else:                # fused: batch totals as upper bound
+                s.kv_corrected += int(kv[0])
+                s.kv_due += int(kv[1])
+            s.consumed += 1
+            if s.consumed >= len(s.req.prompt):
+                s.generated.append(int(sampled[i]))
+                if s.first_step is None:
+                    s.first_step, s.first_s = self.step_no, t1
+                    self.telemetry.emit(
+                        "first_token", rid=s.req.rid, step=self.step_no,
+                        slot=i, ttft_steps=self.step_no - s.enqueue_step,
+                        ttft_s=t1 - s.enqueue_s)
+        for i, s in enumerate(self._slots):
+            if s is not None and len(s.generated) >= s.req.max_new:
+                self._finish(i)
+        # emitted after finishes so pool_free reflects this step's frees —
+        # summarize() reads the last step's pool_free as the leak check
+        self.telemetry.emit(
+            "step", step=self.step_no, active=self.active,
+            queue_depth=len(self.queue),
+            pool_free=self.allocator.free_count,
+            kv_corrected=int(kv.sum(axis=-1)[0] if per_slot else kv[0]),
+            kv_due=int(kv.sum(axis=-1)[1] if per_slot else kv[1]),
+            w_corrected=int(w[0]), w_due=int(w[1]),
+            step_ms=(t1 - t0) * 1e3)
+        self.step_no += 1
+
+    def run(self, max_steps: int = 10_000):
+        """Step until queue and slots drain (or ``max_steps``)."""
+        for _ in range(max_steps):
+            if not self.queue.peek() and self.active == 0:
+                return
+            self.step()
+        if self.queue.peek() or self.active:
+            raise RuntimeError(f"not drained after {max_steps} steps: "
+                               f"{len(self.queue)} queued, "
+                               f"{self.active} active")
+
+
+# ---------------------------------------------------------------------------
+# burst-load driver
+# ---------------------------------------------------------------------------
+
+
+def make_waves(*, seed: int, n_waves: int, wave_size: int, vocab: int,
+               prompt_len=(4, 12), max_new=(4, 8),
+               gap_steps: int = 8) -> list:
+    """Deterministic burst workload: ``n_waves`` waves of ``wave_size``
+    requests each, wave *w* arriving at step ``w * gap_steps``. Prompt
+    tokens and per-request lengths draw from a ``numpy`` generator seeded
+    with ``seed`` only — same seed, same workload, bit for bit."""
+    rng = np.random.default_rng(seed)
+    lo_p, hi_p = prompt_len
+    lo_n, hi_n = max_new
+    reqs, rid = [], 0
+    for w in range(n_waves):
+        for _ in range(wave_size):
+            plen = int(rng.integers(lo_p, hi_p + 1))
+            reqs.append(Request(
+                rid=rid,
+                prompt=tuple(int(t) for t in
+                             rng.integers(1, vocab, size=plen)),
+                max_new=int(rng.integers(lo_n, hi_n + 1)),
+                arrival_step=w * gap_steps))
+            rid += 1
+    return reqs
+
+
+def run_burst(cfg: ArchConfig, enc_params, *, plan=None, waves: Sequence,
+              slots: int = 4, max_len: int = 128,
+              n_pages: Optional[int] = None, kv_policy="in-place",
+              fault_rate: float = 0.0, fault_seed: int = 0,
+              inject_every: int = 4, telemetry_path: Optional[str] = None,
+              serve_step=None, max_steps: int = 10_000,
+              dtype=jnp.bfloat16):
+    """Replay a seeded wave workload through the front-end, optionally
+    injecting faults into the live KV pools every ``inject_every`` steps
+    at per-bit ``fault_rate`` (keys fold in the logical step, so a replay
+    injects the identical bits). Returns ``(events, summary, results)``.
+
+    Pass a prebuilt jitted ``serve_step`` to share the compiled executable
+    across runs (the protected/unprotected twin comparison and
+    bit-determinism replays rely on this to avoid recompiles)."""
+    col = telemetry.TelemetryCollector(telemetry_path)
+    fe = ServingFrontend(cfg, enc_params, plan=plan, slots=slots,
+                         max_len=max_len, n_pages=n_pages,
+                         kv_policy=kv_policy, serve_step=serve_step,
+                         collector=col, dtype=dtype)
+    pending = sorted(waves, key=lambda r: (r.arrival_step, r.rid))
+    i = 0
+    base_key = jax.random.PRNGKey(fault_seed)
+    for _ in range(max_steps):
+        while i < len(pending) and pending[i].arrival_step <= fe.step_no:
+            fe.submit(pending[i])
+            i += 1
+        if i >= len(pending) and not fe.queue.peek() and fe.active == 0:
+            break
+        if (fault_rate > 0 and fe.active > 0
+                and fe.step_no % inject_every == 0):
+            from repro import protection
+            tree = kvcache.as_protected_tree(fe.cache, fe.policy)
+            dirty = protection.inject_tree_device(
+                tree, fault_rate, jax.random.fold_in(base_key, fe.step_no))
+            fe.cache = kvcache.from_protected_tree(fe.cache, dirty)
+        fe.step()
+    else:
+        raise RuntimeError(f"burst not drained after {max_steps} steps")
+    col.close()
+    return col.events, telemetry.summarize(col.events), fe.results

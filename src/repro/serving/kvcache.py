@@ -36,8 +36,9 @@ campaigns unchanged.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +52,11 @@ from repro.protection.schemes import ALIASES, get_scheme
 from repro.protection.tensor import ProtectedTensor
 
 __all__ = ["KVProtectionPolicy", "KV_POLICY_PRESETS", "get_kv_policy",
-           "supports_paged", "pages_per_seq", "init_paged_cache",
-           "init_cache", "paged_gqa_decode", "paged_gqa_prefill",
-           "as_protected_tree", "from_protected_tree", "tree_layer_flags",
-           "kv_bytes", "dense_kv_bytes"]
+           "supports_paged", "pages_per_seq", "pages_needed",
+           "init_paged_cache", "init_cache", "paged_gqa_decode",
+           "paged_gqa_prefill", "as_protected_tree", "from_protected_tree",
+           "tree_layer_flags", "kv_bytes", "dense_kv_bytes",
+           "PageAllocator", "set_slot_pages", "zero_pages"]
 
 # the paper's serving-state menu: parity detects+zeroes, in-place corrects
 # singles / detects doubles at zero space. secded72 is excluded on purpose —
@@ -77,6 +79,13 @@ class KVProtectionPolicy:
                decode-then-attend reference. Bit-identical by construction.
     page_size: tokens per page.
     interpret: Pallas interpret mode for the fused kernel (CPU-safe).
+    per_slot_flags: report KV (corrected, DUE) flags per BATCH SLOT
+               instead of batch-summed scalars — ``flags["layers_kv"]``
+               becomes (n_layers, 2, B) so the request front-end can
+               attribute state faults to the request occupying each slot
+               (MILR-style recovery needs to know WHICH request a DUE
+               hit). Reference (XLA decode-then-attend) path only: the
+               fused kernel reduces its flags inside the grid.
     """
 
     scheme: str = "in-place"
@@ -84,6 +93,7 @@ class KVProtectionPolicy:
     fused: bool = False
     page_size: int = 16
     interpret: bool = True
+    per_slot_flags: bool = False
 
     def __post_init__(self):
         sid = ALIASES.get(self.scheme, self.scheme)
@@ -92,6 +102,10 @@ class KVProtectionPolicy:
         object.__setattr__(self, "scheme", sid)
         if self.page_size <= 0:
             raise ValueError(f"page_size must be positive, got {self.page_size}")
+        if self.fused and self.per_slot_flags:
+            raise ValueError("per_slot_flags needs the reference attention "
+                             "path (the fused kernel reduces flags to "
+                             "scalars inside its grid)")
 
     @property
     def scheme_obj(self):
@@ -148,8 +162,13 @@ def pages_per_seq(max_len: int, page_size: int) -> int:
     return -(-max_len // page_size)
 
 
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pool pages a request writing ``n_tokens`` positions needs."""
+    return -(-n_tokens // page_size)
+
+
 def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
-                     policy) -> dict:
+                     policy, *, n_pages: Optional[int] = None) -> dict:
     """Paged replacement for ``lm.init_cache``'s dense k/v buffers.
 
     Keys (all with a leading stacked-layer axis so ``lax.scan`` slices them
@@ -159,6 +178,15 @@ def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
       k_checks/v_checks (nl, P, page_size, kv, hd // 8) uint8 (parity only)
       k_scale/v_scale   (nl, P, page_size) f32 per-token scales
       kv_table          (nl, B, pages_per_seq) int32 page tables
+
+    By default the pool is statically partitioned (sequence ``b`` owns rows
+    ``b*np .. (b+1)*np`` via an identity table). With ``n_pages`` the pool
+    is sized independently of ``batch`` for the request front-end: pages
+    ``0..batch-1`` are per-slot PARKING pages (an idle slot's table points
+    wholly at its own parking page, so its keep-alive writes can never
+    scribble on a page owned by a live request) and pages ``batch..`` are
+    the allocatable pool a :class:`PageAllocator` hands to admitted
+    requests via :func:`set_slot_pages`.
 
     Zero pages are codec-clean for every scheme (zero blocks have syndrome
     0), so untouched pool slots decode without phantom flags.
@@ -178,15 +206,25 @@ def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
     kv, hd = cfg.n_kv_heads, cfg.head_dim
     ps = policy.page_size
     npg = pages_per_seq(max_len, ps)
-    pool = batch * npg
+    if n_pages is None:
+        pool = batch * npg
+        table = jnp.tile(
+            jnp.arange(pool, dtype=jnp.int32).reshape(1, batch, npg),
+            (nl, 1, 1))
+    else:
+        if n_pages <= batch:
+            raise ValueError(f"n_pages={n_pages} leaves no allocatable pages "
+                             f"beyond the {batch} per-slot parking pages")
+        pool = n_pages
+        table = jnp.tile(                         # slot b parks on page b
+            jnp.arange(batch, dtype=jnp.int32).reshape(1, batch, 1),
+            (nl, 1, npg))
     cache = {
         "k_pages": jnp.zeros((nl, pool, ps, kv, hd), jnp.uint8),
         "v_pages": jnp.zeros((nl, pool, ps, kv, hd), jnp.uint8),
         "k_scale": jnp.zeros((nl, pool, ps), jnp.float32),
         "v_scale": jnp.zeros((nl, pool, ps), jnp.float32),
-        "kv_table": jnp.tile(
-            jnp.arange(pool, dtype=jnp.int32).reshape(1, batch, npg),
-            (nl, 1, 1)),
+        "kv_table": table,
     }
     if policy.has_checks:
         cache["k_checks"] = jnp.zeros((nl, pool, ps, kv, hd // 8), jnp.uint8)
@@ -304,6 +342,94 @@ def _gather_seq(pages, checks, scales, table):
 
 
 # ---------------------------------------------------------------------------
+# page free/reuse: the allocator and table-rewrite API continuous batching
+# runs on (see repro.serving.frontend)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Host-side free-list over the pool's allocatable pages.
+
+    Page ids ``0..reserved-1`` are per-slot parking pages (see
+    :func:`init_paged_cache` with ``n_pages``) and are never handed out.
+    Allocation is deterministic — lowest ids first via a heap — so a seeded
+    request replay reuses the exact same physical pages run-to-run (the
+    burst trace's bit-determinism contract depends on this).
+    """
+
+    def __init__(self, n_pages: int, reserved: int = 0):
+        if not 0 <= reserved < n_pages:
+            raise ValueError(f"reserved={reserved} outside pool of "
+                             f"{n_pages} pages")
+        self.n_pages = n_pages
+        self.reserved = reserved
+        self._free = list(range(reserved, n_pages))
+        heapq.heapify(self._free)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def can(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> tuple:
+        """Pop the ``n`` lowest free page ids; raises if the pool cannot
+        serve the request (admission control checks :meth:`can` first)."""
+        if not self.can(n):
+            raise ValueError(f"page pool exhausted: need {n}, "
+                             f"free {len(self._free)}")
+        return tuple(heapq.heappop(self._free) for _ in range(n))
+
+    def free(self, page_ids: Sequence[int]) -> None:
+        """Return pages to the pool. Double-frees and parking-page frees are
+        accounting bugs — fail loudly instead of corrupting the invariant
+        the hypothesis suite asserts."""
+        live = set(self._free)
+        for pid in page_ids:
+            if pid < self.reserved or pid >= self.n_pages:
+                raise ValueError(f"page {pid} is not allocatable "
+                                 f"(reserved < {self.reserved}, "
+                                 f"pool {self.n_pages})")
+            if pid in live:
+                raise ValueError(f"double free of page {pid}")
+            live.add(pid)
+            heapq.heappush(self._free, pid)
+
+
+def set_slot_pages(cache: dict, slot: int, page_ids: Sequence[int],
+                   *, fill: Optional[int] = None) -> dict:
+    """Point ``slot``'s page-table row at ``page_ids`` (logical order),
+    padding the unallocated tail with ``fill`` (default: the slot's parking
+    page). Tail entries are only ever gathered — never written, and masked
+    by token validity — so parking is safe. Returns the updated cache."""
+    npg = cache["kv_table"].shape[2]
+    if len(page_ids) > npg:
+        raise ValueError(f"{len(page_ids)} pages > pages_per_seq {npg}")
+    row = np.full((npg,), slot if fill is None else fill, np.int32)
+    row[:len(page_ids)] = page_ids
+    return {**cache,
+            "kv_table": cache["kv_table"].at[:, slot, :].set(
+                jnp.asarray(row))}
+
+
+def zero_pages(cache: dict, page_ids: Sequence[int]) -> dict:
+    """Zero the given pool pages (encoded bytes, parity planes, AND
+    per-token scales) across all layers. Zero pages are codec-clean for
+    every scheme, so a freed page re-enters the pool with no stale-scale or
+    stale-parity carryover — the free-side half of page reuse hygiene."""
+    if len(page_ids) == 0:
+        return cache
+    ids = jnp.asarray(tuple(page_ids), jnp.int32)
+    new = dict(cache)
+    for key in ("k_pages", "v_pages", "k_scale", "v_scale",
+                "k_checks", "v_checks"):
+        if key in new:
+            new[key] = new[key].at[:, ids].set(0)
+    return new
+
+
+# ---------------------------------------------------------------------------
 # decode-at-use attention
 # ---------------------------------------------------------------------------
 
@@ -327,6 +453,9 @@ def _reference_paged_attention(q, ke, kch, ksc, ve, vch, vsc, pos,
     valid = jnp.arange(s)[None, :] <= pos[:, None]
     o = L.decode_attention(q, kh, vh, valid)
     vm = valid.astype(jnp.int32)
+    if policy.per_slot_flags:  # (B,) rows — per-request fault attribution
+        return (o, jnp.sum((kcor + vcor) * vm, axis=1),
+                jnp.sum((kdue + vdue) * vm, axis=1))
     return o, jnp.sum((kcor + vcor) * vm), jnp.sum((kdue + vdue) * vm)
 
 
@@ -417,8 +546,12 @@ def paged_gqa_prefill(p, x, cfg: ArchConfig, lc, *, positions,
     vh = L.constrain_heads(jnp.repeat(vf, rep, axis=2).transpose(0, 2, 1, 3))
     o = L.chunked_causal_attention(qh, kh, vh, chunk=chunk)
     live = (jnp.arange(ke.shape[1]) < s).astype(jnp.int32)[None, :]
-    L.record_kv_flags(jnp.sum((kcor + vcor) * live),
-                      jnp.sum((kdue + vdue) * live))
+    if policy.per_slot_flags:
+        L.record_kv_flags(jnp.sum((kcor + vcor) * live, axis=1),
+                          jnp.sum((kdue + vdue) * live, axis=1))
+    else:
+        L.record_kv_flags(jnp.sum((kcor + vcor) * live),
+                          jnp.sum((kdue + vdue) * live))
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     return L._proj(o, p["wo"], None, wt), new_lc
 

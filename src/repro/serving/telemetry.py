@@ -1,0 +1,199 @@
+"""JSONL telemetry for the request-level serving front-end.
+
+The front-end (:mod:`repro.serving.frontend`) emits one flat JSON event
+per lifecycle transition plus one per serve step; this module owns the
+event stream (:class:`TelemetryCollector`), the determinism contract
+(:func:`deterministic_view`), and the roll-up into SLO-facing numbers
+(:func:`summarize`).
+
+Determinism contract
+--------------------
+Every event field is derived from the logical step counter — the
+deterministic clock — EXCEPT wall-clock measurements, which are suffixed
+``_s`` (seconds) or ``_ms`` (milliseconds). ``deterministic_view`` strips
+exactly those fields; two runs of the same seeded burst must produce
+bit-identical deterministic views (asserted in tests and CI), while the
+wall fields feed the latency percentiles.
+
+Event schema (one table per type in docs/serving.md):
+
+========== =================================================================
+event      fields
+========== =================================================================
+init       slots, n_pages, pool_free, page_size, max_len, scheme, fused,
+           per_slot_flags
+enqueue    rid, step, prompt_len, max_new, [t_s]
+reject     rid, step, reason
+admit      rid, step, slot, n_pages, queue_depth, pool_free
+first_token rid, step, slot, ttft_steps, [ttft_s]
+finish     rid, step, slot, n_generated, kv_corrected, kv_due, pool_free,
+           [ttft_s, tpot_ms]
+step       step, active, queue_depth, pool_free, kv_corrected, kv_due,
+           w_corrected, w_due, [step_ms]
+========== =================================================================
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import math
+from typing import IO, Optional
+
+__all__ = [
+    "TelemetryCollector", "deterministic_view", "percentile",
+    "summarize", "write_summary", "write_requests_csv",
+    "SUMMARY_SCHEMA",
+]
+
+SUMMARY_SCHEMA = "burst_sim/v1"
+
+_WALL_SUFFIXES = ("_s", "_ms")
+
+
+class TelemetryCollector:
+    """Accumulates events in order; optionally streams them to a JSONL
+    file as they arrive. Events are plain dicts with an ``event`` type
+    key — see the module docstring for the vocabulary."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.events: list = []
+        self._fh: Optional[IO] = open(path, "w") if path else None
+
+    def emit(self, event: str, **fields) -> dict:
+        rec = {"event": event, **fields}
+        self.events.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+        return rec
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def deterministic_view(events) -> list:
+    """Strip wall-clock fields (``*_s`` / ``*_ms``) — what's left must be
+    bit-identical across two runs of the same seeded burst."""
+    return [{k: v for k, v in e.items()
+             if not k.endswith(_WALL_SUFFIXES)} for e in events]
+
+
+def percentile(xs, q: float):
+    """Nearest-rank percentile (deterministic, no interpolation):
+    the smallest x such that at least ``q``% of samples are <= x."""
+    if not xs:
+        return None
+    xs = sorted(xs)
+    rank = max(1, math.ceil(q / 100.0 * len(xs)))
+    return xs[rank - 1]
+
+
+def _pcts(xs) -> dict:
+    return {"p50": percentile(xs, 50), "p95": percentile(xs, 95),
+            "p99": percentile(xs, 99)}
+
+
+def summarize(events) -> dict:
+    """Roll an event stream up into the burst summary: throughput,
+    p50/p95/p99 TTFT and per-token latency, queue depth, per-request DUE,
+    and the page-pool accounting (leaked == initial free - final free)."""
+    by = {}
+    for e in events:
+        by.setdefault(e["event"], []).append(e)
+    steps = by.get("step", [])
+    finishes = by.get("finish", [])
+    n_gen = sum(f["n_generated"] for f in finishes)
+    wall = sum(s.get("step_ms", 0.0) for s in steps) / 1e3
+    due_per_req = [f["kv_due"] for f in finishes]
+    init = by.get("init", [])
+    pool0 = init[0]["pool_free"] if init else (
+        steps[0]["pool_free"] if steps else None)
+    pool1 = steps[-1]["pool_free"] if steps else None
+    return {
+        "schema": SUMMARY_SCHEMA,
+        "requests": {
+            "submitted": len(by.get("enqueue", [])),
+            "finished": len(finishes),
+            "rejected": len(by.get("reject", [])),
+        },
+        "steps": len(steps),
+        "gen_tokens": n_gen,
+        "throughput": {
+            "tokens_per_step": (n_gen / len(steps)) if steps else 0.0,
+            "tokens_per_s": (n_gen / wall) if wall > 0 else None,
+        },
+        "ttft_steps": _pcts([f["ttft_steps"]
+                             for f in by.get("first_token", [])]),
+        "ttft_s": _pcts([f["ttft_s"] for f in by.get("first_token", [])
+                         if "ttft_s" in f]),
+        "per_token_ms": _pcts([f["tpot_ms"] for f in finishes
+                               if "tpot_ms" in f]),
+        "queue_depth": {
+            "max": max((s["queue_depth"] for s in steps), default=0),
+            "mean": (sum(s["queue_depth"] for s in steps) / len(steps))
+                    if steps else 0.0,
+        },
+        "due": {
+            "total": sum(due_per_req),
+            "corrected_total": sum(f["kv_corrected"] for f in finishes),
+            "max_per_request": max(due_per_req, default=0),
+            "requests_with_due": sum(1 for d in due_per_req if d > 0),
+        },
+        "pool": {
+            "initial_free": pool0,
+            "final_free": pool1,
+            "leaked_pages": (pool0 - pool1)
+                            if pool0 is not None else None,
+        },
+    }
+
+
+def write_summary(summary: dict, path: str):
+    with open(path, "w") as fh:
+        json.dump(summary, fh, indent=2)
+        fh.write("\n")
+
+
+def write_requests_csv(events, path: str):
+    """One CSV row per request joining its lifecycle events — the
+    analytics-friendly flat view next to the summary JSON."""
+    rows: dict = {}
+    for e in events:
+        rid = e.get("rid")
+        if rid is None:
+            continue
+        row = rows.setdefault(rid, {"rid": rid})
+        ev = e["event"]
+        if ev == "enqueue":
+            row.update(enqueue_step=e["step"], prompt_len=e["prompt_len"],
+                       max_new=e["max_new"])
+        elif ev == "reject":
+            row.update(rejected=1, reject_reason=e["reason"])
+        elif ev == "admit":
+            row.update(admit_step=e["step"], slot=e["slot"],
+                       n_pages=e["n_pages"])
+        elif ev == "first_token":
+            row.update(first_token_step=e["step"],
+                       ttft_steps=e["ttft_steps"],
+                       ttft_s=e.get("ttft_s"))
+        elif ev == "finish":
+            row.update(finish_step=e["step"], n_generated=e["n_generated"],
+                       kv_corrected=e["kv_corrected"], kv_due=e["kv_due"],
+                       tpot_ms=e.get("tpot_ms"))
+    fields = ["rid", "enqueue_step", "prompt_len", "max_new", "rejected",
+              "reject_reason", "admit_step", "slot", "n_pages",
+              "first_token_step", "ttft_steps", "ttft_s", "finish_step",
+              "n_generated", "kv_corrected", "kv_due", "tpot_ms"]
+    with open(path, "w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=fields, restval="")
+        w.writeheader()
+        for rid in sorted(rows):
+            w.writerow(rows[rid])

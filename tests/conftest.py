@@ -1,0 +1,93 @@
+"""Session-scoped model/plan fixtures shared across the serving tests.
+
+``test_decode_at_use.py``, ``test_int8_serving.py``, and
+``test_kvcache.py`` each used to rebuild the same smoke models (and in
+one case train one) per test; these fixtures build each (arch, seed) /
+(arch, backend, seed) combination once per session.
+
+Mutation safety: several tests mutate the returned trees in place
+(``enc["layers"]["attn"]["wq"] = ...``), so every fixture hands back a
+FRESH container tree (new dicts/lists at every level) over shared
+immutable leaves (jax arrays, frozen ``ProtectedTensor`` dataclasses) —
+cheap to copy, impossible to cross-contaminate.
+"""
+import jax
+import pytest
+
+from repro import configs, protection
+from repro.models import lm
+from repro.serving import protected
+
+
+def _copy_tree(t):
+    """Fresh dict/list containers, shared immutable leaves."""
+    if isinstance(t, dict):
+        return {k: _copy_tree(v) for k, v in t.items()}
+    if isinstance(t, list):
+        return [_copy_tree(v) for v in t]
+    if isinstance(t, tuple):
+        return tuple(_copy_tree(v) for v in t)
+    return t
+
+
+@pytest.fixture(scope="session")
+def smoke_params():
+    """``get(arch, seed=0) -> (cfg, params)``: memoized smoke-config
+    weight init. Distinct seeds stay distinct — tests that deliberately
+    vary the init keep their draws."""
+    memo = {}
+
+    def get(arch, seed=0):
+        key = (arch, seed)
+        if key not in memo:
+            cfg = configs.get_smoke(arch)
+            memo[key] = (cfg, lm.init_params(cfg,
+                                             jax.random.PRNGKey(seed)))
+        cfg, params = memo[key]
+        return cfg, _copy_tree(params)
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def plan_setup(smoke_params):
+    """``get(arch, backend, seed) -> (cfg, plan, enc)``: memoized
+    default-policy plan + encoded tree (the ``_setup`` previously local
+    to test_int8_serving)."""
+    memo = {}
+
+    def get(arch="minitron-4b", backend="pallas", seed=0):
+        key = (arch, backend, seed)
+        if key not in memo:
+            cfg, params = smoke_params(arch, seed)
+            policy = protection.ProtectionPolicy(backend=backend)
+            plan = protected.make_plan(params, policy)
+            memo[key] = (cfg, plan, plan.encode_tree(params))
+        cfg, plan, enc = memo[key]
+        return cfg, plan, _copy_tree(enc)
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def trained_minitron(smoke_params):
+    """(cfg, params) for the minitron-4b smoke config after 4 SGD steps —
+    the trained-model substrate for the serve-identity acceptances
+    (previously retrained inside each parametrized test)."""
+    from repro.data import synthetic
+    from repro.training import optim, train
+    import jax.numpy as jnp
+
+    cfg, params = smoke_params("minitron-4b")
+    cfg = cfg.with_(microbatch=2)
+    opt = optim.sgd_init(params)
+    step = jax.jit(train.make_train_step(cfg, lr=5e-3, chunk=16))
+    for s in range(4):
+        b = synthetic.token_batch(cfg.vocab_padded, 2, 32, seed=5, step=s)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, _ = step(params, opt, b)
+
+    def get():
+        return cfg, _copy_tree(params)
+
+    return get

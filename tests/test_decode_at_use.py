@@ -13,7 +13,6 @@ from repro.core import ecc
 from repro.data import synthetic
 from repro.models import lm
 from repro.serving import protected
-from repro.training import optim, train
 
 
 def _wot_weights(rng, shape):
@@ -183,21 +182,10 @@ def test_checked_in_artifact_is_v3_with_tiles():
 # ---------------------------------------------------------------------------
 
 
-def _trained_params(cfg, steps=4):
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    opt = optim.sgd_init(params)
-    step = jax.jit(train.make_train_step(cfg, lr=5e-3, chunk=16))
-    for s in range(steps):
-        b = synthetic.token_batch(cfg.vocab_padded, 2, 32, seed=5, step=s)
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        params, opt, _ = step(params, opt, b)
-    return params
-
-
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
-def test_decode_at_use_matches_per_step_on_trained_model(backend):
-    cfg = configs.get_smoke("minitron-4b").with_(microbatch=2)
-    params = _trained_params(cfg)
+def test_decode_at_use_matches_per_step_on_trained_model(backend,
+                                                         trained_minitron):
+    cfg, params = trained_minitron()  # session fixture: trained ONCE
     policy = protection.get_policy_preset("attn-inplace-mlp-secded",
                                           backend=backend)
     plan = protected.make_plan(params, policy)
@@ -335,12 +323,14 @@ def test_due_campaign_consumes_flags():
     tree = {"w": jnp.asarray(q)}
     policy = protection.ProtectionPolicy(
         predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
-    res = protection.due_campaign(tree, policy, rates=(0.0, 0.03), trials=2)
+    res = protection.due_campaign(tree, policy, rates=(0.0, 0.03), trials=2,
+                                  key=jax.random.PRNGKey(20))
     assert res.metric == "due_count"
     assert res.clean == 0.0
     assert res.mean()[0] == 0.0          # zero rate -> zero DUE
     assert res.mean()[1] > 0.0           # 3% bit flips -> some doubles
     # corrected counts sweep too, and see even more events than DUEs
     corr = protection.due_campaign(tree, policy, rates=(0.03,), trials=2,
+                                   key=jax.random.PRNGKey(21),
                                    what="corrected")
     assert corr.mean()[0] > 0.0

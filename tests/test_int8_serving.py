@@ -242,22 +242,13 @@ def test_calibration_floors_zero_activation_scale():
 # ---------------------------------------------------------------------------
 
 
-def _setup(arch="minitron-4b", backend="pallas", seed=0):
-    cfg = configs.get_smoke(arch)
-    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
-    policy = protection.ProtectionPolicy(backend=backend)
-    plan = protected.make_plan(params, policy)
-    enc = plan.encode_tree(params)
-    return cfg, plan, enc
-
-
-def test_int8_at_use_serving_bit_exact_on_both_backends():
+def test_int8_at_use_serving_bit_exact_on_both_backends(plan_setup):
     """The acceptance: the fused int8 MXU path (Pallas epilogue) serves
     end-to-end and its logits equal the XLA quantize->decode->matmul
     reference route bit for bit — decode step AND prefill."""
     outs = {}
     for backend in ("xla", "pallas"):
-        cfg, plan, enc = _setup(backend=backend)
+        cfg, plan, enc = plan_setup(backend=backend)
         cache = lm.init_cache(cfg, 2, 32)
         tok = jnp.zeros((2, 1), jnp.int32)
         pos = jnp.zeros((2,), jnp.int32)
@@ -273,14 +264,14 @@ def test_int8_at_use_serving_bit_exact_on_both_backends():
     assert np.array_equal(outs["xla"][1], outs["pallas"][1])
 
 
-def test_calibrate_then_static_serving():
+def test_calibrate_then_static_serving(plan_setup):
     """calibrate_act_scales -> plan.with_act_quant('static') -> act_quant
     'plan' serves the calibrated set; static logits match across backends
     and the plan summary reports the decisions."""
     toks = jnp.zeros((2, 16), jnp.int32)
     outs, n_static = {}, None
     for backend in ("xla", "pallas"):
-        cfg, plan, enc = _setup(backend=backend)
+        cfg, plan, enc = plan_setup(backend=backend)
         scales = protected.calibrate_act_scales(cfg, enc, toks, plan=plan,
                                                 chunk=16)
         assert scales and all(s > 0 for s in scales.values())
@@ -300,8 +291,8 @@ def test_calibrate_then_static_serving():
     assert np.array_equal(outs["xla"], outs["pallas"])
 
 
-def test_with_act_quant_modes_and_guards():
-    cfg, plan, _ = _setup()
+def test_with_act_quant_modes_and_guards(plan_setup):
+    cfg, plan, _ = plan_setup()
     dyn = plan.with_act_quant("dynamic")
     assert dyn.summary()["act_quant"].get("dynamic", 0) > 0
     # original plan untouched
@@ -318,11 +309,11 @@ def test_with_act_quant_modes_and_guards():
                                act_quant="dynamic")
 
 
-def test_int8_serving_flags_still_attribute_faults():
+def test_int8_serving_flags_still_attribute_faults(plan_setup):
     """The epilogue path keeps the per-layer (corrected, DUE) accounting: a
     double-bit fault in layer 0's wq surfaces in layer 0's DUE row when
     serving int8."""
-    cfg, plan, enc = _setup(arch="deepseek-7b")
+    cfg, plan, enc = plan_setup(arch="deepseek-7b")
     wq = enc["layers"]["attn"]["wq"]
     img = np.asarray(wq.enc).copy()
     img.reshape(-1)[3] ^= 0x03

@@ -168,12 +168,11 @@ def test_fused_page_attention_bitexact(scheme, backend):
 # ---------------------------------------------------------------------------
 
 
-def test_paged_decode_tracks_dense():
+def test_paged_decode_tracks_dense(smoke_params):
     """Paged int8 decode (GQA arch, rep=2) follows the dense bf16 chain:
     same shapes, finite logits, strongly correlated — exact agreement is
     not expected (the pages are int8-quantized)."""
-    cfg, b, smax = GQA, 2, 32
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    (_, params), (cfg, b, smax) = smoke_params("minitron-4b"), (GQA, 2, 32)
     dense = kvcache.init_cache(cfg, b, smax)
     paged = kvcache.init_cache(cfg, b, smax, kv_policy="unprotected")
     assert "k_pages" in paged and "k_checks" not in paged
@@ -194,20 +193,18 @@ def test_paged_decode_tracks_dense():
     assert np.mean(corrs) > 0.5, corrs
 
 
-def test_paged_decode_requires_policy():
-    cfg = CFG
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+def test_paged_decode_requires_policy(smoke_params):
+    cfg, params = smoke_params("deepseek-7b")
     cache = kvcache.init_cache(cfg, 1, 16, kv_policy="in-place")
     with pytest.raises(ValueError, match="kv_policy"):
         lm.decode_step(cfg, params, cache, jnp.zeros((1, 1), jnp.int32),
                        jnp.zeros((1,), jnp.int32))
 
 
-def test_prefill_then_decode_chain():
+def test_prefill_then_decode_chain(smoke_params):
     """``prefill_with_cache`` fills the pools so decode steps continue from
     them; clean pools report all-zero per-layer KV flags."""
-    cfg, b, n = CFG, 2, 20
-    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    (_, params), (cfg, b, n) = smoke_params("deepseek-7b", 1), (CFG, 2, 20)
     cache = kvcache.init_cache(cfg, b, 48, kv_policy="in-place")
     toks = jnp.asarray(
         np.random.default_rng(5).integers(0, cfg.vocab, (b, n)), jnp.int32)
@@ -224,13 +221,12 @@ def test_prefill_then_decode_chain():
     assert int(jnp.sum(f2["layers_kv"])) == 0
 
 
-def test_live_pool_injection_flags():
+def test_live_pool_injection_flags(smoke_params):
     """Faults injected into the LIVE pools surface as per-layer (corrected,
     DUE) counts — both through ``tree_layer_flags`` and through the next
     decode step's ``layers_kv`` flags."""
-    cfg, b = CFG, 2
+    (_, params), (cfg, b) = smoke_params("deepseek-7b", 2), (CFG, 2)
     pol = kvcache.get_kv_policy("in-place")
-    params = lm.init_params(cfg, jax.random.PRNGKey(2))
     cache = kvcache.init_cache(cfg, b, 32, kv_policy=pol)
     toks = jnp.asarray(
         np.random.default_rng(6).integers(0, cfg.vocab, (b, 24)), jnp.int32)
@@ -258,13 +254,12 @@ def test_live_pool_injection_flags():
 
 
 @pytest.mark.parametrize("seq", [16, 48])
-def test_due_campaign_kv_target(seq):
+def test_due_campaign_kv_target(seq, smoke_params):
     """``due_campaign(target="kv")`` sweeps the serving state at multiple
     context lengths and carries per-layer rows; JSON round-trips losslessly
     and pre-KV artifacts (no target / layer_rows keys) still load."""
-    cfg, b = CFG, 2
+    (_, params), (cfg, b) = smoke_params("deepseek-7b", 3), (CFG, 2)
     pol = kvcache.get_kv_policy("in-place")
-    params = lm.init_params(cfg, jax.random.PRNGKey(3))
     cache = kvcache.init_cache(cfg, b, seq, kv_policy=pol)
     toks = jnp.asarray(
         np.random.default_rng(8).integers(0, cfg.vocab, (b, seq)), jnp.int32)
@@ -286,10 +281,9 @@ def test_due_campaign_kv_target(seq):
     assert old.target == "weights" and old.layer_rows == ()
 
 
-def test_due_campaign_both_targets():
-    cfg, b = CFG, 1
+def test_due_campaign_both_targets(smoke_params):
+    (_, params), (cfg, b) = smoke_params("deepseek-7b", 4), (CFG, 1)
     pol = kvcache.get_kv_policy("in-place")
-    params = lm.init_params(cfg, jax.random.PRNGKey(4))
     cache = kvcache.init_cache(cfg, b, 16, kv_policy=pol)
     toks = jnp.asarray(
         np.random.default_rng(10).integers(0, cfg.vocab, (b, 16)), jnp.int32)
@@ -308,6 +302,97 @@ def test_due_campaign_both_targets():
 # ---------------------------------------------------------------------------
 # byte accounting: the zero-space claim as bytes
 # ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset",
+                         ["unprotected", "parity-zero", "in-place"])
+def test_freed_page_reuse_no_stale_carryover(preset, smoke_params):
+    """Page free/reuse hygiene: a freed-then-reassigned page serves a new
+    sequence EXACTLY like a fresh pool — no stale-scale, stale-parity, or
+    stale-fault carryover from the previous tenant, even after the
+    tenant's pages absorbed injected faults while live."""
+    cfg, params = smoke_params("deepseek-7b")
+    pol = kvcache.get_kv_policy(preset)
+    b, max_len, n_pages = 2, 32, 6
+    rng = np.random.default_rng(13)
+    seq_a = rng.integers(0, cfg.vocab, 8)
+    seq_b = rng.integers(0, cfg.vocab, 6)
+
+    def step(cache, toks, pos):
+        return lm.decode_step(cfg, params, cache, toks, pos,
+                              kv_policy=pol, collect_flags=True)
+
+    # tenant A lives on slot 0, pages (2, 3); slot 1 idles on its parking
+    # page (keep-alive token 0 at pos 0, like the serving front-end)
+    cache = kvcache.init_paged_cache(cfg, b, max_len, pol,
+                                     n_pages=n_pages)
+    cache = kvcache.set_slot_pages(cache, 0, (2, 3))
+    for t, tok in enumerate(seq_a):
+        _, cache, _ = step(cache, jnp.asarray([[int(tok)], [0]], jnp.int32),
+                           jnp.asarray([t, 0], jnp.int32))
+    # the pool absorbs faults while A is live (scales/parity now reflect
+    # A's tenancy plus flipped bits)
+    tree = kvcache.as_protected_tree(cache, pol)
+    dirty = protection.inject_tree_device(tree, 2e-3,
+                                          jax.random.PRNGKey(21))
+    cache = kvcache.from_protected_tree(cache, dirty)
+    # A finishes: zero its pages, park its slot — the free-side hygiene
+    cache = kvcache.zero_pages(cache, (2, 3))
+    cache = kvcache.set_slot_pages(cache, 0, ())
+
+    def serve_b(c):
+        # tenant B reuses pages (2, 3) from slot 1
+        c = kvcache.set_slot_pages(c, 1, (2, 3))
+        outs, nflags = [], 0
+        for t, tok in enumerate(seq_b):
+            lg, c, fl = step(c, jnp.asarray([[0], [int(tok)]], jnp.int32),
+                             jnp.asarray([0, t], jnp.int32))
+            outs.append(np.asarray(lg, np.float32))
+            nflags += int(jnp.sum(fl["layers_kv"]))
+        return outs, nflags
+
+    reused, fl_reused = serve_b(cache)
+    fresh, fl_fresh = serve_b(kvcache.init_paged_cache(
+        cfg, b, max_len, pol, n_pages=n_pages))
+    assert fl_reused == 0 and fl_fresh == 0   # nothing stale surfaces
+    for got, want in zip(reused, fresh):
+        assert np.array_equal(got, want)      # bit-identical serving
+
+
+def test_page_allocator_and_pool_helpers():
+    """Host-side allocator contract: deterministic lowest-id-first order,
+    parking pages never handed out, double-free and foreign-free rejected,
+    free count exact."""
+    a = kvcache.PageAllocator(8, reserved=2)
+    assert a.free_count == 6 and a.can(6) and not a.can(7)
+    assert a.alloc(3) == (2, 3, 4)
+    a.free([3])
+    assert a.alloc(1) == (3,)                 # lowest id first, reused
+    with pytest.raises(ValueError, match="exhausted"):
+        a.alloc(5)
+    with pytest.raises(ValueError, match="not allocatable"):
+        a.free([1])                           # parking page
+    with pytest.raises(ValueError, match="not allocatable"):
+        a.free([8])                           # out of pool
+    a.free([2])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([2])
+    assert kvcache.pages_needed(1, 16) == 1
+    assert kvcache.pages_needed(16, 16) == 1
+    assert kvcache.pages_needed(17, 16) == 2
+
+    pol = kvcache.get_kv_policy("parity-zero")
+    cache = kvcache.init_paged_cache(CFG, 2, 32, pol, n_pages=6)
+    # parking layout: slot b's whole table row points at page b
+    assert (np.asarray(cache["kv_table"][:, 0]) == 0).all()
+    assert (np.asarray(cache["kv_table"][:, 1]) == 1).all()
+    with pytest.raises(ValueError, match="parking"):
+        kvcache.init_paged_cache(CFG, 2, 32, pol, n_pages=2)
+    cache = kvcache.set_slot_pages(cache, 1, (4,))
+    row = np.asarray(cache["kv_table"][:, 1])
+    assert (row[:, 0] == 4).all() and (row[:, 1] == 1).all()  # tail parks
+    with pytest.raises(ValueError, match="pages_per_seq"):
+        kvcache.set_slot_pages(cache, 0, (2, 3, 4))
 
 
 def test_kv_bytes_accounting():
@@ -344,12 +429,11 @@ def test_kv_policy_presets():
 # ---------------------------------------------------------------------------
 
 
-def test_plan_kv_policy_drives_serving():
+def test_plan_kv_policy_drives_serving(smoke_params):
     """``ProtectionPlan.with_kv_policy`` makes one plan object carry both
     the weight and the serving-state decisions: ``make_serve_step`` /
     ``make_prefill`` default their KV policy from it."""
-    cfg, b = CFG, 2
-    params = lm.init_params(cfg, jax.random.PRNGKey(5))
+    (_, params), (cfg, b) = smoke_params("deepseek-7b", 5), (CFG, 2)
     policy = protection.ProtectionPolicy(default_scheme="in-place")
     plan = policy.plan(params).with_kv_policy("in-place")
     assert plan.kv_policy.scheme == "in-place"

@@ -18,6 +18,11 @@ protection policies and fault rates, and emits:
       --out-dir results/burst [--kv-policies unprotected,in-place] \
       [--fault-rates 0,1e-3] [--seed 0]
 
+``--shared-prefix-len N`` prepends one common N-token prefix to every
+prompt and serves with the front-end's prefix cache on — the summary's
+``sharing`` section then reports pages shared, CoW copies, and pages
+allocated vs what solo (no-sharing) admissions would have cost.
+
 ``--smoke`` is the CI micro-run: 2 waves x 3 requests on the
 deepseek-7b smoke config — small enough to compile and drain on a CPU
 runner, large enough to exercise admission, queueing, eviction, and page
@@ -49,16 +54,18 @@ def _cell_tag(policy: str, rate: float) -> str:
 
 
 def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
-             slots, max_len, n_pages, seed, out_dir=None):
+             slots, max_len, n_pages, seed, out_dir=None,
+             prefix_sharing=False):
     """(policy x rate) grid over one workload; shares one jitted serve
     step per policy across its rate axis (and across twin comparisons) so
     wall-clock cells differ by faults, not compile noise."""
+    import dataclasses
     cells = {}
     for pol_name in kv_policies:
         kvp = kvcache.get_kv_policy(pol_name)
-        if not kvp.fused:
-            import dataclasses
-            kvp = dataclasses.replace(kvp, per_slot_flags=True)
+        # per-request attribution on every path (fused/chunked kernels
+        # reduce flags per batch row in-grid since bench_kernels/v5)
+        kvp = dataclasses.replace(kvp, per_slot_flags=True)
         step = jax.jit(protected.make_serve_step(
             cfg, plan=plan, with_flags=True, kv_policy=kvp))
         for rate in fault_rates:
@@ -74,16 +81,18 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
             warm_ev, _, warm_res = frontend.run_burst(
                 cfg, enc, plan=plan, waves=waves, slots=slots,
                 max_len=max_len, n_pages=n_pages, kv_policy=kvp,
-                fault_rate=rate, fault_seed=seed, serve_step=step)
+                fault_rate=rate, fault_seed=seed, serve_step=step,
+                prefix_sharing=prefix_sharing)
             ev_a, summ_a, res_a = frontend.run_burst(
                 cfg, enc, plan=plan, waves=waves, slots=slots,
                 max_len=max_len, n_pages=n_pages, kv_policy=kvp,
-                fault_rate=rate, fault_seed=seed, serve_step=step)
+                fault_rate=rate, fault_seed=seed, serve_step=step,
+                prefix_sharing=prefix_sharing)
             events, summ, results = frontend.run_burst(
                 cfg, enc, plan=plan, waves=waves, slots=slots,
                 max_len=max_len, n_pages=n_pages, kv_policy=kvp,
                 fault_rate=rate, fault_seed=seed, serve_step=step,
-                telemetry_path=tpath)
+                prefix_sharing=prefix_sharing, telemetry_path=tpath)
             det_views = [telemetry.deterministic_view(e)
                          for e in (warm_ev, ev_a, events)]
             deterministic = (det_views[0] == det_views[1] == det_views[2]
@@ -96,6 +105,7 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
             summ["cell"] = {"kv_policy": pol_name, "fault_rate": rate,
                             "seed": seed, "slots": slots,
                             "max_len": max_len,
+                            "prefix_sharing": prefix_sharing,
                             "bit_deterministic": deterministic}
             if out_dir:
                 telemetry.write_requests_csv(
@@ -109,7 +119,12 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
                   f"{summ['throughput']['tokens_per_step']:.2f} tok/step, "
                   f"p99 per-token {p99s}, "
                   f"DUE total {summ['due']['total']}, "
-                  f"leaked pages {summ['pool']['leaked_pages']}")
+                  f"leaked pages {summ['pool']['leaked_pages']}"
+                  + (f", shared pages {summ['sharing']['pages_shared']}, "
+                     f"cow {summ['sharing']['cow_copies']}, "
+                     f"alloc {summ['sharing']['pages_allocated_total']}"
+                     f"/{summ['sharing']['solo_pages_total']} solo"
+                     if prefix_sharing else ""))
     return cells
 
 
@@ -151,7 +166,12 @@ def main(argv=None):
     ap.add_argument("--wave-size", type=int, default=6)
     ap.add_argument("--gap-steps", type=int, default=8)
     ap.add_argument("--prompt-len", default="4,12",
-                    help="lo,hi prompt-length range")
+                    help="lo,hi prompt-length range (the per-request "
+                         "suffix when --shared-prefix-len is set)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend ONE common prefix of this many tokens "
+                         "to every prompt and serve with the front-end's "
+                         "prefix cache (page sharing + copy-on-write)")
     ap.add_argument("--max-new", default="4,8",
                     help="lo,hi generation-length range")
     ap.add_argument("--slots", type=int, default=4)
@@ -194,21 +214,26 @@ def main(argv=None):
     plan = policy.plan(params)
     enc = plan.encode_tree(params)
 
+    sharing = args.shared_prefix_len > 0
     waves = frontend.make_waves(
         seed=args.seed, n_waves=args.waves, wave_size=args.wave_size,
         vocab=cfg.vocab, prompt_len=(p_lo, p_hi), max_new=(n_lo, n_hi),
-        gap_steps=args.gap_steps)
+        gap_steps=args.gap_steps,
+        shared_prefix_len=args.shared_prefix_len)
     cells = run_grid(cfg, enc, plan, waves, kv_policies=kv_policies,
                      fault_rates=fault_rates, slots=args.slots,
                      max_len=args.max_len, n_pages=args.pages,
-                     seed=args.seed, out_dir=args.out_dir)
+                     seed=args.seed, out_dir=args.out_dir,
+                     prefix_sharing=sharing)
     out = {
         "schema": telemetry.SUMMARY_SCHEMA,
         "arch": cfg.name,
         "workload": {"seed": args.seed, "waves": args.waves,
                      "wave_size": args.wave_size,
                      "gap_steps": args.gap_steps,
-                     "prompt_len": [p_lo, p_hi], "max_new": [n_lo, n_hi]},
+                     "prompt_len": [p_lo, p_hi], "max_new": [n_lo, n_hi],
+                     "shared_prefix_len": args.shared_prefix_len,
+                     "prefix_sharing": sharing},
         "cells": {tag: c["summary"] for tag, c in cells.items()},
         "slo": slo_section(cells, kv_policies, fault_rates),
     }

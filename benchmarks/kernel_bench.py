@@ -9,7 +9,10 @@ kernel on TPU v5e (bytes moved, flops, roofline-bound time).
 backends per weight shape, sweeps fused decode+matmul tiles for the float
 path AND the int8 requantize-epilogue path, times fused page-attention
 (decode-at-use over the protected KV cache) against its decode-then-attend
-reference per KV scheme, and writes the ``bench_kernels/v4`` artifact that
+reference per KV scheme, times the page-chunked online-softmax kernel
+against the whole-strip kernel at long contexts (with the strip kernel's
+VMEM crossover and the chunked-vs-fp64-oracle error), and writes the
+``bench_kernels/v5`` artifact that
 ``protection.AutotuneTable`` consumes — per-leaf backend AND tile choices
 (float ``tiles`` + ``int8_tiles``) are then reproducible from a checked-in
 file instead of call-site defaults (``--tiles-smoke`` shrinks the sweep for
@@ -211,9 +214,89 @@ def bench_paged_attention(shapes=ATTENTION_SHAPES, reps=3):
     return rows
 
 
+# Long-context single-sequence decode shapes (batch 1, one kv head, GQA
+# rep 2, head_dim 128) for the chunked-vs-strip rows. The last length sits
+# BEYOND the strip kernel's structural VMEM crossover (~8.1k tokens at
+# head_dim 128), where the chunked kernel is the only honest TPU route.
+ATTENTION_LONG_LENGTHS = (2048, 4096, 8192, 10240)
+ATTENTION_LONG_LENGTHS_SMOKE = (512, 1024)
+
+
+def bench_chunked_attention(lengths=ATTENTION_LONG_LENGTHS,
+                            chunk_tokens=2048, hd=128, rep=2, reps=3):
+    """Page-chunked online-softmax kernel vs the whole-strip kernel per
+    sequence length and KV scheme — the ``bench_kernels/v5``
+    ``attention_long`` rows. Each row records the strip kernel's VMEM
+    working set against the per-core budget (``over_budget`` marks lengths
+    where only the chunked kernel is deployable) and the chunked output's
+    max abs error against the fp64 oracle with its tolerance gate.
+
+    Returns ``(rows, crossover)`` where ``crossover`` pins the structural
+    strip-VMEM crossover length per scheme for this (head_dim, rep)."""
+    from repro.kernels import paged_attention
+    from repro.serving import kvcache
+    rng = np.random.default_rng(17)
+    b, kv = 1, 1
+    rows = []
+    for s in lengths:
+        q = jnp.asarray(rng.standard_normal((b, rep * kv, 1, hd)),
+                        dtype=jnp.bfloat16)
+        kf = jnp.asarray(rng.standard_normal((b, s, kv, hd)),
+                         dtype=jnp.float32)
+        vf = jnp.asarray(rng.standard_normal((b, s, kv, hd)),
+                         dtype=jnp.float32)
+        pos = jnp.full((b,), s - 1, jnp.int32)
+        for scheme in kvcache.KV_SCHEMES:
+            pol = kvcache.KVProtectionPolicy(scheme=scheme)
+            ke, kch, ksc = kvcache._encode_kv(kf, pol)
+            ve, vch, vsc = kvcache._encode_kv(vf, pol)
+
+            def chunked(q_):
+                return paged_attention.chunked_page_attention(
+                    q_, ke, kch, ksc, ve, vch, vsc, pos, scheme=scheme,
+                    chunk_tokens=chunk_tokens)[0]
+
+            def strip(q_):
+                return paged_attention.fused_page_attention(
+                    q_, ke, kch, ksc, ve, vch, vsc, pos, scheme=scheme)[0]
+
+            c, f = jax.jit(chunked), jax.jit(strip)
+            chunked_us = _time(c, q, reps=reps)
+            strip_us = _time(f, q, reps=reps)
+            oracle = paged_attention.oracle_page_attention(
+                q, ke, kch, ksc, ve, vch, vsc, pos, scheme=scheme)
+            err = float(np.max(np.abs(
+                np.asarray(c(q), np.float64) - oracle)))
+            tol = 0.02 * (float(np.max(np.abs(oracle))) + 1e-6)
+            vmem = paged_attention.strip_vmem_bytes(s, hd, rep, scheme)
+            rows.append({
+                "shape": [b, s, kv, hd], "scheme": scheme,
+                "chunk_tokens": chunk_tokens,
+                "chunked_us": round(chunked_us, 1),
+                "strip_us": round(strip_us, 1),
+                "strip_vmem_bytes": vmem,
+                "chunked_vmem_bytes": paged_attention.chunked_vmem_bytes(
+                    chunk_tokens, hd, rep, scheme),
+                "over_budget":
+                    vmem > paged_attention.VMEM_BUDGET_BYTES,
+                "oracle_max_abs_err": err, "tol": tol,
+                "within_tol": err <= tol,
+            })
+    crossover = {
+        "head_dim": hd, "rep": rep,
+        "vmem_budget_bytes": paged_attention.VMEM_BUDGET_BYTES,
+        "chunk_tokens": chunk_tokens,
+        "tokens_by_scheme": {
+            scheme: paged_attention.strip_vmem_crossover(hd, rep, scheme)
+            for scheme in kvcache.KV_SCHEMES},
+    }
+    return rows, crossover
+
+
 def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP,
-                        attention=None) -> dict:
-    """Write BENCH_kernels.json in the ``bench_kernels/v4`` schema that
+                        attention=None, attention_long=None,
+                        crossover=None) -> dict:
+    """Write BENCH_kernels.json in the ``bench_kernels/v5`` schema that
     ``protection.AutotuneTable`` loads (validated by round-tripping through
     it before writing)."""
     platform = jax.devices()[0].platform
@@ -223,12 +306,17 @@ def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP,
             entries = bench_fused_tiles(entries, tile_sweep=tile_sweep)
     if attention is None:
         attention = bench_paged_attention()
+    if attention_long is None:
+        attention_long, crossover = bench_chunked_attention()
     payload = {"schema": protection.BENCH_KERNELS_SCHEMA,
                "platform": platform,
                "pallas_interpret": platform != "tpu",
                "op": "in-place-decode64+fused-qmatmul",
                "entries": entries,
-               "attention": attention}
+               "attention": attention,
+               "attention_long": attention_long}
+    if crossover:
+        payload["crossover"] = crossover
     protection.AutotuneTable.from_dict(payload)  # schema self-check
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -241,9 +329,10 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-shape xla-vs-pallas decode + "
                          "fused-tile + paged-attention table "
-                         "(BENCH_kernels.json, bench_kernels/v4)")
+                         "(BENCH_kernels.json, bench_kernels/v5)")
     ap.add_argument("--tiles-smoke", action="store_true",
-                    help="tiny fused-tile sweep (CI smoke; interpret mode)")
+                    help="tiny fused-tile sweep + short attention lengths "
+                         "(CI smoke; interpret mode)")
     args = ap.parse_args(argv)
     us, b, r = bench_decode()
     print(f"kernel_ecc_decode,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
@@ -253,7 +342,14 @@ def main(argv=None):
     print(f"kernel_throttle,{us:.0f},tpu_roofline_us={r:.1f}_bytes={b}")
     if args.json:
         sweep = TILE_SWEEP_SMOKE if args.tiles_smoke else TILE_SWEEP
-        payload = write_bench_kernels(args.json, tile_sweep=sweep)
+        lengths = (ATTENTION_LONG_LENGTHS_SMOKE if args.tiles_smoke
+                   else ATTENTION_LONG_LENGTHS)
+        chunk = 256 if args.tiles_smoke else 2048
+        attention_long, crossover = bench_chunked_attention(
+            lengths=lengths, chunk_tokens=chunk)
+        payload = write_bench_kernels(args.json, tile_sweep=sweep,
+                                      attention_long=attention_long,
+                                      crossover=crossover)
         for e in payload["entries"]:
             tiles = "x".join(str(t) for t in e.get("tiles", ()))
             i8 = "x".join(str(t) for t in e.get("int8_tiles", ()))
@@ -267,6 +363,20 @@ def main(argv=None):
             print(f"paged_attention_{shp}_{r['scheme']},"
                   f"{r['fused_us']:.0f},ref_us={r['ref_us']:.0f}"
                   f"_bitexact={str(r['bitexact']).lower()}")
+        for r in payload.get("attention_long", ()):
+            shp = "x".join(str(t) for t in r["shape"])
+            print(f"chunked_attention_{shp}_{r['scheme']},"
+                  f"{r['chunked_us']:.0f},strip_us={r['strip_us']:.0f}"
+                  f"_over_budget={str(r['over_budget']).lower()}"
+                  f"_oracle_err={r['oracle_max_abs_err']:.2e}"
+                  f"_within_tol={str(r['within_tol']).lower()}")
+        if payload.get("crossover"):
+            co = payload["crossover"]
+            toks = ",".join(f"{k}={v}" for k, v in
+                            sorted(co["tokens_by_scheme"].items()))
+            print(f"# strip-VMEM crossover (hd={co['head_dim']} "
+                  f"rep={co['rep']}): {toks} tokens "
+                  f"@ {co['vmem_budget_bytes']} B budget")
         print(f"# wrote {args.json} ({payload['platform']}, "
               f"pallas_interpret={payload['pallas_interpret']})")
 

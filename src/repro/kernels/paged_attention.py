@@ -1,36 +1,55 @@
-"""Pallas TPU kernel: fused ECC page decode + single-token attention.
+"""Pallas TPU kernels: fused ECC page decode + single-token attention.
 
 The paged KV cache (``serving.kvcache``) keeps keys/values ECC-encoded at
-rest; this kernel decodes each sequence's pages in VMEM on their way into
+rest; these kernels decode each sequence's pages in VMEM on their way into
 the attention dots — the serving-state twin of ``ecc_qmatmul``'s
 decode-at-use weight path. Protection then costs zero HBM space (in-place
 scheme) AND zero extra HBM traffic: the encoded strip is what streams in,
 and no decoded copy of the cache ever lands in HBM.
 
-Grid (B, KV): one step owns the whole gathered (S, hd) K and V strips for
-one (batch, kv-head) pair, block-decodes them (per-token flag counts),
-dequantizes with the per-token page scales, and computes all rep = H/KV
-query heads of that group in full-sequence form. Deliberately NO online
-softmax: the op/dtype sequence exactly mirrors ``layers.decode_attention``
-(bf16 score dot -> f32 scale + mask -> ``jax.nn.softmax`` -> dtype cast ->
-PV dot), which is what makes the fused path BIT-IDENTICAL to the XLA
-decode-then-attend reference *compiled as one program* (the serving paths
-always jit it; eager op-by-op execution materializes an intermediate bf16
-rounding of the score dot that fused compilation elides, costing ~1 ulp).
-VMEM holds the full strip (~2*S*hd encoded
-bytes + the dequantized copies) — fine for decode contexts to a few k
-tokens; a page-chunked online-softmax variant would scale further but
-forfeits the bit-identity contract.
+Two kernels, one contract each:
+
+**Strip kernel** (:func:`fused_page_attention`). Grid (B, KV): one step
+owns the whole gathered (S, hd) K and V strips for one (batch, kv-head)
+pair, block-decodes them (per-token flag counts), dequantizes with the
+per-token page scales, and computes all rep = H/KV query heads of that
+group in full-sequence form. Deliberately NO online softmax: the op/dtype
+sequence exactly mirrors ``layers.decode_attention`` (bf16 score dot ->
+f32 scale + mask -> ``jax.nn.softmax`` -> dtype cast -> PV dot), which is
+what makes the fused path BIT-IDENTICAL to the XLA decode-then-attend
+reference *compiled as one program* (the serving paths always jit it;
+eager op-by-op execution materializes an intermediate bf16 rounding of
+the score dot that fused compilation elides, costing ~1 ulp). VMEM holds
+the full strip (see :func:`strip_vmem_bytes`) — fine for decode contexts
+to a few k tokens, a hard wall long before 500k-class contexts.
+
+**Chunked kernel** (:func:`chunked_page_attention`). Grid (B, KV,
+n_chunks) with the chunk axis innermost and sequential: each step streams
+ONE fixed-size page chunk through VMEM (decode ECC block -> int8 dequant
+-> f32) and folds it into running online-softmax state (max m, normalizer
+l, accumulator acc) held in VMEM scratch, so the VMEM working set is
+bounded by the CHUNK size, not the context length
+(:func:`chunked_vmem_bytes`). The price is the bit-identity contract:
+online softmax reassociates the reduction and the chunked path computes
+in f32 rather than replaying the reference's bf16 op sequence, so its
+output is only tolerance-close to the reference. It therefore lives
+behind an explicit ``KVProtectionPolicy(attention_impl="chunked")`` knob
+and is validated against :func:`oracle_page_attention` — an fp64 oracle
+over the SAME encoded strips — instead of a bit-equality check. Flag
+counts (integer, decode-exact) still match the reference exactly.
 
 The page-table gather itself (pool -> (B, S, ...) strips) stays in XLA
 before the ``pallas_call``: gathers are layout transforms XLA schedules
-well, while the kernel owns everything that must not leave VMEM decoded.
+well, while the kernels own everything that must not leave VMEM decoded.
 Flags (corrected, DUE) are masked to valid (``<= pos``) tokens inside the
-kernel, summed per (batch, kv-head) cell, and reduced outside.
+kernel, summed per (batch, kv-head) cell, and reduced outside — per
+batch row (``per_slot=True``, for per-request fault attribution) or to
+batch-total scalars.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +62,45 @@ from . import ecc_decode
 
 KV_SCHEMES = ("faulty", "parity-zero", "in-place")
 
+# ~VMEM per TPU core (v4/v5 class) — the budget the strip kernel's whole
+# gathered working set must fit inside, and the denominator of the
+# structural crossover recorded by benchmarks/kernel_bench.py.
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+
+def _decode_strip(enc, ch, valid_col, rowmask, cols, *, scheme):
+    """Decode one (s, hd) uint8 encoded strip in-kernel.
+
+    -> (int8 (s, hd), corrected, due) — scalar flag counts already masked
+    to ``valid_col`` (s, 1) tokens. Shared by the strip and chunked
+    kernels so both observe identical per-token fault accounting.
+    """
+    s, hd = enc.shape
+    if scheme == "faulty":
+        z = jnp.zeros((), jnp.int32)
+        return jax.lax.bitcast_convert_type(enc, jnp.int8), z, z
+    if scheme == "parity-zero":
+        # constant-free restatement of ecc.decode_parity8 (whose packed
+        # weight tables would be captured consts inside a Pallas kernel):
+        # byte j's stored parity is bit (j % 8) of check byte j // 8.
+        par = (jax.lax.population_count(enc) & 1).astype(jnp.uint8)
+        sh = (jax.lax.broadcasted_iota(jnp.int32, (s, hd), 1) % 8
+              ).astype(jnp.uint8)
+        stored = (jnp.repeat(ch, 8, axis=1) >> sh) & jnp.uint8(1)
+        bad = par != stored
+        data = jnp.where(bad, jnp.uint8(0), enc)
+        cor = jnp.sum(jnp.where(valid_col, bad.astype(jnp.int32), 0))
+        return (jax.lax.bitcast_convert_type(data, jnp.int8), cor,
+                jnp.zeros((), jnp.int32))
+    dcd, fl = ecc_decode._decode_tile(enc.reshape(s * hd // 8, 8),
+                                      rowmask, cols)
+    fl = fl.reshape(s, hd // 8)
+    cor = jnp.sum(jnp.where(valid_col, (fl & 1).astype(jnp.int32), 0))
+    due = jnp.sum(jnp.where(valid_col, ((fl >> 1) & 1).astype(jnp.int32),
+                            0))
+    return jax.lax.bitcast_convert_type(dcd.reshape(s, hd), jnp.int8), \
+        cor, due
+
 
 def _kernel(q_ref, ke_ref, kch_ref, ksc_ref, ve_ref, vch_ref, vsc_ref,
             pos_ref, rowmask_ref, cols_ref, o_ref, flags_ref, *, scheme, s):
@@ -53,37 +111,12 @@ def _kernel(q_ref, ke_ref, kch_ref, ksc_ref, ve_ref, vch_ref, vsc_ref,
     tok = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
     valid_col = tok <= pos                             # (s, 1)
 
-    def dec(enc_ref, ch_ref):
-        """-> (int8 (s, hd), corrected, due) — flags already valid-masked."""
-        enc = enc_ref[0, :, 0, :]                      # (s, hd) uint8
-        if scheme == "faulty":
-            z = jnp.zeros((), jnp.int32)
-            return jax.lax.bitcast_convert_type(enc, jnp.int8), z, z
-        if scheme == "parity-zero":
-            ch = ch_ref[0, :, 0, :]                    # (s, hd // 8)
-            # constant-free restatement of ecc.decode_parity8 (whose packed
-            # weight tables would be captured consts inside a Pallas kernel):
-            # byte j's stored parity is bit (j % 8) of check byte j // 8.
-            par = (jax.lax.population_count(enc) & 1).astype(jnp.uint8)
-            sh = (jax.lax.broadcasted_iota(jnp.int32, (s, hd), 1) % 8
-                  ).astype(jnp.uint8)
-            stored = (jnp.repeat(ch, 8, axis=1) >> sh) & jnp.uint8(1)
-            bad = par != stored
-            data = jnp.where(bad, jnp.uint8(0), enc)
-            cor = jnp.sum(jnp.where(valid_col, bad.astype(jnp.int32), 0))
-            return (jax.lax.bitcast_convert_type(data, jnp.int8), cor,
-                    jnp.zeros((), jnp.int32))
-        dcd, fl = ecc_decode._decode_tile(enc.reshape(s * hd // 8, 8),
-                                          rowmask_ref[...], cols_ref[...])
-        fl = fl.reshape(s, hd // 8)
-        cor = jnp.sum(jnp.where(valid_col, (fl & 1).astype(jnp.int32), 0))
-        due = jnp.sum(jnp.where(valid_col, ((fl >> 1) & 1).astype(jnp.int32),
-                                0))
-        return jax.lax.bitcast_convert_type(dcd.reshape(s, hd), jnp.int8), \
-            cor, due
-
-    kq, kcor, kdue = dec(ke_ref, kch_ref)
-    vq, vcor, vdue = dec(ve_ref, vch_ref)
+    kq, kcor, kdue = _decode_strip(ke_ref[0, :, 0, :], kch_ref[0, :, 0, :],
+                                   valid_col, rowmask_ref[...],
+                                   cols_ref[...], scheme=scheme)
+    vq, vcor, vdue = _decode_strip(ve_ref[0, :, 0, :], vch_ref[0, :, 0, :],
+                                   valid_col, rowmask_ref[...],
+                                   cols_ref[...], scheme=scheme)
     cdt = qb.dtype
     kf = (kq.astype(jnp.float32) * ksc_ref[0][:, None]).astype(cdt)  # (s, hd)
     vf = (vq.astype(jnp.float32) * vsc_ref[0][:, None]).astype(cdt)
@@ -98,9 +131,19 @@ def _kernel(q_ref, ke_ref, kch_ref, ksc_ref, ve_ref, vch_ref, vsc_ref,
     flags_ref[0, 0] = jnp.stack([kcor + vcor, kdue + vdue])
 
 
-@functools.partial(jax.jit, static_argnames=("scheme", "interpret"))
+def _reduce_flags(flags, per_slot: bool):
+    """(b, kv, 2) in-grid flag cells -> (2, b) per-slot rows or (2,)
+    batch totals."""
+    if per_slot:
+        return flags.sum(axis=1).T                     # (2, b)
+    return flags.sum(axis=(0, 1))                      # (2,)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "interpret",
+                                             "per_slot"))
 def fused_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
-                         scheme: str = "in-place", interpret: bool = True):
+                         scheme: str = "in-place", interpret: bool = True,
+                         per_slot: bool = False):
     """Fused decode-at-use attention over gathered encoded KV strips.
 
     q:        (B, H, 1, hd) float query (hd % 8 == 0).
@@ -109,9 +152,11 @@ def fused_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
     ksc/vsc:  (B, S) f32 per-token scales.
     pos:      (B,) int32 current positions; tokens > pos are masked.
 
-    Returns ``(o (B, H, 1, hd) q.dtype, flags (2,) int32)`` — o bit-identical
-    to decode-then-``layers.decode_attention``, flags = (corrected, DUE)
-    counts over valid tokens of both strips.
+    Returns ``(o (B, H, 1, hd) q.dtype, flags)`` — o bit-identical to
+    decode-then-``layers.decode_attention``; flags are the (corrected,
+    DUE) counts over valid tokens of both strips, as per-batch-row
+    ``(2, B)`` rows when ``per_slot`` (per-request fault attribution for
+    the serving front-end) else batch-total ``(2,)`` scalars.
     """
     if scheme not in KV_SCHEMES:
         raise ValueError(f"scheme {scheme!r}; one of {KV_SCHEMES}")
@@ -155,4 +200,219 @@ def fused_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
         interpret=interpret,
     )(q4, ke, kch, ksc, ve, vch, vsc, pos2,
       jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE))
-    return out.reshape(b, h, 1, hd), flags.sum(axis=(0, 1))
+    return out.reshape(b, h, 1, hd), _reduce_flags(flags, per_slot)
+
+
+# ---------------------------------------------------------------------------
+# page-chunked online-softmax variant: VMEM bounded by chunk, not context
+# ---------------------------------------------------------------------------
+
+
+def _chunked_kernel(q_ref, ke_ref, kch_ref, ksc_ref, ve_ref, vch_ref,
+                    vsc_ref, pos_ref, rowmask_ref, cols_ref, o_ref,
+                    flags_ref, m_ref, l_ref, acc_ref, *, scheme, chunk,
+                    nchunks):
+    c = pl.program_id(2)
+    pos = pos_ref[0, 0]
+    base = c * chunk
+
+    @pl.when(c == 0)
+    def _init():
+        # -1e30 is safe (not a sentinel hazard): chunk 0 always contains
+        # token 0, which is valid for every pos >= 0, so m is finite after
+        # the first update and exp(-1e30 - m) underflows masked scores to 0.
+        m_ref[...] = jnp.full(m_ref.shape, -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+        flags_ref[...] = jnp.zeros(flags_ref.shape, jnp.int32)
+
+    @pl.when(base <= pos)  # chunks wholly past the valid prefix contribute 0
+    def _update():
+        qb = q_ref[0, 0].astype(jnp.float32)           # (rep, hd)
+        hd = qb.shape[-1]
+        tok = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        valid_col = tok <= pos                         # (chunk, 1)
+        kq, kcor, kdue = _decode_strip(
+            ke_ref[0, :, 0, :], kch_ref[0, :, 0, :], valid_col,
+            rowmask_ref[...], cols_ref[...], scheme=scheme)
+        vq, vcor, vdue = _decode_strip(
+            ve_ref[0, :, 0, :], vch_ref[0, :, 0, :], valid_col,
+            rowmask_ref[...], cols_ref[...], scheme=scheme)
+        kf = kq.astype(jnp.float32) * ksc_ref[0][:, None]   # (chunk, hd)
+        vf = vq.astype(jnp.float32) * vsc_ref[0][:, None]
+        sc = jax.lax.dot_general(
+            qb, kf, dimension_numbers=(((1,), (1,)), ((), ())))
+        sc = sc * (1.0 / np.sqrt(hd))                  # (rep, chunk) f32
+        sc = jnp.where(valid_col.reshape(1, chunk), sc, -1e30)
+        m_prev = m_ref[:, :1]                          # (rep, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(sc - m_cur)                        # (rep, chunk)
+        p = jnp.where(valid_col.reshape(1, chunk), p, 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True),
+            l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vf, dimension_numbers=(((1,), (0,)), ((), ())))
+        flags_ref[0, 0] = flags_ref[0, 0] + jnp.stack([kcor + vcor,
+                                                       kdue + vdue])
+
+    @pl.when(c == nchunks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "chunk_tokens",
+                                             "interpret", "per_slot"))
+def chunked_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
+                           scheme: str = "in-place",
+                           chunk_tokens: int = 256,
+                           interpret: bool = True,
+                           per_slot: bool = False):
+    """Page-chunked online-softmax decode-at-use attention.
+
+    Same operands and layout as :func:`fused_page_attention`, but the grid
+    is (B, KV, n_chunks) with the chunk axis sequential: VMEM only ever
+    holds one ``chunk_tokens``-sized slice of the strips plus the running
+    (m, l, acc) online-softmax scratch, so context length is bounded by
+    HBM, not VMEM. NOT bit-identical to the reference (see module
+    docstring) — gate behind ``attention_impl="chunked"`` and validate
+    against :func:`oracle_page_attention`. Flag counts ARE exact.
+
+    ``chunk_tokens`` is clamped to S; strips whose S is not a multiple of
+    the chunk are zero-padded (padded tokens sit past every valid ``pos``
+    and are masked, and zero pages are codec-clean for every scheme).
+    """
+    if scheme not in KV_SCHEMES:
+        raise ValueError(f"scheme {scheme!r}; one of {KV_SCHEMES}")
+    if chunk_tokens < 1:
+        raise ValueError(f"chunk_tokens must be positive, got {chunk_tokens}")
+    b, h, _, hd = q.shape
+    s, kv = ke.shape[1], ke.shape[2]
+    rep = h // kv
+    nb = hd // 8
+    if kch is None:
+        kch = jnp.zeros((b, s, kv, nb), jnp.uint8)
+        vch = jnp.zeros((b, s, kv, nb), jnp.uint8)
+    chunk = min(chunk_tokens, s)
+    pad = (-s) % chunk
+    if pad:
+        grow = lambda a: jnp.pad(a, ((0, 0), (0, pad)) +
+                                 ((0, 0),) * (a.ndim - 2))
+        ke, kch, ve, vch = grow(ke), grow(kch), grow(ve), grow(vch)
+        ksc, vsc = grow(ksc), grow(vsc)
+    nc = (s + pad) // chunk
+    q4 = q[:, :, 0, :].reshape(b, kv, rep, hd)
+    pos2 = pos.reshape(b, 1).astype(jnp.int32)
+
+    kern = functools.partial(_chunked_kernel, scheme=scheme, chunk=chunk,
+                             nchunks=nc)
+    cstrip = lambda bi, g, c: (bi, c, g, 0)
+    out, flags = pl.pallas_call(
+        kern,
+        grid=(b, kv, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, g, c: (bi, g, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), cstrip),
+            pl.BlockSpec((1, chunk, 1, nb), cstrip),
+            pl.BlockSpec((1, chunk), lambda bi, g, c: (bi, c)),
+            pl.BlockSpec((1, chunk, 1, hd), cstrip),
+            pl.BlockSpec((1, chunk, 1, nb), cstrip),
+            pl.BlockSpec((1, chunk), lambda bi, g, c: (bi, c)),
+            pl.BlockSpec((1, 1), lambda bi, g, c: (bi, 0)),
+            pl.BlockSpec((7, 8), lambda bi, g, c: (0, 0)),
+            pl.BlockSpec((8, 8), lambda bi, g, c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda bi, g, c: (bi, g, 0, 0)),
+            pl.BlockSpec((1, 1, 2), lambda bi, g, c: (bi, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, kv, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, 128), jnp.float32),   # running max m
+            pltpu.VMEM((rep, 128), jnp.float32),   # running normalizer l
+            pltpu.VMEM((rep, hd), jnp.float32),    # running accumulator
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q4, ke, kch, ksc, ve, vch, vsc, pos2,
+      jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE))
+    return out.reshape(b, h, 1, hd), _reduce_flags(flags, per_slot)
+
+
+# ---------------------------------------------------------------------------
+# fp64 oracle + VMEM accounting (the chunked kernel's acceptance gates)
+# ---------------------------------------------------------------------------
+
+
+def oracle_page_attention(q, ke, kch, ksc, ve, vch, vsc, pos, *,
+                          scheme: str = "in-place",
+                          backend: str = "xla") -> np.ndarray:
+    """Float64 NumPy oracle over the SAME encoded strips -> (B, H, 1, hd).
+
+    The codec decode is integer-exact (reuses ``kvcache._decode_kv``, so
+    repaired/zeroed bytes match what either kernel sees bit for bit); the
+    dequant, score, softmax, and PV reduction then all run in fp64 — the
+    tolerance reference the chunked kernel is validated against, replacing
+    the bit-identity contract it forfeits. Runs entirely on the host; no
+    ``jax_enable_x64`` global flag needed.
+    """
+    from repro.serving import kvcache  # deferred: kvcache imports us
+    kq = np.asarray(kvcache._decode_kv(ke, kch, scheme, backend)[0],
+                    np.float64)
+    vq = np.asarray(kvcache._decode_kv(ve, vch, scheme, backend)[0],
+                    np.float64)
+    kf = kq * np.asarray(ksc, np.float64)[..., None, None]  # (B, S, KV, hd)
+    vf = vq * np.asarray(vsc, np.float64)[..., None, None]
+    qf = np.asarray(jnp.asarray(q).astype(jnp.float32), np.float64)
+    b, h, _, hd = qf.shape
+    s, kv = kf.shape[1], kf.shape[2]
+    rep = h // kv
+    pos_np = np.asarray(pos)
+    valid = np.arange(s)[None, :] <= pos_np[:, None]        # (B, S)
+    out = np.zeros((b, h, 1, hd), np.float64)
+    for bi in range(b):
+        for g in range(kv):
+            for r in range(rep):
+                qv = qf[bi, g * rep + r, 0]                 # (hd,)
+                sc = (kf[bi, :, g] @ qv) / math.sqrt(hd)    # (S,)
+                sc = np.where(valid[bi], sc, -np.inf)
+                p = np.exp(sc - sc.max())
+                out[bi, g * rep + r, 0] = (p / p.sum()) @ vf[bi, :, g]
+    return out
+
+
+def strip_vmem_bytes(s: int, hd: int, rep: int,
+                     scheme: str = "in-place") -> int:
+    """Estimated VMEM working set of the strip kernel per (batch, kv-head)
+    grid cell: encoded K+V strips, their int8 decodes, f32 dequants and
+    compute-dtype copies, parity planes (parity-zero only), and the
+    f32 score/softmax/cast-prob buffers. Linear in ``s`` — the structural
+    wall the chunked kernel removes."""
+    strips = 2 * s * hd * (1 + 1 + 4 + 2)   # enc + int8 + f32 + bf16, K and V
+    checks = 2 * s * (hd // 8) if scheme == "parity-zero" else 0
+    scores = rep * s * (4 + 4 + 2)          # f32 scores + softmax + cast
+    return strips + checks + scores
+
+
+def chunked_vmem_bytes(chunk_tokens: int, hd: int, rep: int,
+                       scheme: str = "in-place") -> int:
+    """Chunked-kernel VMEM working set per grid cell: one chunk's strip
+    working set plus the f32 online-softmax scratch — independent of
+    context length."""
+    scratch = 4 * rep * (128 + 128 + hd)    # m, l, acc
+    return strip_vmem_bytes(chunk_tokens, hd, rep, scheme) + scratch
+
+
+def strip_vmem_crossover(hd: int, rep: int, scheme: str = "in-place",
+                         budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Smallest context length whose strip-kernel working set exceeds the
+    VMEM budget — past this, only the chunked kernel is honest on TPU."""
+    per_token = strip_vmem_bytes(1, hd, rep, scheme)
+    return budget // per_token + 1

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA,
                        BENCH_KERNELS_SCHEMA_V1, BENCH_KERNELS_SCHEMA_V2,
-                       BENCH_KERNELS_SCHEMA_V3,
+                       BENCH_KERNELS_SCHEMA_V3, BENCH_KERNELS_SCHEMA_V4,
                        AutotuneTable, Backend, PallasBackend, XlaBackend,
                        get_backend)
 from .campaign import (CampaignResult, accuracy_eval, due_campaign, due_eval,
@@ -57,6 +57,7 @@ __all__ = [
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
     "AutotuneTable", "BENCH_KERNELS_SCHEMA", "BENCH_KERNELS_SCHEMA_V1",
     "BENCH_KERNELS_SCHEMA_V2", "BENCH_KERNELS_SCHEMA_V3",
+    "BENCH_KERNELS_SCHEMA_V4",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
     "CampaignResult", "run_campaign", "run_campaign_host",
     "fidelity_campaign", "due_campaign", "accuracy_eval", "fidelity_eval",

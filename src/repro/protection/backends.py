@@ -27,7 +27,7 @@ from repro.core import ecc
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
            "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA",
            "BENCH_KERNELS_SCHEMA_V1", "BENCH_KERNELS_SCHEMA_V2",
-           "BENCH_KERNELS_SCHEMA_V3"]
+           "BENCH_KERNELS_SCHEMA_V3", "BENCH_KERNELS_SCHEMA_V4"]
 
 
 class Backend:
@@ -116,7 +116,8 @@ BACKENDS = {"xla": XlaBackend, "pallas": PallasBackend}
 BENCH_KERNELS_SCHEMA_V1 = "bench_kernels/v1"
 BENCH_KERNELS_SCHEMA_V2 = "bench_kernels/v2"
 BENCH_KERNELS_SCHEMA_V3 = "bench_kernels/v3"
-BENCH_KERNELS_SCHEMA = "bench_kernels/v4"
+BENCH_KERNELS_SCHEMA_V4 = "bench_kernels/v4"
+BENCH_KERNELS_SCHEMA = "bench_kernels/v5"
 
 
 class AutotuneTable:
@@ -135,8 +136,15 @@ class AutotuneTable:
     protected KV cache) vs decode-then-attend reference timings per
     ``(batch, seq, kv_heads, head_dim)`` shape and KV scheme — surfaced on
     :attr:`attention` for reporting, not consulted by the lookups.
-    v1/v2/v3 artifacts still load — their entries simply have no (int8)
-    tile opinion and an empty :attr:`attention`.
+    ``bench_kernels/v5`` adds the long-context rows: a top-level
+    ``"attention_long"`` list (page-chunked online-softmax kernel vs the
+    whole-strip kernel per sequence length, with each length's strip-VMEM
+    footprint and chunked-vs-fp64-oracle error) and ``"crossover"`` (the
+    structural strip-VMEM crossover: the first sequence length whose
+    gathered strip no longer fits the per-core VMEM budget, where the
+    chunked kernel becomes the only honest route). v1–v4 artifacts still
+    load — their entries simply have no (int8) tile opinion and empty
+    :attr:`attention` / :attr:`attention_long`.
 
     :meth:`lookup` (backend choice) resolves an exact shape match first,
     then the nearest entry by 64-bit-block count within a 4x factor, else
@@ -151,8 +159,11 @@ class AutotuneTable:
     """
 
     def __init__(self, entries=(), *, platform: str = "", source: str = "",
-                 schema: str = BENCH_KERNELS_SCHEMA, attention=()):
+                 schema: str = BENCH_KERNELS_SCHEMA, attention=(),
+                 attention_long=(), crossover=None):
         self.attention = [dict(a) for a in attention]
+        self.attention_long = [dict(a) for a in attention_long]
+        self.crossover = dict(crossover) if crossover else None
         self.entries = []
         for e in entries:
             e = dict(e)
@@ -233,20 +244,27 @@ class AutotuneTable:
                          for e in self.entries]}
         if self.attention:
             d["attention"] = [dict(a) for a in self.attention]
+        if self.attention_long:
+            d["attention_long"] = [dict(a) for a in self.attention_long]
+        if self.crossover:
+            d["crossover"] = dict(self.crossover)
         return d
 
     @classmethod
     def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
         schema = d.get("schema", "")
-        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V3,
-                 BENCH_KERNELS_SCHEMA_V2, BENCH_KERNELS_SCHEMA_V1)
+        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V4,
+                 BENCH_KERNELS_SCHEMA_V3, BENCH_KERNELS_SCHEMA_V2,
+                 BENCH_KERNELS_SCHEMA_V1)
         if schema and schema not in known:
             raise ValueError(
                 f"unsupported autotune schema {schema!r} (expected one of "
                 f"{known})")
         return cls(d.get("entries", ()), platform=d.get("platform", ""),
                    source=source, schema=schema or BENCH_KERNELS_SCHEMA_V1,
-                   attention=d.get("attention", ()))
+                   attention=d.get("attention", ()),
+                   attention_long=d.get("attention_long", ()),
+                   crossover=d.get("crossover"))
 
     @classmethod
     def from_json(cls, path) -> "AutotuneTable":

@@ -213,6 +213,7 @@ class ProtectionPlan:
             "act_quant": self._count(prot, "act_quant"),
             "kv_policy": ({"scheme": self.kv_policy.scheme,
                            "fused": self.kv_policy.fused,
+                           "attention_impl": self.kv_policy.attention_impl,
                            "page_size": self.kv_policy.page_size}
                           if self.kv_policy is not None else None),
         }

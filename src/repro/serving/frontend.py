@@ -26,12 +26,22 @@ Design points
   logical step. A seeded burst replay is bit-deterministic — asserted via
   :func:`~repro.serving.telemetry.deterministic_view`.
 * **Per-request fault attribution.** The front-end forces
-  ``per_slot_flags`` on reference-path KV policies, so
+  ``per_slot_flags`` on EVERY KV policy — the fused and chunked Pallas
+  kernels reduce (corrected, DUE) per batch row in-grid — so
   ``flags["layers_kv"]`` is (n_layers, 2, B) and each finish event
-  carries the (corrected, DUE) counts *that request's* cached tokens saw.
-  Fused-attention policies reduce flags to scalars in-kernel; there the
-  per-step totals are attributed to all active slots as a batch-level
-  upper bound (documented in docs/serving.md).
+  carries the counts *that request's* cached tokens saw.
+* **Prefix sharing + copy-on-write.** With ``prefix_sharing=True`` the
+  front-end keeps an index of published full-page prompt prefixes
+  (key = the ENTIRE token prefix through that page, since cached K/V at
+  any position depends on every token before it). Admission maps index
+  hits into the new slot's table via allocator refcounts and skips their
+  prefill steps; the index holds its own reference, so cached pages
+  survive their publisher. A prompt ending exactly on a shared page
+  boundary re-consumes its last token (that step yields the first
+  sampled token) and therefore writes into the last shared page — that
+  page gets a private copy-on-write clone instead of a reference. Pages
+  re-enter the pool (and are zeroed) only when their LAST reference
+  drops; under pool pressure admission evicts cached pages oldest-first.
 """
 
 from __future__ import annotations
@@ -147,11 +157,15 @@ class ServingFrontend:
                  slots: int = 4, max_len: int = 128,
                  n_pages: Optional[int] = None, kv_policy="in-place",
                  serve_step=None, collector=None, dtype=jnp.bfloat16,
-                 act_quant: Optional[str] = None):
+                 act_quant: Optional[str] = None,
+                 prefix_sharing: bool = False):
         kvp = kvcache.get_kv_policy(kv_policy)
-        if not kvp.fused:  # per-request attribution (see module docstring)
-            kvp = dataclasses.replace(kvp, per_slot_flags=True)
+        # per-request attribution on every path (see module docstring)
+        kvp = dataclasses.replace(kvp, per_slot_flags=True)
         self.cfg, self.policy, self.slots_n = cfg, kvp, slots
+        self.prefix_sharing = bool(prefix_sharing)
+        self._prefix_index: dict = {}   # full-prefix tokens -> page id
+        self._published: dict = {}      # page id -> its index key
         npg = -(-max_len // kvp.page_size)
         self.max_len = npg * kvp.page_size
         if n_pages is None:
@@ -178,7 +192,9 @@ class ServingFrontend:
                             pool_free=self.allocator.free_count,
                             page_size=kvp.page_size, max_len=self.max_len,
                             scheme=kvp.scheme, fused=kvp.fused,
-                            per_slot_flags=kvp.per_slot_flags)
+                            attention_impl=kvp.attention_impl,
+                            per_slot_flags=kvp.per_slot_flags,
+                            prefix_sharing=self.prefix_sharing)
 
     # -- request intake ----------------------------------------------------
 
@@ -194,30 +210,122 @@ class ServingFrontend:
                             prompt_len=len(req.prompt),
                             max_new=req.max_new, t_s=now)
 
+    # -- prefix sharing ----------------------------------------------------
+
+    def _lookup_shared(self, prompt) -> tuple:
+        """Longest run of published full-page prefixes of ``prompt``.
+        Matching is on the ENTIRE token prefix through each page — cached
+        K/V at any position depends on every token before it, so a page
+        is reusable only when everything upstream of it matches too."""
+        ps = self.policy.page_size
+        pids, j = [], 1
+        while j * ps <= len(prompt):
+            pid = self._prefix_index.get(tuple(prompt[:j * ps]))
+            if pid is None:
+                break
+            pids.append(pid)
+            j += 1
+        return tuple(pids)
+
+    def _evict_prefix_cache(self, need: int, keep=()):
+        """Drop cached prefix pages (oldest publication first, never the
+        ones the in-flight admission is about to map) until the allocator
+        can serve ``need`` fresh pages. Evicting an entry only releases
+        the page if no live slot still maps it."""
+        keep = set(keep)
+        for key in list(self._prefix_index):
+            if self.allocator.can(need):
+                return
+            pid = self._prefix_index[key]
+            if pid in keep:
+                continue
+            del self._prefix_index[key]
+            del self._published[pid]
+            released = self.allocator.free((pid,))
+            if released:
+                self.cache = kvcache.zero_pages(self.cache, released)
+
+    def drop_prefix_cache(self) -> int:
+        """Release every cached prefix page (the index's own references);
+        pages still mapped by live slots survive until those finish.
+        Returns the number of entries dropped."""
+        n = len(self._prefix_index)
+        self._evict_prefix_cache(self.allocator.n_pages + 1)
+        return n
+
+    def _maybe_publish(self, s: "_Slot"):
+        """After ``s.consumed`` advanced: if it just crossed a page
+        boundary inside the prompt, that page now holds a complete,
+        final prefix — publish it (the index takes its own reference)."""
+        ps = self.policy.page_size
+        if s.consumed % ps != 0 or s.consumed > len(s.req.prompt):
+            return
+        key = tuple(s.req.prompt[:s.consumed])
+        if key in self._prefix_index:
+            return
+        pid = s.pages[s.consumed // ps - 1]
+        self._prefix_index[key] = pid
+        self._published[pid] = key
+        self.allocator.retain((pid,))
+
+    # -- admission ---------------------------------------------------------
+
     def _admit(self):
         """FIFO head-of-line admission: admit while a slot is free AND the
-        pool can serve the head request's full page budget up front."""
+        pool can serve the head request's page budget up front. With
+        prefix sharing the budget shrinks by the cached full-page prefix
+        (mapped via refcounts), plus one CoW target when the prompt ends
+        exactly on a shared page boundary."""
         while self.queue.peek() is not None:
             free_slot = next((i for i, s in enumerate(self._slots)
                               if s is None), None)
             if free_slot is None:
                 return
             req = self.queue.peek()
-            need = kvcache.pages_needed(req.total_tokens,
-                                        self.policy.page_size)
+            ps = self.policy.page_size
+            npg = kvcache.pages_needed(req.total_tokens, ps)
+            shared = (self._lookup_shared(req.prompt)
+                      if self.prefix_sharing else ())
+            plen = len(req.prompt)
+            # a fully-shared prompt still re-consumes its last token
+            # (that step yields the first sampled token) and therefore
+            # WRITES into the last shared page -> private CoW clone
+            cow = bool(shared) and len(shared) * ps == plen
+            need = npg - len(shared) + (1 if cow else 0)
+            if not self.allocator.can(need) and self.prefix_sharing:
+                self._evict_prefix_cache(need, keep=shared)
             if not self.allocator.can(need):
                 return                      # transient exhaustion: wait
             self.queue.pop()
-            pages = self.allocator.alloc(need)
+            fresh = self.allocator.alloc(need)
+            if cow:
+                src, dst = shared[-1], fresh[0]
+                self.allocator.retain(shared[:-1])
+                self.cache = kvcache.copy_page(self.cache, src, dst)
+                pages = shared[:-1] + (dst,) + fresh[1:]
+            else:
+                self.allocator.retain(shared)
+                pages = shared + fresh
             self.cache = kvcache.set_slot_pages(self.cache, free_slot,
                                                 pages)
             enq_step, enq_s = self._pending_meta.pop(req.rid)
-            self._slots[free_slot] = _Slot(req, pages, self.step_no,
-                                           enq_step, enq_s)
-            self.telemetry.emit("admit", rid=req.rid, step=self.step_no,
-                                slot=free_slot, n_pages=need,
-                                queue_depth=len(self.queue),
-                                pool_free=self.allocator.free_count)
+            slot = _Slot(req, pages, self.step_no, enq_step, enq_s)
+            # shared pages' K/V is already in the pool: skip straight
+            # past those prompt tokens
+            slot.consumed = min(len(shared) * ps, plen - 1)
+            self._slots[free_slot] = slot
+            ev = dict(rid=req.rid, step=self.step_no, slot=free_slot,
+                      n_pages=need, queue_depth=len(self.queue),
+                      pool_free=self.allocator.free_count)
+            if self.prefix_sharing:
+                ev.update(n_pages_solo=npg, pages_shared=len(shared),
+                          tokens_reused=slot.consumed,
+                          cow_copied=int(cow))
+            self.telemetry.emit("admit", **ev)
+            if cow:
+                self.telemetry.emit("cow", rid=req.rid, step=self.step_no,
+                                    slot=free_slot, src=shared[-1],
+                                    dst=fresh[0])
 
     # -- the serving loop --------------------------------------------------
 
@@ -230,11 +338,14 @@ class ServingFrontend:
         now = time.perf_counter()
         n_gen = len(s.generated)
         self.results[s.req.rid] = list(s.generated)
-        # reuse hygiene: zero the pages BEFORE they re-enter the pool, and
-        # park the slot's table row again
-        self.cache = kvcache.zero_pages(self.cache, s.pages)
+        # park the row, then drop this slot's references; only pages whose
+        # LAST reference died re-enter the pool — zero exactly those
+        # before anything can re-allocate them (pages still mapped by
+        # other slots or the prefix cache must keep their bytes)
         self.cache = kvcache.set_slot_pages(self.cache, idx, ())
-        self.allocator.free(s.pages)
+        released = self.allocator.free(s.pages)
+        if released:
+            self.cache = kvcache.zero_pages(self.cache, released)
         self._slots[idx] = None
         ev = {"rid": s.req.rid, "step": self.step_no, "slot": idx,
               "n_generated": n_gen, "kv_corrected": int(s.kv_corrected),
@@ -280,6 +391,8 @@ class ServingFrontend:
                 s.kv_corrected += int(kv[0])
                 s.kv_due += int(kv[1])
             s.consumed += 1
+            if self.prefix_sharing:
+                self._maybe_publish(s)
             if s.consumed >= len(s.req.prompt):
                 s.generated.append(int(sampled[i]))
                 if s.first_step is None:
@@ -297,6 +410,7 @@ class ServingFrontend:
             "step", step=self.step_no, active=self.active,
             queue_depth=len(self.queue),
             pool_free=self.allocator.free_count,
+            pool_cached=len(self._prefix_index),
             kv_corrected=int(kv.sum(axis=-1)[0] if per_slot else kv[0]),
             kv_due=int(kv.sum(axis=-1)[1] if per_slot else kv[1]),
             w_corrected=int(w[0]), w_due=int(w[1]),
@@ -322,12 +436,19 @@ class ServingFrontend:
 
 def make_waves(*, seed: int, n_waves: int, wave_size: int, vocab: int,
                prompt_len=(4, 12), max_new=(4, 8),
-               gap_steps: int = 8) -> list:
+               gap_steps: int = 8, shared_prefix_len: int = 0) -> list:
     """Deterministic burst workload: ``n_waves`` waves of ``wave_size``
     requests each, wave *w* arriving at step ``w * gap_steps``. Prompt
     tokens and per-request lengths draw from a ``numpy`` generator seeded
-    with ``seed`` only — same seed, same workload, bit for bit."""
+    with ``seed`` only — same seed, same workload, bit for bit.
+
+    ``shared_prefix_len > 0`` draws ONE common prefix of that many tokens
+    and prepends it to every prompt (``prompt_len`` then ranges over the
+    per-request suffix, which may be 0) — the shared-prefix serving
+    scenario the front-end's prefix cache exists for."""
     rng = np.random.default_rng(seed)
+    shared = tuple(int(t) for t in
+                   rng.integers(1, vocab, size=shared_prefix_len))
     lo_p, hi_p = prompt_len
     lo_n, hi_n = max_new
     reqs, rid = [], 0
@@ -336,8 +457,8 @@ def make_waves(*, seed: int, n_waves: int, wave_size: int, vocab: int,
             plen = int(rng.integers(lo_p, hi_p + 1))
             reqs.append(Request(
                 rid=rid,
-                prompt=tuple(int(t) for t in
-                             rng.integers(1, vocab, size=plen)),
+                prompt=shared + tuple(int(t) for t in
+                                      rng.integers(1, vocab, size=plen)),
                 max_new=int(rng.integers(lo_n, hi_n + 1)),
                 arrival_step=w * gap_steps))
             rid += 1
@@ -350,7 +471,7 @@ def run_burst(cfg: ArchConfig, enc_params, *, plan=None, waves: Sequence,
               fault_rate: float = 0.0, fault_seed: int = 0,
               inject_every: int = 4, telemetry_path: Optional[str] = None,
               serve_step=None, max_steps: int = 10_000,
-              dtype=jnp.bfloat16):
+              dtype=jnp.bfloat16, prefix_sharing: bool = False):
     """Replay a seeded wave workload through the front-end, optionally
     injecting faults into the live KV pools every ``inject_every`` steps
     at per-bit ``fault_rate`` (keys fold in the logical step, so a replay
@@ -363,7 +484,8 @@ def run_burst(cfg: ArchConfig, enc_params, *, plan=None, waves: Sequence,
     fe = ServingFrontend(cfg, enc_params, plan=plan, slots=slots,
                          max_len=max_len, n_pages=n_pages,
                          kv_policy=kv_policy, serve_step=serve_step,
-                         collector=col, dtype=dtype)
+                         collector=col, dtype=dtype,
+                         prefix_sharing=prefix_sharing)
     pending = sorted(waves, key=lambda r: (r.arrival_step, r.rid))
     i = 0
     base_key = jax.random.PRNGKey(fault_seed)

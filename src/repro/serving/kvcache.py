@@ -56,7 +56,7 @@ __all__ = ["KVProtectionPolicy", "KV_POLICY_PRESETS", "get_kv_policy",
            "init_paged_cache", "init_cache", "paged_gqa_decode",
            "paged_gqa_prefill", "as_protected_tree", "from_protected_tree",
            "tree_layer_flags", "kv_bytes", "dense_kv_bytes",
-           "PageAllocator", "set_slot_pages", "zero_pages"]
+           "PageAllocator", "set_slot_pages", "zero_pages", "copy_page"]
 
 # the paper's serving-state menu: parity detects+zeroes, in-place corrects
 # singles / detects doubles at zero space. secded72 is excluded on purpose —
@@ -84,8 +84,22 @@ class KVProtectionPolicy:
                becomes (n_layers, 2, B) so the request front-end can
                attribute state faults to the request occupying each slot
                (MILR-style recovery needs to know WHICH request a DUE
-               hit). Reference (XLA decode-then-attend) path only: the
-               fused kernel reduces its flags inside the grid.
+               hit). Supported on every attention path: the reference
+               masks per-token flags per row, the fused kernels reduce
+               their in-grid (B, KV, 2) flag cells per batch row.
+    attention_impl: decode-attention kernel choice for the Pallas path.
+               "strip" (default) holds the whole gathered strip in VMEM
+               and is bit-identical to the XLA reference — a hard VMEM
+               wall at a few k tokens (``paged_attention.
+               strip_vmem_bytes``). "chunked" streams fixed-size page
+               chunks through a running online-softmax — VMEM bounded by
+               ``chunk_pages``, context bounded by HBM — but FORFEITS
+               the bit-identity contract: it is validated against an
+               fp64 oracle (``paged_attention.oracle_page_attention``)
+               within tolerance instead, which is why it must be asked
+               for explicitly.
+    chunk_pages: pages per chunk for ``attention_impl="chunked"``
+               (chunk_tokens = chunk_pages * page_size).
     """
 
     scheme: str = "in-place"
@@ -94,6 +108,8 @@ class KVProtectionPolicy:
     page_size: int = 16
     interpret: bool = True
     per_slot_flags: bool = False
+    attention_impl: str = "strip"
+    chunk_pages: int = 16
 
     def __post_init__(self):
         sid = ALIASES.get(self.scheme, self.scheme)
@@ -102,10 +118,12 @@ class KVProtectionPolicy:
         object.__setattr__(self, "scheme", sid)
         if self.page_size <= 0:
             raise ValueError(f"page_size must be positive, got {self.page_size}")
-        if self.fused and self.per_slot_flags:
-            raise ValueError("per_slot_flags needs the reference attention "
-                             "path (the fused kernel reduces flags to "
-                             "scalars inside its grid)")
+        if self.attention_impl not in ("strip", "chunked"):
+            raise ValueError(f"attention_impl {self.attention_impl!r}; one "
+                             f"of ('strip', 'chunked')")
+        if self.chunk_pages <= 0:
+            raise ValueError(f"chunk_pages must be positive, "
+                             f"got {self.chunk_pages}")
 
     @property
     def scheme_obj(self):
@@ -123,20 +141,32 @@ KV_POLICY_PRESETS = {
     "unprotected-fused": KVProtectionPolicy(scheme="faulty", fused=True),
     "parity-zero-fused": KVProtectionPolicy(scheme="parity-zero", fused=True),
     "in-place-fused": KVProtectionPolicy(scheme="in-place", fused=True),
+    # long-context fast path: page-chunked online-softmax Pallas attention.
+    # NOT bit-identical to the reference (fp64-oracle tolerance gated) —
+    # which is why it only runs when named explicitly.
+    "unprotected-chunked": KVProtectionPolicy(scheme="faulty", fused=True,
+                                              attention_impl="chunked"),
+    "parity-zero-chunked": KVProtectionPolicy(scheme="parity-zero",
+                                              fused=True,
+                                              attention_impl="chunked"),
+    "in-place-chunked": KVProtectionPolicy(scheme="in-place", fused=True,
+                                           attention_impl="chunked"),
 }
 
 
 def get_kv_policy(policy) -> Optional[KVProtectionPolicy]:
-    """Resolve a preset name (scheme aliases + optional "-fused" suffix) or
-    pass a :class:`KVProtectionPolicy` / None through."""
+    """Resolve a preset name (scheme aliases + optional "-fused" /
+    "-chunked" suffix) or pass a :class:`KVProtectionPolicy` / None
+    through."""
     if policy is None or isinstance(policy, KVProtectionPolicy):
         return policy
     name = str(policy)
-    fused = name.endswith("-fused")
-    base = name[: -len("-fused")] if fused else name
+    suffix = next((s for s in ("-fused", "-chunked")
+                   if name.endswith(s)), "")
+    base = name[: -len(suffix)] if suffix else name
     base = ALIASES.get(base, base)
     base = "unprotected" if base == "faulty" else base
-    key = base + ("-fused" if fused else "")
+    key = base + suffix
     try:
         return KV_POLICY_PRESETS[key]
     except KeyError:
@@ -348,13 +378,25 @@ def _gather_seq(pages, checks, scales, table):
 
 
 class PageAllocator:
-    """Host-side free-list over the pool's allocatable pages.
+    """Host-side REFCOUNTED free-list over the pool's allocatable pages.
 
     Page ids ``0..reserved-1`` are per-slot parking pages (see
     :func:`init_paged_cache` with ``n_pages``) and are never handed out.
     Allocation is deterministic — lowest ids first via a heap — so a seeded
     request replay reuses the exact same physical pages run-to-run (the
     burst trace's bit-determinism contract depends on this).
+
+    Prefix sharing maps one physical page into several slots' tables, so
+    every live page carries a reference count: :meth:`alloc` hands pages
+    out at refcount 1, :meth:`retain` adds a reference (a sharer's
+    read-only mapping, or the front-end's prefix index), and :meth:`free`
+    drops ONE reference per page — a page re-enters the heap only when
+    its count hits zero, and :meth:`free` returns exactly those released
+    pages so the caller knows which ones to zero. Freeing a page with no
+    live reference is an accounting bug ("double free") and raises
+    explicitly rather than silently re-heapifying a page some other slot
+    still reads — the invariant the hypothesis suite hammers:
+    ``free_count + live_count == n_pages - reserved`` always.
     """
 
     def __init__(self, n_pages: int, reserved: int = 0):
@@ -365,36 +407,66 @@ class PageAllocator:
         self.reserved = reserved
         self._free = list(range(reserved, n_pages))
         heapq.heapify(self._free)
+        self._refs: dict = {}       # page id -> live reference count
 
     @property
     def free_count(self) -> int:
         return len(self._free)
 
+    @property
+    def live_count(self) -> int:
+        """Distinct pages currently out of the pool (any refcount)."""
+        return len(self._refs)
+
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
+
     def can(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> tuple:
-        """Pop the ``n`` lowest free page ids; raises if the pool cannot
-        serve the request (admission control checks :meth:`can` first)."""
+        """Pop the ``n`` lowest free page ids (each at refcount 1); raises
+        if the pool cannot serve the request (admission control checks
+        :meth:`can` first)."""
         if not self.can(n):
             raise ValueError(f"page pool exhausted: need {n}, "
                              f"free {len(self._free)}")
-        return tuple(heapq.heappop(self._free) for _ in range(n))
+        ids = tuple(heapq.heappop(self._free) for _ in range(n))
+        for pid in ids:
+            self._refs[pid] = 1
+        return ids
 
-    def free(self, page_ids: Sequence[int]) -> None:
-        """Return pages to the pool. Double-frees and parking-page frees are
-        accounting bugs — fail loudly instead of corrupting the invariant
-        the hypothesis suite asserts."""
-        live = set(self._free)
+    def retain(self, page_ids: Sequence[int]) -> None:
+        """Add one reference per page (prefix sharing / index pin). Only
+        live pages can be retained — retaining a free page would resurrect
+        content the pool may already have handed to someone else."""
+        for pid in page_ids:
+            if self._refs.get(pid, 0) < 1:
+                raise ValueError(f"retain of page {pid} with no live "
+                                 f"reference")
+            self._refs[pid] += 1
+
+    def free(self, page_ids: Sequence[int]) -> tuple:
+        """Drop one reference per page; returns the pages whose count hit
+        zero and re-entered the pool (the caller zeroes exactly those).
+        Double-frees and parking-page frees are accounting bugs — fail
+        loudly instead of corrupting the refcount invariant."""
+        released = []
         for pid in page_ids:
             if pid < self.reserved or pid >= self.n_pages:
                 raise ValueError(f"page {pid} is not allocatable "
                                  f"(reserved < {self.reserved}, "
                                  f"pool {self.n_pages})")
-            if pid in live:
+            refs = self._refs.get(pid, 0)
+            if refs < 1:
                 raise ValueError(f"double free of page {pid}")
-            live.add(pid)
-            heapq.heappush(self._free, pid)
+            if refs == 1:
+                del self._refs[pid]
+                heapq.heappush(self._free, pid)
+                released.append(pid)
+            else:
+                self._refs[pid] = refs - 1
+        return tuple(released)
 
 
 def set_slot_pages(cache: dict, slot: int, page_ids: Sequence[int],
@@ -411,6 +483,20 @@ def set_slot_pages(cache: dict, slot: int, page_ids: Sequence[int],
     return {**cache,
             "kv_table": cache["kv_table"].at[:, slot, :].set(
                 jnp.asarray(row))}
+
+
+def copy_page(cache: dict, src: int, dst: int) -> dict:
+    """Copy one pool page (encoded bytes, parity planes AND per-token
+    scales) across all layers — the copy-on-write primitive: when a slot
+    first appends into a page it only holds a shared read-only mapping to,
+    the front-end copies the page into a private one it owns, repoints its
+    table entry, and drops the shared reference."""
+    new = dict(cache)
+    for key in ("k_pages", "v_pages", "k_scale", "v_scale",
+                "k_checks", "v_checks"):
+        if key in new:
+            new[key] = new[key].at[:, dst].set(new[key][:, src])
+    return new
 
 
 def zero_pages(cache: dict, page_ids: Sequence[int]) -> dict:
@@ -488,11 +574,22 @@ def paged_gqa_decode(p, x, cfg: ArchConfig, lc, *, pos, wt=L.Identity,
     ke, kch, ksc = _gather_seq(kp, kc, ks, table)
     ve, vch, vsc = _gather_seq(vp, vc, vs, table)
     qh = q.transpose(0, 2, 1, 3)                             # (B, H, 1, hd)
-    if policy.fused:
+    if policy.attention_impl == "chunked":
+        # page-chunked online-softmax fast path: VMEM bounded by the chunk,
+        # tolerance-gated against the fp64 oracle (NOT bit-identical)
+        from repro.kernels import paged_attention
+        o, flags = paged_attention.chunked_page_attention(
+            qh, ke, kch, ksc, ve, vch, vsc, pos,
+            scheme=policy.scheme,
+            chunk_tokens=policy.chunk_pages * policy.page_size,
+            interpret=policy.interpret, per_slot=policy.per_slot_flags)
+        L.record_kv_flags(flags[0], flags[1])
+    elif policy.fused:
         from repro.kernels import paged_attention
         o, flags = paged_attention.fused_page_attention(
             qh, ke, kch, ksc, ve, vch, vsc, pos,
-            scheme=policy.scheme, interpret=policy.interpret)
+            scheme=policy.scheme, interpret=policy.interpret,
+            per_slot=policy.per_slot_flags)
         L.record_kv_flags(flags[0], flags[1])
     else:
         o, corrected, due = _reference_paged_attention(

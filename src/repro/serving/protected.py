@@ -243,7 +243,7 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
                     dtype=jnp.bfloat16, backend="xla",
                     with_flags: bool = False,
                     act_quant: Optional[str] = None,
-                    kv_policy=None):
+                    kv_policy=None, attention_impl: Optional[str] = None):
     """serve_step(enc_params, cache, tokens, pos) -> (logits, cache)
     (``+ flags`` with ``with_flags=True``).
 
@@ -273,11 +273,18 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
     decode. When ``kv_policy`` is not given it defaults from
     ``plan.kv_policy`` (set via ``ProtectionPlan.with_kv_policy``), so one
     plan object can carry both the weight and the serving-state decisions.
+    ``attention_impl`` overrides the resolved policy's attention routing
+    ("strip" | "chunked") without rebuilding the policy — the switch onto
+    the page-chunked online-softmax kernel for long contexts.
     """
     from . import kvcache
     if kv_policy is None and plan is not None:
         kv_policy = getattr(plan, "kv_policy", None)
     kvp = kvcache.get_kv_policy(kv_policy)
+    if attention_impl is not None:
+        if kvp is None:
+            raise ValueError("attention_impl override needs a kv_policy")
+        kvp = dataclasses.replace(kvp, attention_impl=attention_impl)
     if decode_at_use is None:
         decode_at_use = decode_per_step
     if act_quant is not None and not (decode_at_use and decode_per_step):
@@ -324,7 +331,8 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
 def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
                  chunk: int = 2048, backend="xla",
                  decode_at_use: bool = True, with_flags: bool = False,
-                 act_quant: Optional[str] = None, kv_policy=None):
+                 act_quant: Optional[str] = None, kv_policy=None,
+                 attention_impl: Optional[str] = None):
     """prefill(enc_params, tokens, extras) -> logits (``+ flags`` with
     ``with_flags=True``). Decode-at-use by default, same routing as
     :func:`make_serve_step` (including the ``act_quant`` int8 path);
@@ -334,11 +342,17 @@ def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
     ``prefill(enc_params, cache, tokens, extras=None) -> (logits, cache)``
     (``+ flags``): it fills the paged protected KV cache through
     ``lm.prefill_with_cache`` so decode steps can continue from it, and the
-    flags dict gains the per-layer "layers_kv" rows."""
+    flags dict gains the per-layer "layers_kv" rows. ``attention_impl``
+    overrides the resolved policy's attention routing, as in
+    :func:`make_serve_step`."""
     from . import kvcache
     if kv_policy is None and plan is not None:
         kv_policy = getattr(plan, "kv_policy", None)
     kvp = kvcache.get_kv_policy(kv_policy)
+    if attention_impl is not None:
+        if kvp is None:
+            raise ValueError("attention_impl override needs a kv_policy")
+        kvp = dataclasses.replace(kvp, attention_impl=attention_impl)
     if act_quant is not None and not decode_at_use:
         raise ValueError("act_quant needs the decode-at-use prefill")
 

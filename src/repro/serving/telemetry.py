@@ -21,17 +21,23 @@ Event schema (one table per type in docs/serving.md):
 event      fields
 ========== =================================================================
 init       slots, n_pages, pool_free, page_size, max_len, scheme, fused,
-           per_slot_flags
+           attention_impl, per_slot_flags, prefix_sharing
 enqueue    rid, step, prompt_len, max_new, [t_s]
 reject     rid, step, reason
-admit      rid, step, slot, n_pages, queue_depth, pool_free
+admit      rid, step, slot, n_pages, queue_depth, pool_free; with prefix
+           sharing also n_pages_solo, pages_shared, tokens_reused,
+           cow_copied
+cow        rid, step, slot, src, dst  (a shared page got a private clone)
 first_token rid, step, slot, ttft_steps, [ttft_s]
 finish     rid, step, slot, n_generated, kv_corrected, kv_due, pool_free,
            [ttft_s, tpot_ms]
-step       step, active, queue_depth, pool_free, kv_corrected, kv_due,
-           w_corrected, w_due, [step_ms]
+step       step, active, queue_depth, pool_free, pool_cached,
+           kv_corrected, kv_due, w_corrected, w_due, [step_ms]
 ========== =================================================================
-"""
+
+``pool_cached`` counts prefix-cache-held pages; the leak check is
+``initial_free - final_free - final_cached == 0`` (cached pages are
+referenced on purpose, not leaked)."""
 
 from __future__ import annotations
 
@@ -117,6 +123,10 @@ def summarize(events) -> dict:
     pool0 = init[0]["pool_free"] if init else (
         steps[0]["pool_free"] if steps else None)
     pool1 = steps[-1]["pool_free"] if steps else None
+    cached = steps[-1].get("pool_cached", 0) if steps else 0
+    admits = by.get("admit", [])
+    peak_in_use = max(((pool0 - s["pool_free"]) for s in steps),
+                      default=0) if pool0 is not None else None
     return {
         "schema": SUMMARY_SCHEMA,
         "requests": {
@@ -150,8 +160,21 @@ def summarize(events) -> dict:
         "pool": {
             "initial_free": pool0,
             "final_free": pool1,
-            "leaked_pages": (pool0 - pool1)
+            "cached_pages": cached,
+            "peak_pages_in_use": peak_in_use,
+            # cached pages are referenced on purpose (the prefix index
+            # pins them) — everything else must have come back
+            "leaked_pages": (pool0 - pool1 - cached)
                             if pool0 is not None else None,
+        },
+        "sharing": {
+            "pages_shared": sum(a.get("pages_shared", 0) for a in admits),
+            "tokens_reused": sum(a.get("tokens_reused", 0)
+                                 for a in admits),
+            "cow_copies": len(by.get("cow", [])),
+            "pages_allocated_total": sum(a["n_pages"] for a in admits),
+            "solo_pages_total": sum(a.get("n_pages_solo", a["n_pages"])
+                                    for a in admits),
         },
     }
 
@@ -179,7 +202,10 @@ def write_requests_csv(events, path: str):
             row.update(rejected=1, reject_reason=e["reason"])
         elif ev == "admit":
             row.update(admit_step=e["step"], slot=e["slot"],
-                       n_pages=e["n_pages"])
+                       n_pages=e["n_pages"],
+                       pages_shared=e.get("pages_shared"),
+                       tokens_reused=e.get("tokens_reused"),
+                       cow_copied=e.get("cow_copied"))
         elif ev == "first_token":
             row.update(first_token_step=e["step"],
                        ttft_steps=e["ttft_steps"],
@@ -190,6 +216,7 @@ def write_requests_csv(events, path: str):
                        tpot_ms=e.get("tpot_ms"))
     fields = ["rid", "enqueue_step", "prompt_len", "max_new", "rejected",
               "reject_reason", "admit_step", "slot", "n_pages",
+              "pages_shared", "tokens_reused", "cow_copied",
               "first_token_step", "ttft_steps", "ttft_s", "finish_step",
               "n_generated", "kv_corrected", "kv_due", "tpot_ms"]
     with open(path, "w", newline="") as fh:

@@ -298,7 +298,235 @@ def test_summary_and_csv_roundtrip(burst_rig, tmp_path):
     assert json.loads(jpath.read_text()) == summ
 
 
-def test_per_slot_flags_rejected_for_fused_policy():
-    with pytest.raises(ValueError, match="per_slot"):
-        dataclasses.replace(kvcache.get_kv_policy("in-place-fused"),
-                            per_slot_flags=True)
+def test_per_slot_flags_supported_on_every_attention_path():
+    """PR 7 forced per-slot attribution onto the reference path only (the
+    fused kernel reduced flags to scalars in-grid); the kernels now emit
+    per-row flags, so every policy accepts — and the front-end forces —
+    ``per_slot_flags``."""
+    for name in ("in-place", "in-place-fused", "in-place-chunked"):
+        p = dataclasses.replace(kvcache.get_kv_policy(name),
+                                per_slot_flags=True)
+        assert p.per_slot_flags
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: refcount state machine + real-model CoW
+# ---------------------------------------------------------------------------
+
+
+class _SharingSim:
+    """Host-side mirror of the sharing accounting: slots hold page
+    references, a prefix index holds its OWN references, and random
+    fork (retain) / publish / evict / finish interleavings must keep the
+    allocator conserved — no leaks, no double frees."""
+
+    def __init__(self, slots, n_pages, reserved):
+        self.alloc = kvcache.PageAllocator(n_pages, reserved=reserved)
+        self.allocatable = self.alloc.free_count
+        self.slots = [None] * slots         # slot -> list of held pids
+        self.index = []                     # pids the cache holds a ref on
+
+    def check(self):
+        # conservation + exact refcounts: each page's count equals the
+        # number of mappings (slot holdings + index pins) that exist
+        assert self.alloc.free_count + self.alloc.live_count \
+            == self.allocatable
+        held: dict = {}
+        for pages in self.slots:
+            for p in pages or ():
+                held[p] = held.get(p, 0) + 1
+        for p in self.index:
+            held[p] = held.get(p, 0) + 1
+        for p, n in held.items():
+            assert self.alloc.refcount(p) == n, (p, n)
+        assert self.alloc.live_count == len(held)
+
+    def admit(self, free_slot, n_fresh, n_shared):
+        shared = self.index[:n_shared]
+        if not self.alloc.can(n_fresh):
+            return
+        fresh = self.alloc.alloc(n_fresh)
+        self.alloc.retain(shared)
+        self.slots[free_slot] = list(shared) + list(fresh)
+
+    def publish(self, slot, j):
+        pid = self.slots[slot][j]
+        if pid in self.index:
+            return
+        self.alloc.retain([pid])
+        self.index.append(pid)
+
+    def evict(self, j):
+        pid = self.index.pop(j)
+        self.alloc.free([pid])
+
+    def finish(self, slot):
+        self.alloc.free(self.slots[slot])
+        self.slots[slot] = None
+
+
+def _sharing_refcount_body(rnd):
+    sim = _SharingSim(slots=3, n_pages=12, reserved=2)
+    for _ in range(60):
+        ops = []
+        free_slots = [i for i, s in enumerate(sim.slots) if s is None]
+        live = [i for i, s in enumerate(sim.slots) if s is not None]
+        if free_slots:
+            ops.append(("admit", free_slots))
+        if live:
+            ops.append(("publish", live))
+            ops.append(("finish", live))
+        if sim.index:
+            ops.append(("evict", None))
+        op, arg = rnd.choice(ops)
+        if op == "admit":
+            sim.admit(rnd.choice(arg), rnd.randint(1, 3),
+                      rnd.randint(0, len(sim.index)))
+        elif op == "publish":
+            slot = rnd.choice(arg)
+            sim.publish(slot, rnd.randrange(len(sim.slots[slot])))
+        elif op == "evict":
+            sim.evict(rnd.randrange(len(sim.index)))
+        elif op == "finish":
+            sim.finish(rnd.choice(arg))
+        sim.check()
+    # drain: finish every slot, drop the cache -> everything comes back
+    for i, s in enumerate(sim.slots):
+        if s is not None:
+            sim.finish(i)
+    while sim.index:
+        sim.evict(0)
+    sim.check()
+    assert sim.alloc.free_count == sim.allocatable
+    assert sim.alloc.live_count == 0
+    # and the pool rejects a stale free explicitly
+    with pytest.raises(ValueError, match="double free"):
+        sim.alloc.free([2])
+
+
+if HAVE_HYPOTHESIS:
+
+    @hyp.given(st.randoms(use_true_random=False))
+    @hyp.settings(max_examples=40, deadline=None)
+    def test_sharing_interleavings_never_leak_or_double_free(rnd):
+        _sharing_refcount_body(rnd)
+
+else:
+
+    def test_sharing_interleavings_never_leak_or_double_free():
+        import random
+        _sharing_refcount_body(random.Random(29))
+
+
+def _cow_waves(cfg, seed=11):
+    """Three staggered single-request waves over ONE 16-token prompt
+    (page_size 16 -> one full shared page, prompt ends exactly on the
+    page boundary so every sharer takes the CoW path). The gap outlasts
+    the first request's prefill, so its published page is in the index
+    before the next admission."""
+    return frontend.make_waves(seed=seed, n_waves=3, wave_size=1,
+                               vocab=cfg.vocab, prompt_len=(0, 0),
+                               max_new=(2, 4), gap_steps=20,
+                               shared_prefix_len=16)
+
+
+def _savings_waves(cfg, seed=11):
+    """One publisher, then TWO concurrent sharers over a 32-token (two
+    full pages) shared prefix plus a 1-2 token per-request suffix — the
+    suffix keeps the first write off the shared pages (no CoW), so each
+    sharer's budget is 1 fresh page instead of 3."""
+    reqs = frontend.make_waves(seed=seed, n_waves=3, wave_size=1,
+                               vocab=cfg.vocab, prompt_len=(1, 2),
+                               max_new=(2, 4), gap_steps=40,
+                               shared_prefix_len=32)
+    # rebase into publisher @0 + a simultaneous sharer pair @40
+    return [reqs[0]] + [dataclasses.replace(r, arrival_step=40)
+                        for r in reqs[1:]]
+
+
+def test_prefix_sharing_is_bit_identical_and_saves_pages(burst_rig):
+    """The sharing acceptance: identical token streams with sharing on
+    vs off, measured page savings for concurrent shared-prefix requests,
+    zero leaked pages, and a bit-deterministic replay."""
+    cfg, plan, enc, kvp, step = burst_rig
+    waves = _savings_waves(cfg)
+    kw = dict(plan=plan, waves=waves, slots=2, max_len=48, kv_policy=kvp,
+              serve_step=step)
+    ev_solo, s_solo, r_solo = frontend.run_burst(cfg, enc, **kw)
+    ev_sh, s_sh, r_sh = frontend.run_burst(cfg, enc, prefix_sharing=True,
+                                           **kw)
+    assert r_sh == r_solo                  # sharing never changes tokens
+    assert s_sh["pool"]["leaked_pages"] == 0
+    assert s_solo["sharing"]["pages_shared"] == 0
+    sh = s_sh["sharing"]
+    assert sh["pages_shared"] == 4         # 2 sharers x 2 full pages
+    assert sh["tokens_reused"] == 64
+    assert sh["cow_copies"] == 0           # suffix starts off-page
+    assert sh["pages_allocated_total"] < sh["solo_pages_total"]
+    # the headline: two concurrent sharers peak below the solo twin
+    assert (s_sh["pool"]["peak_pages_in_use"]
+            < s_solo["pool"]["peak_pages_in_use"])
+    assert s_sh["steps"] < s_solo["steps"]  # reused prefill = fewer steps
+    # cached pages are pinned on purpose, not leaked
+    assert s_sh["pool"]["cached_pages"] > 0
+    ev2, s2, r2 = frontend.run_burst(cfg, enc, prefix_sharing=True, **kw)
+    assert r2 == r_sh
+    assert telemetry.deterministic_view(ev2) == \
+        telemetry.deterministic_view(ev_sh)
+    admits = [e for e in ev_sh if e["event"] == "admit"]
+    assert admits[0]["pages_shared"] == 0
+    assert all(a["pages_shared"] == 2 and a["cow_copied"] == 0
+               for a in admits[1:])
+
+
+def test_cow_on_fully_shared_prompt(burst_rig, tmp_path):
+    """A prompt that IS a published prefix (ends on the page boundary)
+    re-consumes its last token, so the last shared page gets a private
+    CoW clone — tokens still bit-identical to the no-sharing run; the
+    sharing fields survive the JSONL stream and the per-request CSV."""
+    cfg, plan, enc, kvp, step = burst_rig
+    waves = _cow_waves(cfg)
+    kw = dict(plan=plan, waves=waves, slots=2, max_len=32, kv_policy=kvp,
+              serve_step=step)
+    _, s_solo, r_solo = frontend.run_burst(cfg, enc, **kw)
+    tpath = tmp_path / "telemetry.jsonl"
+    ev_sh, s_sh, r_sh = frontend.run_burst(cfg, enc, prefix_sharing=True,
+                                           telemetry_path=str(tpath),
+                                           **kw)
+    assert [json.loads(l) for l in tpath.read_text().splitlines()] == ev_sh
+    csv_path = tmp_path / "requests.csv"
+    telemetry.write_requests_csv(ev_sh, str(csv_path))
+    rows = csv_path.read_text().splitlines()
+    header = rows[0].split(",")
+    for col in ("pages_shared", "tokens_reused", "cow_copied"):
+        assert col in header
+    shared_col = [r.split(",")[header.index("pages_shared")]
+                  for r in rows[1:]]
+    assert shared_col == ["0", "1", "1"]
+    assert r_sh == r_solo
+    assert s_sh["pool"]["leaked_pages"] == 0
+    admits = [e for e in ev_sh if e["event"] == "admit"]
+    assert admits[0]["pages_shared"] == 0
+    assert all(a["pages_shared"] == 1 and a["cow_copied"] == 1
+               for a in admits[1:])
+    cows = [e for e in ev_sh if e["event"] == "cow"]
+    assert len(cows) == len(admits) - 1 == s_sh["sharing"]["cow_copies"]
+    # the clone is a PRIVATE page: src is the cached page, dst fresh
+    assert all(c["src"] != c["dst"] for c in cows)
+    assert s_sh["sharing"]["tokens_reused"] == 15 * (len(admits) - 1)
+
+
+def test_prefix_cache_drop_releases_pages(burst_rig):
+    cfg, plan, enc, kvp, step = burst_rig
+    fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,
+                                  max_len=32, kv_policy=kvp,
+                                  serve_step=step, prefix_sharing=True)
+    for req in _cow_waves(cfg):
+        fe.submit(dataclasses.replace(req, arrival_step=0))
+    fe.run()
+    free_with_cache = fe.allocator.free_count
+    dropped = fe.drop_prefix_cache()
+    assert dropped > 0
+    assert fe.allocator.free_count == free_with_cache + dropped
+    assert fe.allocator.live_count == 0
+    assert fe.drop_prefix_cache() == 0     # idempotent

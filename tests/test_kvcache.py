@@ -162,6 +162,16 @@ def test_fused_page_attention_bitexact(scheme, backend):
     if scheme != "faulty":
         assert int(cor) == 1
 
+    # per-slot rows: same output, flags resolved per batch row with the
+    # injected fault attributed to sequence 0 only
+    o_p, fl_p = paged_attention.fused_page_attention(
+        q, ke, kch, ksc, ve, vch, vsc, pos, scheme=scheme, per_slot=True)
+    assert np.array_equal(np.asarray(o_p), np.asarray(o_f))
+    assert fl_p.shape == (2, b)
+    assert np.array_equal(np.asarray(fl_p).sum(axis=1), np.asarray(fl_f))
+    if scheme != "faulty":
+        assert int(fl_p[0, 0]) == 1 and int(fl_p[0, 1]) == 0
+
 
 # ---------------------------------------------------------------------------
 # the paged serving chain
@@ -362,11 +372,12 @@ def test_freed_page_reuse_no_stale_carryover(preset, smoke_params):
 def test_page_allocator_and_pool_helpers():
     """Host-side allocator contract: deterministic lowest-id-first order,
     parking pages never handed out, double-free and foreign-free rejected,
-    free count exact."""
+    refcounted sharing exact (free releases a page only when its LAST
+    reference drops, and reports exactly which pages it released)."""
     a = kvcache.PageAllocator(8, reserved=2)
     assert a.free_count == 6 and a.can(6) and not a.can(7)
     assert a.alloc(3) == (2, 3, 4)
-    a.free([3])
+    assert a.free([3]) == (3,)
     assert a.alloc(1) == (3,)                 # lowest id first, reused
     with pytest.raises(ValueError, match="exhausted"):
         a.alloc(5)
@@ -374,9 +385,20 @@ def test_page_allocator_and_pool_helpers():
         a.free([1])                           # parking page
     with pytest.raises(ValueError, match="not allocatable"):
         a.free([8])                           # out of pool
-    a.free([2])
+    assert a.free([2]) == (2,)
     with pytest.raises(ValueError, match="double free"):
         a.free([2])
+    # refcounts: a shared page survives all but its last free
+    assert a.refcount(3) == 1 and a.refcount(2) == 0
+    a.retain([3, 4])
+    assert a.refcount(3) == a.refcount(4) == 2
+    assert a.free([3, 4]) == ()               # sharers still hold them
+    assert a.free([3]) == (3,)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([3])
+    with pytest.raises(ValueError, match="no live reference"):
+        a.retain([3])                         # can't revive a dead page
+    assert a.free_count + a.live_count == 6   # conservation, always
     assert kvcache.pages_needed(1, 16) == 1
     assert kvcache.pages_needed(16, 16) == 1
     assert kvcache.pages_needed(17, 16) == 2
@@ -414,14 +436,22 @@ def test_kv_bytes_accounting():
 def test_kv_policy_presets():
     assert set(kvcache.KV_POLICY_PRESETS) == {
         "unprotected", "parity-zero", "in-place",
-        "unprotected-fused", "parity-zero-fused", "in-place-fused"}
+        "unprotected-fused", "parity-zero-fused", "in-place-fused",
+        "unprotected-chunked", "parity-zero-chunked", "in-place-chunked"}
     assert kvcache.get_kv_policy(None) is None
     p = kvcache.get_kv_policy("in-place-fused")
     assert p.scheme == "in-place" and p.fused
+    assert p.attention_impl == "strip"
     assert kvcache.get_kv_policy(p) is p
     assert kvcache.get_kv_policy("faulty").scheme == "faulty"  # alias
+    c = kvcache.get_kv_policy("in-place-chunked")
+    assert c.scheme == "in-place" and c.attention_impl == "chunked"
     with pytest.raises(ValueError, match="unknown KV policy"):
         kvcache.get_kv_policy("triplicate")
+    with pytest.raises(ValueError, match="attention_impl"):
+        kvcache.KVProtectionPolicy(attention_impl="flash")
+    with pytest.raises(ValueError, match="chunk_pages"):
+        kvcache.KVProtectionPolicy(chunk_pages=0)
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +468,7 @@ def test_plan_kv_policy_drives_serving(smoke_params):
     plan = policy.plan(params).with_kv_policy("in-place")
     assert plan.kv_policy.scheme == "in-place"
     assert plan.summary()["kv_policy"]["scheme"] == "in-place"
+    assert plan.summary()["kv_policy"]["attention_impl"] == "strip"
     assert plan.with_act_quant("dynamic").kv_policy is plan.kv_policy
 
     enc = plan.encode_tree(params)
@@ -457,21 +488,38 @@ def test_plan_kv_policy_drives_serving(smoke_params):
 
 
 # ---------------------------------------------------------------------------
-# bench artifact: bench_kernels/v4 attention rows
+# bench artifact: bench_kernels/v5 attention + long-context rows
 # ---------------------------------------------------------------------------
 
 
-def test_autotune_v4_attention_rows():
+def test_autotune_v5_attention_rows():
     entry = {"shape": [256, 256], "xla_us": 1.0, "pallas_us": 2.0,
              "best": "xla"}
     row = {"shape": [2, 128, 2, 32], "scheme": "in-place",
            "fused_us": 1.0, "ref_us": 2.0, "bitexact": True}
+    long_row = {"shape": [1, 8192, 1, 128], "scheme": "in-place",
+                "chunk_tokens": 2048, "chunked_us": 9.0, "strip_us": 8.0,
+                "strip_vmem_bytes": 17_000_000, "over_budget": True,
+                "oracle_max_abs_err": 1e-3, "tol": 2e-2,
+                "within_tol": True}
+    xo = {"head_dim": 128, "rep": 2, "vmem_budget_bytes": 16 * 2 ** 20,
+          "chunk_tokens": 2048, "tokens_by_scheme": {"in-place": 8113}}
     t = protection.AutotuneTable.from_dict(
-        {"schema": "bench_kernels/v4", "platform": "cpu",
-         "entries": [entry], "attention": [row]})
-    assert t.schema == protection.BENCH_KERNELS_SCHEMA == "bench_kernels/v4"
+        {"schema": "bench_kernels/v5", "platform": "cpu",
+         "entries": [entry], "attention": [row],
+         "attention_long": [long_row], "crossover": xo})
+    assert t.schema == protection.BENCH_KERNELS_SCHEMA == "bench_kernels/v5"
     assert t.attention == [row]
-    assert protection.AutotuneTable.from_dict(t.to_dict()).attention == [row]
+    assert t.attention_long == [long_row] and t.crossover == xo
+    rt = protection.AutotuneTable.from_dict(t.to_dict())
+    assert rt.attention == [row] and rt.attention_long == [long_row]
+    assert rt.crossover == xo
+    # v4 artifacts (attention rows, no long-context section) still load
+    v4 = protection.AutotuneTable.from_dict(
+        {"schema": protection.BENCH_KERNELS_SCHEMA_V4,
+         "entries": [entry], "attention": [row]})
+    assert v4.attention == [row] and v4.attention_long == []
+    assert v4.crossover is None
     for old in (protection.BENCH_KERNELS_SCHEMA_V1,
                 protection.BENCH_KERNELS_SCHEMA_V2,
                 protection.BENCH_KERNELS_SCHEMA_V3):
@@ -484,5 +532,8 @@ def test_autotune_v4_attention_rows():
     checked_in = os.path.join(os.path.dirname(__file__), os.pardir,
                               "BENCH_kernels.json")
     shipped = protection.AutotuneTable.from_json(checked_in)
-    assert shipped.schema == "bench_kernels/v4"
+    assert shipped.schema == "bench_kernels/v5"
     assert shipped.attention and all(r["bitexact"] for r in shipped.attention)
+    assert shipped.attention_long and shipped.crossover
+    assert all(r["within_tol"] for r in shipped.attention_long)
+    assert any(r["over_budget"] for r in shipped.attention_long)

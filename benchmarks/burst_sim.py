@@ -49,16 +49,23 @@ from repro.serving import frontend, kvcache, protected  # noqa: E402
 from repro.serving import telemetry  # noqa: E402
 
 
-def _cell_tag(policy: str, rate: float) -> str:
-    return f"{policy}_r{rate:g}"
+def _cell_tag(policy: str, rate: float, scrub_every: int = 0) -> str:
+    tag = f"{policy}_r{rate:g}"
+    return f"{tag}_scrub{scrub_every}" if scrub_every else tag
 
 
 def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
              slots, max_len, n_pages, seed, out_dir=None,
-             prefix_sharing=False):
+             prefix_sharing=False, scrub_every=0, repair=False,
+             weight_fault_rate=0.0):
     """(policy x rate) grid over one workload; shares one jitted serve
     step per policy across its rate axis (and across twin comparisons) so
-    wall-clock cells differ by faults, not compile noise."""
+    wall-clock cells differ by faults, not compile noise.
+
+    ``scrub_every > 0`` runs every (policy, rate) cell TWICE — a no-scrub
+    baseline and a self-healing twin with the budgeted scrubber on (tag
+    suffix ``_scrubN``) ending in a full at-rest pass — so the
+    ``scrub_slo`` section can price healing against its own baseline."""
     import dataclasses
     cells = {}
     for pol_name in kv_policies:
@@ -69,62 +76,79 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
         step = jax.jit(protected.make_serve_step(
             cfg, plan=plan, with_flags=True, kv_policy=kvp))
         for rate in fault_rates:
-            tag = _cell_tag(pol_name, rate)
-            tpath = (os.path.join(out_dir, f"telemetry_{tag}.jsonl")
-                     if out_dir else None)
-            # run every cell three times: the first eats serve-step and
-            # injection compiles (keeping them out of the latency
-            # percentiles); the two measured runs double as the
-            # bit-determinism check, and each wall-clock percentile takes
-            # the min of the pair — a scheduler hiccup in one run cannot
-            # flip the SLO gate.
-            warm_ev, _, warm_res = frontend.run_burst(
-                cfg, enc, plan=plan, waves=waves, slots=slots,
-                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
-                fault_rate=rate, fault_seed=seed, serve_step=step,
-                prefix_sharing=prefix_sharing)
-            ev_a, summ_a, res_a = frontend.run_burst(
-                cfg, enc, plan=plan, waves=waves, slots=slots,
-                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
-                fault_rate=rate, fault_seed=seed, serve_step=step,
-                prefix_sharing=prefix_sharing)
-            events, summ, results = frontend.run_burst(
-                cfg, enc, plan=plan, waves=waves, slots=slots,
-                max_len=max_len, n_pages=n_pages, kv_policy=kvp,
-                fault_rate=rate, fault_seed=seed, serve_step=step,
-                prefix_sharing=prefix_sharing, telemetry_path=tpath)
-            det_views = [telemetry.deterministic_view(e)
-                         for e in (warm_ev, ev_a, events)]
-            deterministic = (det_views[0] == det_views[1] == det_views[2]
-                             and warm_res == res_a == results)
-            for sect in ("per_token_ms", "ttft_s"):
-                summ[sect] = {k: (min(v, summ_a[sect][k])
-                                  if v is not None
-                                  and summ_a[sect][k] is not None else v)
-                              for k, v in summ[sect].items()}
-            summ["cell"] = {"kv_policy": pol_name, "fault_rate": rate,
-                            "seed": seed, "slots": slots,
-                            "max_len": max_len,
-                            "prefix_sharing": prefix_sharing,
-                            "bit_deterministic": deterministic}
-            if out_dir:
-                telemetry.write_requests_csv(
-                    events, os.path.join(out_dir, f"requests_{tag}.csv"))
-            cells[tag] = {"summary": summ, "results": results}
-            p99 = summ["per_token_ms"]["p99"]
-            p99s = f"{p99:.2f}ms" if p99 is not None else "n/a"
-            print(f"[burst] {tag}: {summ['requests']['finished']}/"
-                  f"{summ['requests']['submitted']} finished in "
-                  f"{summ['steps']} steps, "
-                  f"{summ['throughput']['tokens_per_step']:.2f} tok/step, "
-                  f"p99 per-token {p99s}, "
-                  f"DUE total {summ['due']['total']}, "
-                  f"leaked pages {summ['pool']['leaked_pages']}"
-                  + (f", shared pages {summ['sharing']['pages_shared']}, "
-                     f"cow {summ['sharing']['cow_copies']}, "
-                     f"alloc {summ['sharing']['pages_allocated_total']}"
-                     f"/{summ['sharing']['solo_pages_total']} solo"
-                     if prefix_sharing else ""))
+            for scrub in ([0, scrub_every] if scrub_every else [0]):
+                tag = _cell_tag(pol_name, rate, scrub)
+                tpath = (os.path.join(out_dir, f"telemetry_{tag}.jsonl")
+                         if out_dir else None)
+                kw = dict(plan=plan, waves=waves, slots=slots,
+                          max_len=max_len, n_pages=n_pages, kv_policy=kvp,
+                          fault_rate=rate, fault_seed=seed,
+                          serve_step=step, prefix_sharing=prefix_sharing,
+                          scrub_every=scrub, repair=repair and scrub > 0,
+                          # weight faults ride the cell's fault-rate axis:
+                          # the rate-0 scrub twin stays fault-free so its
+                          # SLO row prices PURE scrub overhead (the ratio
+                          # CI gates), while faulted cells demonstrate
+                          # healing (final at-rest DUE pinned to zero)
+                          weight_fault_rate=(weight_fault_rate
+                                             if scrub and rate > 0
+                                             else 0.0))
+                # run every cell three times: the first eats serve-step
+                # and injection compiles (keeping them out of the latency
+                # percentiles); the two measured runs double as the
+                # bit-determinism check, and each wall-clock percentile
+                # takes the min of the pair — a scheduler hiccup in one
+                # run cannot flip the SLO gate.
+                warm_ev, _, warm_res = frontend.run_burst(cfg, enc, **kw)
+                ev_a, summ_a, res_a = frontend.run_burst(cfg, enc, **kw)
+                events, summ, results = frontend.run_burst(
+                    cfg, enc, telemetry_path=tpath, **kw)
+                det_views = [telemetry.deterministic_view(e)
+                             for e in (warm_ev, ev_a, events)]
+                deterministic = (det_views[0] == det_views[1]
+                                 == det_views[2]
+                                 and warm_res == res_a == results)
+                for sect in ("per_token_ms", "ttft_s"):
+                    summ[sect] = {k: (min(v, summ_a[sect][k])
+                                      if v is not None
+                                      and summ_a[sect][k] is not None
+                                      else v)
+                                  for k, v in summ[sect].items()}
+                summ["cell"] = {"kv_policy": pol_name, "fault_rate": rate,
+                                "seed": seed, "slots": slots,
+                                "max_len": max_len,
+                                "prefix_sharing": prefix_sharing,
+                                "scrub_every": scrub,
+                                "repair": repair and scrub > 0,
+                                "weight_fault_rate": kw[
+                                    "weight_fault_rate"],
+                                "bit_deterministic": deterministic}
+                if out_dir:
+                    telemetry.write_requests_csv(
+                        events,
+                        os.path.join(out_dir, f"requests_{tag}.csv"))
+                cells[tag] = {"summary": summ, "results": results}
+                p99 = summ["per_token_ms"]["p99"]
+                p99s = f"{p99:.2f}ms" if p99 is not None else "n/a"
+                heal = summ["healing"]
+                print(f"[burst] {tag}: {summ['requests']['finished']}/"
+                      f"{summ['requests']['submitted']} finished in "
+                      f"{summ['steps']} steps, "
+                      f"{summ['throughput']['tokens_per_step']:.2f} "
+                      f"tok/step, p99 per-token {p99s}, "
+                      f"DUE total {summ['due']['total']}, "
+                      f"leaked pages {summ['pool']['leaked_pages']}"
+                      + (f", shared pages "
+                         f"{summ['sharing']['pages_shared']}, "
+                         f"cow {summ['sharing']['cow_copies']}, "
+                         f"alloc {summ['sharing']['pages_allocated_total']}"
+                         f"/{summ['sharing']['solo_pages_total']} solo"
+                         if prefix_sharing else "")
+                      + (f", scrub corrected w={heal['w_corrected']} "
+                         f"kv={heal['kv_corrected']}, final DUE "
+                         f"{heal['final_due']['w']}w/"
+                         f"{heal['final_due']['kv']}kv"
+                         if scrub and heal["final_due"] else ""))
     return cells
 
 
@@ -157,6 +181,38 @@ def slo_section(cells, kv_policies, fault_rates):
     return slo
 
 
+def scrub_slo_section(cells, kv_policies, fault_rates, scrub_every):
+    """Per (policy, rate): the self-healing twin priced against ITS OWN
+    no-scrub baseline — p99 per-token ratio, scrub totals, and the
+    residual at-rest DUE state CI pins to zero."""
+    rows = []
+    if not scrub_every:
+        return rows
+    for pol in kv_policies:
+        for rate in fault_rates:
+            base = cells[_cell_tag(pol, rate)]["summary"]
+            scrub = cells[_cell_tag(pol, rate, scrub_every)]["summary"]
+            b99 = base["per_token_ms"]["p99"]
+            s99 = scrub["per_token_ms"]["p99"]
+            heal = scrub["healing"]
+            rows.append({
+                "kv_policy": pol, "fault_rate": rate,
+                "scrub_every": scrub_every,
+                "p99_per_token_ms": s99,
+                "noscrub_p99_per_token_ms": b99,
+                "p99_ratio": (s99 / b99) if (s99 and b99) else None,
+                "scrub_passes": heal["scrub_passes"],
+                "w_corrected": heal["w_corrected"],
+                "kv_corrected": heal["kv_corrected"],
+                "final_due": heal["final_due"],
+                "leaked_pages": scrub["pool"]["leaked_pages"],
+                "tokens_match_noscrub":
+                    cells[_cell_tag(pol, rate, scrub_every)]["results"]
+                    == cells[_cell_tag(pol, rate)]["results"],
+            })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -186,6 +242,16 @@ def main(argv=None):
     ap.add_argument("--policy", default="all-in-place",
                     choices=sorted(protection.POLICY_PRESETS),
                     help="weight-protection preset")
+    ap.add_argument("--scrub-every", type=int, default=0,
+                    help="run a self-healing twin of every cell with a "
+                         "budgeted scrub pass every N steps (plus a full "
+                         "at-rest pass after drain)")
+    ap.add_argument("--repair", action="store_true",
+                    help="attach a MILR repair kit to the scrub twins "
+                         "(weight-DUE reconstruction + quarantine)")
+    ap.add_argument("--weight-fault-rate", type=float, default=0.0,
+                    help="per-bit weight fault rate injected into the "
+                         "scrub twins on the KV injection cadence")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -224,7 +290,9 @@ def main(argv=None):
                      fault_rates=fault_rates, slots=args.slots,
                      max_len=args.max_len, n_pages=args.pages,
                      seed=args.seed, out_dir=args.out_dir,
-                     prefix_sharing=sharing)
+                     prefix_sharing=sharing, scrub_every=args.scrub_every,
+                     repair=args.repair,
+                     weight_fault_rate=args.weight_fault_rate)
     out = {
         "schema": telemetry.SUMMARY_SCHEMA,
         "arch": cfg.name,
@@ -233,9 +301,14 @@ def main(argv=None):
                      "gap_steps": args.gap_steps,
                      "prompt_len": [p_lo, p_hi], "max_new": [n_lo, n_hi],
                      "shared_prefix_len": args.shared_prefix_len,
-                     "prefix_sharing": sharing},
+                     "prefix_sharing": sharing,
+                     "scrub_every": args.scrub_every,
+                     "repair": args.repair,
+                     "weight_fault_rate": args.weight_fault_rate},
         "cells": {tag: c["summary"] for tag, c in cells.items()},
         "slo": slo_section(cells, kv_policies, fault_rates),
+        "scrub_slo": scrub_slo_section(cells, kv_policies, fault_rates,
+                                       args.scrub_every),
     }
     for row in out["slo"]:
         ratio = row["p99_ratio"]
@@ -243,6 +316,14 @@ def main(argv=None):
               f"p99 ratio {ratio:.3f}x vs unprotected"
               if ratio is not None else
               f"[burst] SLO {row['kv_policy']}: no latency samples")
+    for row in out["scrub_slo"]:
+        ratio = row["p99_ratio"]
+        fd = row["final_due"]
+        print(f"[burst] scrub SLO {row['kv_policy']} @rate "
+              f"{row['fault_rate']}: "
+              + (f"p99 ratio {ratio:.3f}x vs no-scrub" if ratio is not None
+                 else "no latency samples")
+              + (f", final DUE {fd['w']}w/{fd['kv']}kv" if fd else ""))
     if args.out_dir:
         path = os.path.join(args.out_dir, "summary.json")
         telemetry.write_summary(out, path)

@@ -40,33 +40,52 @@ def inject_tree(enc_params, rate: float, seed: int):
                                          jax.random.PRNGKey(seed))
 
 
-def fault_smoke_check(enc, policy, rate: float, seed: int):
+def fault_smoke_check(enc, policy, rate: float, seed: int, *,
+                      trials: int = 2, campaign_key: int | None = None,
+                      out_path: str | None = None):
     """Compiled campaign smoke-check before serving with injected faults:
-    sweep {rate/10, rate, 10*rate} x 2 trials in one device program and
+    sweep {rate/10, rate, 10*rate} x ``trials`` in one device program and
     report the decode fidelity (fraction of protected weights that still
     decode to their clean values) AND the DUE (detected-uncorrectable)
     count at each rate.  ``batch="scan"`` keeps peak memory at one cell's
     buffers — serving trees are the big-model case of the vmap-vs-scan
-    guidance in docs/campaigns.md."""
+    guidance in docs/campaigns.md.
+
+    ``campaign_key`` seeds the campaigns' own key stream (default: derive
+    from ``seed``); ``out_path`` writes the full JSON record — trials,
+    key, per-rate fidelity and DUE means — next to the printed digest."""
     rates = tuple(sorted({rate / 10, rate, min(rate * 10, 0.01)}))
-    res = protection.fidelity_campaign(enc, policy, rates=rates, trials=2,
-                                       key=jax.random.PRNGKey(seed + 1),
+    ckey = seed + 1 if campaign_key is None else campaign_key
+    res = protection.fidelity_campaign(enc, policy, rates=rates,
+                                       trials=trials,
+                                       key=jax.random.PRNGKey(ckey),
                                        batch="scan")
     cells = "  ".join(f"{r:.0e}:{m * 100:6.2f}%"
                       for r, m in zip(res.rates, res.mean()))
     print(f"[serve] fault smoke-check ({res.scheme}, {res.batch} campaign, "
-          f"compile {res.compile_s:.1f}s, sweep {res.wall_clock_s:.2f}s): "
-          f"decode fidelity {cells}")
-    due = protection.due_campaign(enc, policy, rates=rates, trials=2,
-                                  key=jax.random.PRNGKey(seed + 2),
+          f"{trials} trials, compile {res.compile_s:.1f}s, sweep "
+          f"{res.wall_clock_s:.2f}s): decode fidelity {cells}")
+    due = protection.due_campaign(enc, policy, rates=rates, trials=trials,
+                                  key=jax.random.PRNGKey(ckey + 1),
                                   batch="scan")
     cells = "  ".join(f"{r:.0e}:{m:7.1f}"
                       for r, m in zip(due.rates, due.mean()))
     print(f"[serve] DUE (double-error) counts per rate: {cells}")
+    if out_path:
+        import json
+        rec = {"trials": trials, "campaign_key": ckey,
+               "rates": list(res.rates), "scheme": res.scheme,
+               "batch": res.batch,
+               "fidelity_mean": [float(m) for m in res.mean()],
+               "due_mean": [float(m) for m in due.mean()]}
+        with open(out_path, "w") as fh:
+            json.dump(rec, fh, indent=2)
+            fh.write("\n")
+        print(f"[serve] wrote campaign record to {out_path}")
     return res
 
 
-def run_burst_mode(cfg, enc, plan, args):
+def run_burst_mode(cfg, enc, plan, args, repair_kit=None):
     """``--burst``: replay a seeded wave workload through the
     request-level front-end (see :mod:`repro.serving.frontend` and
     docs/serving.md) and print the telemetry roll-up."""
@@ -88,7 +107,8 @@ def run_burst_mode(cfg, enc, plan, args):
         cfg, enc, plan=plan, waves=waves, slots=max(2, args.batch // 2),
         max_len=max(32, args.tokens * 2), kv_policy=kvp,
         fault_rate=args.fault_rate, fault_seed=args.seed,
-        telemetry_path=tpath)
+        telemetry_path=tpath, scrub_every=args.scrub_every,
+        repair=args.repair, repair_kit=repair_kit)
     r, t, d, p = (summ["requests"], summ["throughput"], summ["due"],
                   summ["pool"])
     print(f"[serve] burst ({kvp} KV): {r['finished']}/{r['submitted']} "
@@ -100,6 +120,14 @@ def run_burst_mode(cfg, enc, plan, args):
     print(f"[serve] KV faults: {d['corrected_total']} corrected, "
           f"{d['total']} DUE ({d['requests_with_due']} requests); "
           f"pages leaked {p['leaked_pages']}")
+    heal = summ["healing"]
+    if heal["scrub_passes"]:
+        fd = heal["final_due"]
+        tail = (f", final at-rest DUE {fd['w']}w/{fd['kv']}kv"
+                if fd else "")
+        print(f"[serve] self-healing: {heal['scrub_passes']} scrub passes, "
+              f"corrected w={heal['w_corrected']} kv={heal['kv_corrected']}"
+              f", repairs {heal['repairs'] or '{}'}{tail}")
     if args.burst_out:
         telemetry.write_requests_csv(
             events, os.path.join(args.burst_out, "requests.csv"))
@@ -143,6 +171,21 @@ def main():
     ap.add_argument("--burst-out", default=None, metavar="DIR",
                     help="with --burst: write telemetry JSONL + "
                          "requests CSV + summary JSON here")
+    ap.add_argument("--trials", type=int, default=2,
+                    help="trials per rate for the fault smoke-check "
+                         "campaigns (fidelity + DUE)")
+    ap.add_argument("--campaign-key", type=int, default=None,
+                    help="explicit base key for the smoke-check campaign "
+                         "streams (default: seed + 1)")
+    ap.add_argument("--campaign-out", default=None, metavar="FILE",
+                    help="write the smoke-check campaign record "
+                         "(trials, key, per-rate means) as JSON")
+    ap.add_argument("--scrub-every", type=int, default=0,
+                    help="self-healing: scrub weights (and, in --burst "
+                         "mode, live KV pages) every N steps")
+    ap.add_argument("--repair", action="store_true",
+                    help="pin a MILR repair kit from the clean tree and "
+                         "repair/quarantine scrub-detected weight DUEs")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -167,13 +210,21 @@ def main():
     print(f"[serve] plan: schemes {{{schemes}}}, backends {s['by_backend']}, "
           f"{s['n_flat_padded']} flat-padded leaves")
     enc = plan.encode_tree(params)
+    kit = None
+    if args.repair:
+        from repro.protection import repair as repair_mod
+        kit = repair_mod.build_repair_kit(enc, seed=args.seed)
+        print(f"[serve] pinned MILR repair kit over {len(kit)} leaves")
     if args.fault_rate:
-        fault_smoke_check(enc, policy, args.fault_rate, args.seed)
+        fault_smoke_check(enc, policy, args.fault_rate, args.seed,
+                          trials=args.trials,
+                          campaign_key=args.campaign_key,
+                          out_path=args.campaign_out)
         enc = inject_tree(enc, args.fault_rate, args.seed)
         print("[serve] injected faults into the resident weight images")
 
     if args.burst:
-        run_burst_mode(cfg, enc, plan, args)
+        run_burst_mode(cfg, enc, plan, args, repair_kit=kit)
         return
 
     kvp = kvcache.get_kv_policy(args.kv_policy)
@@ -190,9 +241,25 @@ def main():
               f"{kb['checks']}B + scales {kb['scales']}B (dense bf16 cache: "
               f"{dense}B)")
     tokens = jnp.zeros((args.batch, 1), jnp.int32)
+    scrubber_obj = None
+    scrub_tot = {"corrected": 0, "repaired": 0, "quarantined": 0}
+    if args.scrub_every:
+        from repro.serving.scrubber import Scrubber
+        scrubber_obj = Scrubber(leaves_per_step=2)
     t0 = time.time()
     out, step_flags = [], []
     for t in range(args.tokens):
+        if scrubber_obj is not None and t % args.scrub_every == 0:
+            enc, wst = scrubber_obj.scrub_weights(enc)
+            scrub_tot["corrected"] += wst["corrected"]
+            if wst["due_paths"] and kit is not None:
+                from repro.protection import repair as repair_mod
+                enc, reps = repair_mod.repair_tree(enc, kit,
+                                                   paths=wst["due_paths"])
+                for r in reps:
+                    key = ("repaired" if r["status"] == "repaired"
+                           else "quarantined")
+                    scrub_tot[key] += 1
         if (kvp is not None and args.fault_rate and t == args.tokens // 2
                 and t > 0):
             # the serving-state fault story: hit the LIVE pools mid-run, so
@@ -226,6 +293,25 @@ def main():
     if kvp is not None:
         print(f"[serve] KV decode-at-use accounting: {kv_corrected} "
               f"corrected, {kv_due} DUE")
+    if scrubber_obj is not None:
+        from repro.serving.scrubber import scrub_tree
+        enc, fin = scrub_tree(enc)
+        scrub_tot["corrected"] += fin["corrected"]
+        residual = fin["due_paths"]
+        if residual and kit is not None:
+            from repro.protection import repair as repair_mod
+            enc, reps = repair_mod.repair_tree(enc, kit, paths=residual)
+            for r in reps:
+                key = ("repaired" if r["status"] == "repaired"
+                       else "quarantined")
+                scrub_tot[key] += 1
+            enc, fin = scrub_tree(enc)
+            residual = fin["due_paths"]
+        print(f"[serve] self-healing: wrote back "
+              f"{scrub_tot['corrected']} corrected bits during the run, "
+              f"{scrub_tot['repaired']} leaves repaired, "
+              f"{scrub_tot['quarantined']} quarantined; residual DUE "
+              f"leaves after the final pass: {len(residual)}")
     print(f"[serve] sample continuation: {out}")
 
 

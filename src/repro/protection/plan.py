@@ -40,7 +40,8 @@ from .backends import Backend, get_backend
 from .schemes import get_scheme
 from .tensor import ProtectedTensor, is_protected_tensor
 
-__all__ = ["LeafPlan", "ProtectionPlan", "make_plan",
+__all__ = ["LeafPlan", "ProtectionPlan", "make_plan", "LeafDiff",
+           "PlanDiff", "transcode_leaf",
            "POLICY_PRESETS", "get_policy_preset"]
 
 BLOCK = 8
@@ -116,6 +117,93 @@ class LeafPlan:
         from jax.sharding import PartitionSpec as P
         return (self.layout == "flat-padded" and self.spec is not None
                 and self.spec.enc != P())
+
+
+# ---------------------------------------------------------------------------
+# plan diffs + rolling migration (the serving-side promotion primitive)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafDiff:
+    """One leaf whose protection decision differs between two plans."""
+
+    path: str
+    from_scheme: Optional[str]
+    to_scheme: Optional[str]
+    from_backend: str
+    to_backend: str
+    stored_bytes_delta: int
+
+    @property
+    def scheme_changed(self) -> bool:
+        return self.from_scheme != self.to_scheme
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDiff:
+    """Ordered per-leaf delta between two :class:`ProtectionPlan`\\ s built
+    for the SAME tree. ``paths`` (the scheme changes, in plan order) is the
+    migration work-list a :class:`~repro.serving.scrubber.Migrator` drains
+    shard-by-shard — one planned leaf is one shard."""
+
+    entries: tuple
+
+    @property
+    def paths(self) -> tuple:
+        """Leaves whose *scheme* changes — the shards a rolling migration
+        must transcode (backend-only changes need no byte rewrite)."""
+        return tuple(e.path for e in self.entries if e.scheme_changed)
+
+    @property
+    def empty(self) -> bool:
+        return not self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def summary(self) -> dict:
+        moves: dict = {}
+        for e in self.entries:
+            if e.scheme_changed:
+                k = f"{e.from_scheme}->{e.to_scheme}"
+                moves[k] = moves.get(k, 0) + 1
+        return {
+            "n_changed": len(self.entries),
+            "n_scheme_changes": len(self.paths),
+            "moves": moves,
+            "stored_bytes_delta": sum(e.stored_bytes_delta
+                                      for e in self.entries),
+        }
+
+
+def transcode_leaf(pt: ProtectedTensor, to_scheme, *, backend="xla"):
+    """Re-encode one stored image under another scheme WITHOUT a float
+    round-trip: decode to the int8 domain (correcting what the old code
+    can), then encode those exact values under the new scheme. Quantized
+    values — and therefore every decoded logit — are preserved bit for bit
+    for any scheme pair whose source was WOT-throttled at original encode
+    time (every plan encodes through ``ProtectionPolicy.encode_leaf``,
+    which throttles whenever ANY in-place leaf may exist; re-throttling
+    here is idempotent on compliant values, so promoting secded72 ->
+    in-place is value-exact too).
+
+    Returns ``(new_pt, corrected, due)`` — the decode flags observed while
+    reading the old image (``due`` blocks transcode carrying whatever the
+    old decode returned; repair is a separate pass)."""
+    from repro.core import wot
+
+    frm = get_scheme(pt.scheme_id)
+    to = get_scheme(to_scheme)
+    be = get_backend(backend)
+    q, corrected, due = frm.decode_with_flags(pt.enc, pt.checks, be)
+    if to.requires_wot:
+        q = wot.throttle_q(q.reshape(-1)).reshape(q.shape)
+    enc, checks = to.encode(q, be)
+    new = ProtectedTensor(enc=enc, checks=checks, scale=pt.scale,
+                          scheme_id=to.scheme_id,
+                          orig_shape=tuple(pt.orig_shape))
+    return new, corrected, due
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +367,87 @@ class ProtectionPlan:
         return ProtectionPlan(self.policy, self.leaves,
                               mesh_axes=self.mesh_axes,
                               kv_policy=kvcache.get_kv_policy(kv_policy))
+
+    # -- plan diff + rolling migration ---------------------------------------
+
+    def diff(self, other: "ProtectionPlan") -> PlanDiff:
+        """Per-leaf delta against ``other`` (the target plan). Both plans
+        must be built for the same tree — same leaf paths — or the diff is
+        meaningless and this raises. Entries keep this plan's traversal
+        order, so a rolling migration promotes shards deterministically."""
+        if set(self.leaves) != set(other.leaves):
+            missing = set(self.leaves) ^ set(other.leaves)
+            raise ValueError(
+                f"plans cover different trees ({len(self.leaves)} vs "
+                f"{len(other.leaves)} leaves; e.g. {sorted(missing)[:3]})")
+        entries = []
+        for p, lp in self.leaves.items():
+            tp = other.leaves[p]
+            if lp.scheme_id == tp.scheme_id and lp.backend == tp.backend:
+                continue
+            entries.append(LeafDiff(
+                path=p, from_scheme=lp.scheme_id, to_scheme=tp.scheme_id,
+                from_backend=lp.backend, to_backend=tp.backend,
+                stored_bytes_delta=tp.stored_bytes - lp.stored_bytes))
+        return PlanDiff(entries=tuple(entries))
+
+    def with_leaves(self, leaves: dict) -> "ProtectionPlan":
+        """A new plan with some leaves replaced (``{path: LeafPlan}``) —
+        the post-promotion plan a migration step hands back."""
+        unknown = set(leaves) - set(self.leaves)
+        if unknown:
+            raise KeyError(f"not in this plan: {sorted(unknown)[:3]}")
+        return ProtectionPlan(self.policy, {**self.leaves, **leaves},
+                              mesh_axes=self.mesh_axes,
+                              kv_policy=self.kv_policy)
+
+    def migrate_step(self, enc_tree, target: "ProtectionPlan",
+                     paths) -> tuple:
+        """Promote the given leaves to their ``target`` scheme IN the
+        encoded tree: transcode each named leaf's stored image
+        (:func:`transcode_leaf` — int8-domain, value-exact under the
+        default throttled encode) and adopt the target's ``LeafPlan``.
+
+        Returns ``(new_enc_tree, new_plan, records)`` where each record is
+        ``{path, from, to, corrected, due}`` with the decode flags observed
+        while reading the old image. The serve step keeps working across
+        the swap — decode dispatches on each ``ProtectedTensor.scheme_id``,
+        so the only cost is one planned retrace per promoted tree
+        structure (a checks plane appears or disappears)."""
+        from .policy import path_str
+
+        want = set(paths)
+        todo = [p for p in self.leaves if p in want]
+        if len(todo) != len(want):
+            raise KeyError(f"paths not in plan: "
+                           f"{sorted(want - set(todo))[:3]}")
+        todo_set = set(todo)
+        for p in todo:
+            if target.leaves[p].scheme_id is None:
+                raise ValueError(f"target leaves {p!r} unprotected — "
+                                 "migration only moves between schemes")
+        records = []
+
+        def mig(path, leaf):
+            p = path_str(path)
+            if p not in todo_set:
+                return leaf
+            if not is_protected_tensor(leaf):
+                raise ValueError(f"{p!r} is not a ProtectedTensor "
+                                 "in the encoded tree")
+            tp = target.leaves[p]
+            new, cor, due = transcode_leaf(
+                leaf, tp.scheme_id,
+                backend=tp.backend_obj or tp.backend or "xla")
+            records.append({"path": p, "from": leaf.scheme_id,
+                            "to": tp.scheme_id, "corrected": int(cor),
+                            "due": int(due)})
+            return new
+
+        new_tree = jax.tree_util.tree_map_with_path(
+            mig, enc_tree, is_leaf=is_protected_tensor)
+        new_plan = self.with_leaves({p: target.leaves[p] for p in todo})
+        return new_tree, new_plan, records
 
     def coverage(self):
         """The plan as a :class:`CoverageReport` (the legacy view)."""

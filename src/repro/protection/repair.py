@@ -1,0 +1,287 @@
+"""MILR-style algebraic weight recovery — the last resort after a DUE.
+
+When an 8-byte ECC block takes a second hit the code detects but cannot
+correct it (a DUE), and the scrubber refuses to write the leaf back (see
+``repro.serving.scrubber``).  MILR (Ponader et al., PAPERS.md) observes
+that a linear layer's weights are over-determined by known input/output
+pairs: with ``y = x @ W`` pinned at plan time for a clean ``W``, any set
+of corrupted rows ``R`` solves exactly from
+
+    x[:, R] @ W[R] = y - x[:, ~R] @ W[~R]
+
+as long as ``|R| <= n_samples`` and ``x[:, R]`` has full column rank.  We
+run the whole recovery in the *quantized* domain — ``y = x @ q`` with
+``q`` the stored int8 image — so the solve targets integers: rounding the
+least-squares solution to int8 reproduces the original rows *bit-exactly*
+(the residual check then verifies against the pinned outputs before
+anything is re-encoded).
+
+The :class:`RepairKit` is built ONCE from the freshly-encoded tree
+(:func:`build_repair_kit`): per repairable leaf a seeded calibration
+matrix ``x`` (n_samples, K), the clean response ``y`` (float64), and —
+the quarantine fallback — a ``secded72`` **twin** of the leaf's stored
+image.  When reconstruction is impossible (flat-padded layout with no row
+structure, more corrupted rows than samples, or residual above
+tolerance) :func:`repair_leaf` *quarantines* instead: the twin replaces
+the leaf, routing the layer to its out-of-place-protected copy.  Either
+way the returned leaf decodes clean.
+
+Everything here is host-side numpy (float64 solves) — repair is a
+maintenance action riding the serve loop, not a jitted hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ecc, wot
+from .backends import get_backend
+from .policy import path_str
+from .schemes import get_scheme
+from .tensor import ProtectedTensor, is_protected_tensor
+
+__all__ = ["LeafKit", "RepairKit", "build_repair_kit", "repair_leaf",
+           "repair_tree", "due_block_mask"]
+
+_REPAIRABLE = ("in-place", "secded72")   # schemes with localizable DUEs
+
+
+# ---------------------------------------------------------------------------
+# DUE localization: which blocks, which rows
+# ---------------------------------------------------------------------------
+
+
+def due_block_mask(pt: ProtectedTensor, *, backend: str = "xla"):
+    """Decode a leaf's stored image with PER-BLOCK flags.
+
+    Returns ``(q, double)`` where ``q`` is the decoded int8 image (shape
+    ``pt.enc.shape``; garbage inside DUE blocks) and ``double`` is the
+    bool DUE mask over 8-byte blocks, shape ``(*enc.shape[:-1],
+    enc.shape[-1] // 8)``.  Scalar scheme flags can say *that* a leaf has
+    a DUE; repair needs to know *where*.
+    """
+    if pt.scheme_id not in _REPAIRABLE:
+        raise ValueError(f"scheme {pt.scheme_id!r} has no localizable DUE "
+                         f"(one of {_REPAIRABLE})")
+    enc = pt.enc
+    blocks = enc.reshape(*enc.shape[:-1], enc.shape[-1] // 8, 8)
+    if pt.scheme_id == "in-place":
+        dec, _, double = get_backend(backend).decode64(blocks)
+    else:                   # secded72 decodes through the shared ecc core
+        dec, _, double = ecc.decode72(blocks, pt.checks)
+    q = jax.lax.bitcast_convert_type(
+        dec.reshape(enc.shape), jnp.int8)
+    return np.asarray(q), np.asarray(double).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# the kit
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafKit:
+    """Pinned calibration for one leaf.
+
+    x:    (n_samples, K) float64 seeded probe inputs (None when the leaf
+          has no row structure to solve — twin-only quarantine coverage).
+    y:    clean response ``x @ q`` in float64 — (n, N) for a 2-D leaf,
+          (L, n, N) per stacked layer (None when x is None).
+    twin: ``secded72``-encoded copy of the clean stored image, or None
+          when the kit was built with ``twins=False``.
+    """
+
+    x: Optional[np.ndarray]
+    y: Optional[np.ndarray]
+    twin: Optional[ProtectedTensor]
+
+    @property
+    def solvable(self) -> bool:
+        return self.x is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairKit:
+    """Per-path :class:`LeafKit` map + the knobs repair runs under."""
+
+    entries: dict
+    n_samples: int
+    tol: float
+
+    def __contains__(self, path: str) -> bool:
+        return path in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+def _leaf_items(enc_tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        enc_tree, is_leaf=is_protected_tensor)
+    return flat, treedef
+
+
+def build_repair_kit(enc_tree, *, seed: int = 0, n_samples: int = 32,
+                     tol: float = 1e-3, backend: str = "xla",
+                     twins: bool = True) -> RepairKit:
+    """Pin (x, y) calibration pairs + secded72 twins from a CLEAN tree.
+
+    Call this right after ``plan.encode_tree`` — the kit's responses are
+    only as trustworthy as the image they were computed from.  Leaves
+    whose stored image keeps the matmul row structure (same-shape 2-D, or
+    stacked 3-D) get a solvable kit; flat-padded leaves get twin-only
+    coverage (quarantine is their only recovery).  ``seed`` drives a
+    dedicated numpy generator, so kits are reproducible independent of
+    any jax key discipline.
+    """
+    rng = np.random.default_rng(seed)
+    flat, _ = _leaf_items(enc_tree)
+    entries = {}
+    for path, leaf in flat:
+        if not is_protected_tensor(leaf):
+            continue
+        if leaf.scheme_id not in _REPAIRABLE:
+            continue
+        q, double = due_block_mask(leaf, backend=backend)
+        if double.any():
+            raise ValueError(f"{path_str(path)}: tree has DUEs — a repair "
+                             "kit must be pinned from a clean tree")
+        twin = None
+        if twins:
+            enc_t, checks_t = get_scheme("secded72").encode(
+                jnp.asarray(q), backend)
+            twin = ProtectedTensor(enc=enc_t, checks=checks_t,
+                                   scale=leaf.scale, scheme_id="secded72",
+                                   orig_shape=tuple(leaf.orig_shape))
+        x = y = None
+        if not leaf.is_flat and q.ndim in (2, 3):
+            k = q.shape[-2]
+            x = rng.standard_normal((n_samples, k))
+            y = np.einsum("nk,...kj->...nj", x, q.astype(np.float64))
+        entries[path_str(path)] = LeafKit(x=x, y=y, twin=twin)
+    return RepairKit(entries=entries, n_samples=n_samples, tol=tol)
+
+
+# ---------------------------------------------------------------------------
+# the repair
+# ---------------------------------------------------------------------------
+
+
+def _solve_rows(x, y, q, rows, requires_wot):
+    """Reconstruct rows ``rows`` of one (K, N) int8 matrix from the pinned
+    (x, y) pair.  Returns the repaired int8 matrix (float64 lstsq, rounded,
+    WOT-throttled when the target scheme needs bit 6 free)."""
+    ok = ~rows
+    a = x[:, rows]                                       # (n, r)
+    b = y - x[:, ok] @ q[ok].astype(np.float64)          # (n, N)
+    sol, *_ = np.linalg.lstsq(a, b, rcond=None)          # (r, N)
+    rec = np.clip(np.rint(sol), -127, 127).astype(np.int8)
+    if requires_wot:
+        rec = np.asarray(wot.throttle_q(
+            jnp.asarray(rec.reshape(-1)))).reshape(rec.shape)
+    out = q.copy()
+    out[rows] = rec
+    return out
+
+
+def repair_leaf(pt: ProtectedTensor, kit: LeafKit, *,
+                tol: Optional[float] = None, n_samples: Optional[int] = None,
+                backend: str = "xla"):
+    """Repair one DUE-carrying leaf.  Returns ``(new_pt, report)``.
+
+    report["status"] is one of:
+      "clean"       — no DUE found, leaf returned unchanged;
+      "repaired"    — MILR reconstruction succeeded (residual under
+                      tolerance); new leaf re-encoded under the SAME
+                      scheme, bit-exact with the pre-fault image whenever
+                      the solve is determined;
+      "quarantined" — reconstruction impossible or rejected; the secded72
+                      twin replaces the leaf;
+      "unrecoverable" — no solve AND no twin; leaf returned unchanged
+                      (the caller must treat the layer as failed).
+    """
+    q, double = due_block_mask(pt, backend=backend)
+    report = {"scheme": pt.scheme_id, "due_blocks": int(double.sum()),
+              "rows": 0, "residual": None}
+    if not double.any():
+        report["status"] = "clean"
+        return pt, report
+
+    def quarantine():
+        if kit.twin is None:
+            report["status"] = "unrecoverable"
+            return pt, report
+        report["status"] = "quarantined"
+        return kit.twin, report
+
+    if not kit.solvable:
+        return quarantine()
+    limit = n_samples if n_samples is not None else kit.x.shape[0]
+
+    requires_wot = get_scheme(pt.scheme_id).requires_wot
+    x, y = kit.x, kit.y
+    stacked = q.ndim == 3
+    q_layers = q if stacked else q[None]
+    y_layers = y if stacked else y[None]
+    dbl_layers = double if stacked else double[None]
+    out_layers = []
+    worst = 0.0
+    n_rows = 0
+    for ql, yl, dl in zip(q_layers, y_layers, dbl_layers):
+        rows = dl.any(axis=-1)                    # (K,) DUE rows
+        n_rows += int(rows.sum())
+        if not rows.any():
+            out_layers.append(ql)
+            continue
+        if int(rows.sum()) > limit:
+            report["rows"] = n_rows
+            return quarantine()
+        fixed = _solve_rows(x, yl, ql, rows, requires_wot)
+        resid = np.abs(x @ fixed.astype(np.float64) - yl)
+        rel = float(resid.max() / (np.abs(yl).max() + 1e-12))
+        worst = max(worst, rel)
+        out_layers.append(fixed)
+    report["rows"] = n_rows
+    report["residual"] = worst
+    if worst > (tol if tol is not None else 1e-3):
+        return quarantine()
+
+    q_new = np.stack(out_layers) if stacked else out_layers[0]
+    enc, checks = get_scheme(pt.scheme_id).encode(
+        jnp.asarray(q_new), backend)
+    new_pt = ProtectedTensor(enc=enc, checks=checks, scale=pt.scale,
+                             scheme_id=pt.scheme_id,
+                             orig_shape=tuple(pt.orig_shape))
+    report["status"] = "repaired"
+    return new_pt, report
+
+
+def repair_tree(enc_tree, kit: RepairKit, *, paths=None,
+                backend: str = "xla"):
+    """Repair every kit-covered leaf in ``paths`` (default: all covered
+    leaves) that carries a DUE.  Returns ``(new_tree, reports)`` with one
+    ``{path, status, rows, residual, due_blocks, scheme}`` dict per leaf
+    that was actually examined and found dirty."""
+    flat, treedef = _leaf_items(enc_tree)
+    want = None if paths is None else set(paths)
+    leaves = [leaf for _, leaf in flat]
+    reports = []
+    for i, (path, leaf) in enumerate(flat):
+        if not is_protected_tensor(leaf):
+            continue
+        p = path_str(path)
+        if (want is not None and p not in want) or p not in kit.entries:
+            continue
+        if leaf.scheme_id not in _REPAIRABLE:
+            continue
+        new_leaf, rep = repair_leaf(leaf, kit.entries[p], tol=kit.tol,
+                                    backend=backend)
+        if rep["status"] == "clean":
+            continue
+        leaves[i] = new_leaf
+        reports.append({"path": p, **rep})
+    return jax.tree_util.tree_unflatten(treedef, leaves), reports

@@ -41,7 +41,16 @@ Design points
   sampled token) and therefore writes into the last shared page — that
   page gets a private copy-on-write clone instead of a reference. Pages
   re-enter the pool (and are zeroed) only when their LAST reference
-  drops; under pool pressure admission evicts cached pages oldest-first.
+  drops; under pool pressure admission evicts cached pages LRU-by-hit
+  (least recently *hit* prefix first, publication order as tiebreak).
+* **Self-healing.** With ``scrub_every > 0`` each matching step runs a
+  budgeted scrub pass (``repro.serving.scrubber``) over the encoded
+  weights and live KV pages BEFORE the serve compute, so corrected bits
+  land before anything decodes them; weight leaves that scrub refuses to
+  write back (DUE) go to MILR repair/quarantine when a ``repair_kit`` is
+  attached. :meth:`start_migration` drains a plan diff shard-by-shard
+  between steps. All of it emits ``scrub`` / ``migrate`` / ``repair``
+  telemetry and stays inside the determinism contract.
 """
 
 from __future__ import annotations
@@ -56,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ArchConfig
-from repro.serving import kvcache, telemetry
+from repro.serving import kvcache, scrubber, telemetry
 from repro.serving import protected as sp
 
 __all__ = [
@@ -158,14 +167,19 @@ class ServingFrontend:
                  n_pages: Optional[int] = None, kv_policy="in-place",
                  serve_step=None, collector=None, dtype=jnp.bfloat16,
                  act_quant: Optional[str] = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 scrub_every: int = 0, scrub_weight_leaves: int = 1,
+                 scrub_kv_pages: int = 4, repair_kit=None):
         kvp = kvcache.get_kv_policy(kv_policy)
         # per-request attribution on every path (see module docstring)
         kvp = dataclasses.replace(kvp, per_slot_flags=True)
         self.cfg, self.policy, self.slots_n = cfg, kvp, slots
+        self.plan = plan
         self.prefix_sharing = bool(prefix_sharing)
         self._prefix_index: dict = {}   # full-prefix tokens -> page id
         self._published: dict = {}      # page id -> its index key
+        self._prefix_meta: dict = {}    # index key -> [last_hit, seq]
+        self._prefix_seq = 0
         npg = -(-max_len // kvp.page_size)
         self.max_len = npg * kvp.page_size
         if n_pages is None:
@@ -188,13 +202,24 @@ class ServingFrontend:
         self.results: dict = {}
         self._slots: list = [None] * slots
         self._pending_meta: dict = {}   # rid -> (enqueue_step, enqueue_s)
+        if scrub_every < 0:
+            raise ValueError("scrub_every must be >= 0")
+        self.scrub_every = scrub_every
+        self.repair_kit = repair_kit
+        self.scrubber = scrubber.Scrubber(
+            leaves_per_step=scrub_weight_leaves,
+            pages_per_step=scrub_kv_pages)
+        self._migrator: Optional[scrubber.Migrator] = None
+        self._migrate_every = 1
         self.telemetry.emit("init", slots=slots, n_pages=n_pages,
                             pool_free=self.allocator.free_count,
                             page_size=kvp.page_size, max_len=self.max_len,
                             scheme=kvp.scheme, fused=kvp.fused,
                             attention_impl=kvp.attention_impl,
                             per_slot_flags=kvp.per_slot_flags,
-                            prefix_sharing=self.prefix_sharing)
+                            prefix_sharing=self.prefix_sharing,
+                            scrub_every=scrub_every,
+                            repair=repair_kit is not None)
 
     # -- request intake ----------------------------------------------------
 
@@ -220,26 +245,32 @@ class ServingFrontend:
         ps = self.policy.page_size
         pids, j = [], 1
         while j * ps <= len(prompt):
-            pid = self._prefix_index.get(tuple(prompt[:j * ps]))
+            key = tuple(prompt[:j * ps])
+            pid = self._prefix_index.get(key)
             if pid is None:
                 break
+            self._prefix_meta[key][0] = self.step_no   # LRU touch
             pids.append(pid)
             j += 1
         return tuple(pids)
 
     def _evict_prefix_cache(self, need: int, keep=()):
-        """Drop cached prefix pages (oldest publication first, never the
-        ones the in-flight admission is about to map) until the allocator
-        can serve ``need`` fresh pages. Evicting an entry only releases
-        the page if no live slot still maps it."""
+        """Drop cached prefix pages LRU-by-hit (least recently *hit*
+        first — publication counts as the first hit, publication order
+        breaks ties — never the ones the in-flight admission is about to
+        map) until the allocator can serve ``need`` fresh pages. Evicting
+        an entry only releases the page if no live slot still maps it."""
         keep = set(keep)
-        for key in list(self._prefix_index):
+        order = sorted(self._prefix_index,
+                       key=lambda k: tuple(self._prefix_meta[k]))
+        for key in order:
             if self.allocator.can(need):
                 return
             pid = self._prefix_index[key]
             if pid in keep:
                 continue
             del self._prefix_index[key]
+            del self._prefix_meta[key]
             del self._published[pid]
             released = self.allocator.free((pid,))
             if released:
@@ -265,6 +296,8 @@ class ServingFrontend:
             return
         pid = s.pages[s.consumed // ps - 1]
         self._prefix_index[key] = pid
+        self._prefix_meta[key] = [self.step_no, self._prefix_seq]
+        self._prefix_seq += 1
         self._published[pid] = key
         self.allocator.retain((pid,))
 
@@ -327,6 +360,106 @@ class ServingFrontend:
                                     slot=free_slot, src=shared[-1],
                                     dst=fresh[0])
 
+    # -- self-healing: scrub, repair, migrate ------------------------------
+
+    def start_migration(self, target_plan, *, leaves_per_step: int = 1,
+                        every: int = 1) -> "scrubber.Migrator":
+        """Begin a rolling migration to ``target_plan``: every ``every``
+        steps the next ``leaves_per_step`` scheme-changed leaves are
+        transcoded in place and the front-end's plan is swapped for the
+        promoted one. Serving continues throughout — decode dispatches on
+        each leaf's own scheme id."""
+        if self.plan is None:
+            raise ValueError("front-end was built without a plan — "
+                             "nothing to diff a migration against")
+        if self._migrator is not None and not self._migrator.done:
+            raise RuntimeError("a migration is already in flight")
+        self._migrator = scrubber.Migrator(self.plan, target_plan,
+                                           leaves_per_step=leaves_per_step)
+        self._migrate_every = max(1, every)
+        self.telemetry.emit("migrate", step=self.step_no, phase="start",
+                            pending=len(self._migrator.pending))
+        return self._migrator
+
+    @property
+    def migration_done(self) -> bool:
+        return self._migrator is None or self._migrator.done
+
+    def _busy_pages(self) -> set:
+        """Each active slot's current write-target page — the one page per
+        slot this step's serve compute will scribble into."""
+        ps = self.policy.page_size
+        busy = set()
+        for s in self._slots:
+            if s is not None:
+                busy.add(s.pages[min(s.consumed // ps,
+                                     len(s.pages) - 1)])
+        return busy
+
+    def _repair(self, due_paths):
+        """Hand scrub-detected DUE leaves to MILR repair/quarantine."""
+        from repro.protection import repair as repair_mod
+        self.enc_params, reports = repair_mod.repair_tree(
+            self.enc_params, self.repair_kit, paths=due_paths)
+        for r in reports:
+            self.telemetry.emit("repair", step=self.step_no, **r)
+        return reports
+
+    def _heal(self):
+        """The per-step maintenance slice, run AFTER admission and BEFORE
+        the serve compute so written-back corrections land before anything
+        decodes them."""
+        mig = self._migrator
+        if (mig is not None and not mig.done
+                and self.step_no % self._migrate_every == 0):
+            self.enc_params, recs = mig.step(self.enc_params)
+            self.plan = mig.plan
+            for r in recs:
+                self.telemetry.emit("migrate", step=self.step_no,
+                                    phase="promote",
+                                    pending=len(mig.pending), **r)
+        if self.scrub_every and self.step_no % self.scrub_every == 0:
+            self.enc_params, wst = self.scrubber.scrub_weights(
+                self.enc_params)
+            if wst["due_paths"] and self.repair_kit is not None:
+                self._repair(wst["due_paths"])
+            self.cache, kst = self.scrubber.scrub_kv(
+                self.cache, self.policy,
+                occupied=self.allocator.live_pages(),
+                busy=self._busy_pages())
+            self.telemetry.emit(
+                "scrub", step=self.step_no,
+                w_scanned=wst["scanned"], w_corrected=wst["corrected"],
+                w_due=wst["due"], kv_scanned=kst["scanned"],
+                kv_corrected=kst["corrected"], kv_due=kst["due"])
+
+    def final_scrub(self) -> dict:
+        """One full at-rest pass, meant for after the loop drains: every
+        protected weight leaf (with repair/quarantine for DUE leaves, then
+        a recount), every live KV page, and an unconditional re-zero of
+        free + parking pages. Emits ``scrub_final`` and returns its
+        fields — ``w_due`` / ``kv_due`` are the *residual* uncorrectable
+        state, the quantity CI pins to zero."""
+        tree, wst = self.scrubber.scrub_weights(self.enc_params, n=-1)
+        self.enc_params = tree
+        repaired = 0
+        if wst["due_paths"] and self.repair_kit is not None:
+            repaired = len(self._repair(wst["due_paths"]))
+            tree, wst2 = self.scrubber.scrub_weights(self.enc_params, n=-1)
+            self.enc_params = tree
+        else:
+            wst2 = wst
+        self.cache, kst = self.scrubber.scrub_kv(
+            self.cache, self.policy,
+            occupied=self.allocator.live_pages(), n=-1)
+        self.cache = self.scrubber.scrub_free(self.cache, self.allocator)
+        out = {"w_scanned": wst["scanned"], "w_corrected": wst["corrected"],
+               "w_repaired": repaired, "w_due": wst2["due"],
+               "kv_scanned": kst["scanned"],
+               "kv_corrected": kst["corrected"], "kv_due": kst["due"]}
+        self.telemetry.emit("scrub_final", step=self.step_no, **out)
+        return out
+
     # -- the serving loop --------------------------------------------------
 
     @property
@@ -361,6 +494,7 @@ class ServingFrontend:
         slots (idle slots feed a keep-alive token into their parking
         page), sample greedily, advance lifecycles, emit telemetry."""
         self._admit()
+        self._heal()
         t0 = time.perf_counter()
         tokens = np.zeros((self.slots_n, 1), np.int32)
         pos = np.zeros((self.slots_n,), np.int32)
@@ -471,24 +605,46 @@ def run_burst(cfg: ArchConfig, enc_params, *, plan=None, waves: Sequence,
               fault_rate: float = 0.0, fault_seed: int = 0,
               inject_every: int = 4, telemetry_path: Optional[str] = None,
               serve_step=None, max_steps: int = 10_000,
-              dtype=jnp.bfloat16, prefix_sharing: bool = False):
+              dtype=jnp.bfloat16, prefix_sharing: bool = False,
+              scrub_every: int = 0, scrub_weight_leaves: int = 1,
+              scrub_kv_pages: int = 4, repair: bool = False,
+              repair_kit=None, weight_fault_rate: float = 0.0):
     """Replay a seeded wave workload through the front-end, optionally
     injecting faults into the live KV pools every ``inject_every`` steps
     at per-bit ``fault_rate`` (keys fold in the logical step, so a replay
-    injects the identical bits). Returns ``(events, summary, results)``.
+    injects the identical bits). ``weight_fault_rate`` additionally
+    injects into the encoded weight tree on the same cadence (its own key
+    stream — KV and weight injections never alias). Returns ``(events,
+    summary, results)``.
+
+    ``scrub_every > 0`` turns on the budgeted self-healing slice
+    (``scrub_weight_leaves`` / ``scrub_kv_pages`` per pass) and ends the
+    run with :meth:`ServingFrontend.final_scrub`, so the summary's
+    ``healing`` roll-up reports the residual at-rest DUE state;
+    ``repair=True`` pins a MILR repair kit from the (clean) entry tree
+    first — or pass a prebuilt ``repair_kit`` when the entry tree already
+    carries faults.
 
     Pass a prebuilt jitted ``serve_step`` to share the compiled executable
     across runs (the protected/unprotected twin comparison and
     bit-determinism replays rely on this to avoid recompiles)."""
     col = telemetry.TelemetryCollector(telemetry_path)
+    kit = repair_kit
+    if repair and kit is None:
+        from repro.protection import repair as repair_mod
+        kit = repair_mod.build_repair_kit(enc_params, seed=fault_seed)
     fe = ServingFrontend(cfg, enc_params, plan=plan, slots=slots,
                          max_len=max_len, n_pages=n_pages,
                          kv_policy=kv_policy, serve_step=serve_step,
                          collector=col, dtype=dtype,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         scrub_every=scrub_every,
+                         scrub_weight_leaves=scrub_weight_leaves,
+                         scrub_kv_pages=scrub_kv_pages, repair_kit=kit)
     pending = sorted(waves, key=lambda r: (r.arrival_step, r.rid))
     i = 0
     base_key = jax.random.PRNGKey(fault_seed)
+    wkey = jax.random.PRNGKey(fault_seed + 1_000_003)
     for _ in range(max_steps):
         while i < len(pending) and pending[i].arrival_step <= fe.step_no:
             fe.submit(pending[i])
@@ -502,8 +658,16 @@ def run_burst(cfg: ArchConfig, enc_params, *, plan=None, waves: Sequence,
             dirty = protection.inject_tree_device(
                 tree, fault_rate, jax.random.fold_in(base_key, fe.step_no))
             fe.cache = kvcache.from_protected_tree(fe.cache, dirty)
+        if (weight_fault_rate > 0 and fe.active > 0
+                and fe.step_no % inject_every == 0):
+            from repro import protection
+            fe.enc_params = protection.inject_tree_device(
+                fe.enc_params, weight_fault_rate,
+                jax.random.fold_in(wkey, fe.step_no))
         fe.step()
     else:
         raise RuntimeError(f"burst not drained after {max_steps} steps")
+    if scrub_every > 0:
+        fe.final_scrub()
     col.close()
     return col.events, telemetry.summarize(col.events), fe.results

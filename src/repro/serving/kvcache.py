@@ -468,6 +468,18 @@ class PageAllocator:
                 self._refs[pid] = refs - 1
         return tuple(released)
 
+    def live_pages(self) -> tuple:
+        """Sorted ids of pages currently out of the pool (refcount > 0) —
+        the scrubber's worklist: only these hold content worth decoding."""
+        return tuple(sorted(self._refs))
+
+    def free_pages(self) -> tuple:
+        """Sorted ids of free (allocatable, unreferenced) pages. Their
+        content is known — all-zero after the free-time zeroing — so a
+        scrubber restores them by re-zeroing, clearing even uncorrectable
+        patterns that injection may have left behind."""
+        return tuple(sorted(self._free))
+
 
 def set_slot_pages(cache: dict, slot: int, page_ids: Sequence[int],
                    *, fill: Optional[int] = None) -> dict:

@@ -1,0 +1,290 @@
+"""Background scrub + rolling plan migration — the self-healing loop.
+
+The paper's in-place (64,57,1) code *corrects* a single flipped bit only at
+decode time; nothing ever writes the corrected bytes back.  Under serve
+traffic that means correctable errors sit in memory until a second hit in
+the same 8-byte block turns them into an uncorrectable DUE — exactly in
+the weights and KV pages that decode least often.  This module closes the
+loop with two host-driven maintenance actors that ride the serve loop:
+
+``Scrubber``
+    Walks the encoded weight tree and the live KV page pool on a
+    traffic-aware budget (``leaves_per_step`` / ``pages_per_step`` per
+    serve step), decode -> re-encode -> write back, so corrected bits
+    actually land.  Two safety rules:
+
+    * a leaf (or a layer x page slab) that decodes with ``due > 0`` is
+      NEVER written back — re-encoding corrupted data would recompute
+      checks consistent with the corruption and silently erase detection.
+      It is reported instead (``due_paths`` / per-pool due counts) so the
+      caller can hand it to :mod:`repro.protection.repair`.
+    * free and parking pages have KNOWN content (all-zero after the
+      free-time zeroing), so :meth:`Scrubber.scrub_free` restores them by
+      re-zeroing — clearing even uncorrectable patterns.
+
+    Scrub is value-exact: the decoded int8 image of a clean codeword
+    re-encodes to the identical bytes, so scrubbing an uncorrupted leaf is
+    a bit-level no-op (asserted in tests).
+
+``Migrator``
+    Drains a :meth:`ProtectionPlan.diff` shard-by-shard *while serving*:
+    each :meth:`Migrator.step` transcodes the next ``leaves_per_step``
+    leaves to their target scheme (``ProtectionPlan.migrate_step``) and
+    swaps in the promoted plan.  The serve step keeps working across the
+    swap because decode dispatches on each ``ProtectedTensor.scheme_id``;
+    the only cost is one planned retrace per promoted tree structure.
+
+Both actors are deliberately host-side and synchronous with the serve
+loop (the repo's determinism contract): "background" means *budgeted per
+step*, not a thread.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.protection.backends import get_backend
+from repro.protection.policy import path_str
+from repro.protection.schemes import get_scheme
+from repro.protection.tensor import ProtectedTensor, is_protected_tensor
+
+from . import kvcache
+
+__all__ = ["Scrubber", "Migrator", "scrub_tree"]
+
+
+# ---------------------------------------------------------------------------
+# jitted per-(scheme, backend) scrub kernels
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _leaf_scrub_fn(scheme_id: str, backend: str):
+    """enc[, checks] -> (enc', checks', corrected, due); write-back is
+    suppressed (old bytes pass through) whenever the leaf has a DUE."""
+    sch = get_scheme(scheme_id)
+    be = get_backend(backend)
+
+    @jax.jit
+    def f(enc, checks):
+        q, cor, due = sch.decode_with_flags(enc, checks, be)
+        new_enc, new_checks = sch.encode(q, be)
+        keep = due > 0                       # scalar: whole-leaf skip
+        out_enc = jnp.where(keep, enc, new_enc)
+        out_checks = (None if new_checks is None
+                      else jnp.where(keep, checks, new_checks))
+        return out_enc, out_checks, cor, due
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _kv_scrub_fn(scheme_id: str, backend: str, has_checks: bool):
+    """(k_pages, v_pages, k_checks, v_checks, ids) -> scrubbed pools +
+    (corrected, due_slabs, skipped) totals.  Write-back is masked per
+    (layer, page) slab: one DUE token poisons only its own slab."""
+    sch = get_scheme(scheme_id)
+
+    @jax.jit
+    def f(k_pages, v_pages, k_checks, v_checks, ids):
+        stats = []
+        outs = []
+        for pool, checks in ((k_pages, k_checks), (v_pages, v_checks)):
+            enc = pool[:, ids]                       # (nl, n, ps, kv, hd)
+            ch = checks[:, ids] if has_checks else None
+            q, cor, due = kvcache._decode_kv(enc, ch, scheme_id, backend)
+            new_enc, new_ch = sch.encode(q, backend)
+            bad = due.sum(axis=-1) > 0               # (nl, n) slab DUE
+            keep = bad[:, :, None, None, None]
+            pool = pool.at[:, ids].set(jnp.where(keep, enc, new_enc))
+            if has_checks:
+                checks = checks.at[:, ids].set(
+                    jnp.where(keep, ch, new_ch))
+            outs.append((pool, checks))
+            stats.append((cor.sum(), due.sum(), bad.sum()))
+        (kp, kc), (vp, vc) = outs
+        (kcor, kdue, kbad), (vcor, vdue, vbad) = stats
+        return kp, vp, kc, vc, kcor + vcor, kdue + vdue, kbad + vbad
+
+    return f
+
+
+def _protected_indices(flat):
+    """Indices of scrubbable leaves in a flattened tree: protected tensors
+    whose scheme actually stores a codeword ("faulty" stores raw bytes —
+    nothing to correct, nothing to write back)."""
+    return [i for i, (_, leaf) in enumerate(flat)
+            if is_protected_tensor(leaf) and leaf.scheme_id != "faulty"]
+
+
+def scrub_tree(enc_tree, *, backend: str = "xla"):
+    """One full pass over every protected leaf (no budget, no cursor).
+    Returns ``(new_tree, stats)`` — the "final scrub" used to assert the
+    at-rest state is clean after a run drains."""
+    s = Scrubber(leaves_per_step=0, backend=backend)
+    return s.scrub_weights(enc_tree, n=-1)
+
+
+# ---------------------------------------------------------------------------
+# the scrubber
+# ---------------------------------------------------------------------------
+
+
+class Scrubber:
+    """Budgeted decode -> re-encode -> write-back over weights + KV pages.
+
+    Holds two wrap-around cursors (weight leaf index, KV worklist
+    position) so successive calls cover the whole tree / pool round-robin
+    regardless of per-step budget.  Stateless w.r.t. the data it scrubs —
+    trees and caches are passed in and handed back (jax functional
+    update), so the caller decides what the scrubbed state replaces.
+    """
+
+    def __init__(self, *, leaves_per_step: int = 1, pages_per_step: int = 4,
+                 backend: str = "xla"):
+        if leaves_per_step < 0 or pages_per_step < 0:
+            raise ValueError("scrub budgets must be >= 0")
+        self.leaves_per_step = leaves_per_step
+        self.pages_per_step = pages_per_step
+        self.backend = backend
+        self._wcur = 0          # weight-leaf cursor
+        self._pcur = 0          # KV worklist cursor
+
+    # -- weights ------------------------------------------------------------
+
+    def scrub_weights(self, enc_tree, *, n: int | None = None):
+        """Scrub the next ``n`` protected leaves (default: the per-step
+        budget; ``n=-1`` scrubs every leaf — a full pass).  Returns
+        ``(new_tree, stats)`` with stats keys ``scanned / corrected /
+        due / wrote / due_paths``; ``due_paths`` lists leaves left
+        untouched for :mod:`repro.protection.repair`."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            enc_tree, is_leaf=is_protected_tensor)
+        idxs = _protected_indices(flat)
+        stats = {"scanned": 0, "corrected": 0, "due": 0, "wrote": 0,
+                 "due_paths": []}
+        if not idxs:
+            return enc_tree, stats
+        budget = self.leaves_per_step if n is None else n
+        budget = len(idxs) if budget < 0 else min(budget, len(idxs))
+        if budget == 0:
+            return enc_tree, stats
+        leaves = [leaf for _, leaf in flat]
+        start = self._wcur % len(idxs)
+        for j in range(budget):
+            i = idxs[(start + j) % len(idxs)]
+            pt = leaves[i]
+            fn = _leaf_scrub_fn(pt.scheme_id, self.backend)
+            enc, checks, cor, due = fn(pt.enc, pt.checks)
+            cor, due = int(cor), int(due)
+            stats["scanned"] += 1
+            stats["corrected"] += cor
+            stats["due"] += due
+            if due:
+                stats["due_paths"].append(path_str(flat[i][0]))
+            else:
+                stats["wrote"] += 1
+                leaves[i] = ProtectedTensor(
+                    enc=enc, checks=checks, scale=pt.scale,
+                    scheme_id=pt.scheme_id,
+                    orig_shape=tuple(pt.orig_shape))
+        self._wcur = (start + budget) % len(idxs)
+        return jax.tree_util.tree_unflatten(treedef, leaves), stats
+
+    # -- KV pages -----------------------------------------------------------
+
+    def scrub_kv(self, cache: dict, policy, *, occupied, busy=(),
+                 n: int | None = None):
+        """Scrub the next ``n`` live pages (default: the per-step budget;
+        ``n=-1`` scrubs the whole worklist).  ``occupied`` is the live-page
+        worklist (:meth:`PageAllocator.live_pages`); ``busy`` pages —
+        in-flight slots' current write targets — are skipped this pass.
+        Returns ``(new_cache, stats)`` with ``scanned / corrected / due /
+        due_slabs`` (a slab is one layer x page write-back unit)."""
+        stats = {"scanned": 0, "corrected": 0, "due": 0, "due_slabs": 0}
+        sch = policy.scheme_obj
+        if sch.scheme_id == "faulty":
+            return cache, stats
+        work = sorted(set(occupied) - set(busy))
+        if not work:
+            return cache, stats
+        budget = self.pages_per_step if n is None else n
+        budget = len(work) if budget < 0 else min(budget, len(work))
+        if budget == 0:
+            return cache, stats
+        start = self._pcur % len(work)
+        ids = [work[(start + j) % len(work)] for j in range(budget)]
+        self._pcur = (start + budget) % len(work)
+        fn = _kv_scrub_fn(sch.scheme_id, policy.backend, policy.has_checks)
+        kp, vp, kc, vc, cor, due, bad = fn(
+            cache["k_pages"], cache["v_pages"],
+            cache.get("k_checks"), cache.get("v_checks"),
+            jnp.asarray(ids, jnp.int32))
+        cache = dict(cache)
+        cache["k_pages"], cache["v_pages"] = kp, vp
+        if policy.has_checks:
+            cache["k_checks"], cache["v_checks"] = kc, vc
+        stats.update(scanned=len(ids), corrected=int(cor), due=int(due),
+                     due_slabs=int(bad))
+        return cache, stats
+
+    def scrub_free(self, cache: dict, alloc) -> dict:
+        """Restore every free + parking page to its known content (zero).
+        Unlike the decode path this clears even DUE patterns — the pool
+        invariant 'free means zero' is re-established unconditionally."""
+        ids = tuple(range(alloc.reserved)) + alloc.free_pages()
+        return kvcache.zero_pages(cache, ids) if ids else cache
+
+
+# ---------------------------------------------------------------------------
+# rolling plan migration
+# ---------------------------------------------------------------------------
+
+
+class Migrator:
+    """Drains ``plan.diff(target)`` a few shards per step, while serving.
+
+    State machine: ``pending`` (scheme-change paths in plan order) ->
+    :meth:`step` promotes the next ``leaves_per_step`` of them via
+    ``ProtectionPlan.migrate_step`` -> ``done`` when the worklist is
+    empty.  ``self.plan`` always reflects the promotions applied so far,
+    so a restart resumes from the mixed plan, and ``records`` accumulates
+    one ``{path, from, to, corrected, due}`` dict per promoted leaf.
+
+    The serve step is NOT rebuilt: mixed-scheme dispatch reads each
+    ``ProtectedTensor.scheme_id``, so promoting a leaf costs exactly the
+    retrace its new tree structure triggers (bounded by ``len(diff)`` —
+    asserted in tests via the jitted step's cache size).
+    """
+
+    def __init__(self, plan, target, *, leaves_per_step: int = 1):
+        if leaves_per_step < 1:
+            raise ValueError("leaves_per_step must be >= 1")
+        self.diff = plan.diff(target)
+        self.pending = list(self.diff.paths)
+        self.plan = plan
+        self.target = target
+        self.leaves_per_step = leaves_per_step
+        self.records: list = []
+
+    @property
+    def done(self) -> bool:
+        return not self.pending
+
+    @property
+    def promoted(self) -> int:
+        return len(self.records)
+
+    def step(self, enc_tree):
+        """Promote the next batch of shards.  Returns ``(new_tree,
+        records)``; records is empty once the migration has drained."""
+        if not self.pending:
+            return enc_tree, []
+        batch = self.pending[:self.leaves_per_step]
+        self.pending = self.pending[self.leaves_per_step:]
+        enc_tree, self.plan, recs = self.plan.migrate_step(
+            enc_tree, self.target, batch)
+        self.records.extend(recs)
+        return enc_tree, recs

@@ -21,7 +21,8 @@ Event schema (one table per type in docs/serving.md):
 event      fields
 ========== =================================================================
 init       slots, n_pages, pool_free, page_size, max_len, scheme, fused,
-           attention_impl, per_slot_flags, prefix_sharing
+           attention_impl, per_slot_flags, prefix_sharing, scrub_every,
+           repair
 enqueue    rid, step, prompt_len, max_new, [t_s]
 reject     rid, step, reason
 admit      rid, step, slot, n_pages, queue_depth, pool_free; with prefix
@@ -33,9 +34,21 @@ finish     rid, step, slot, n_generated, kv_corrected, kv_due, pool_free,
            [ttft_s, tpot_ms]
 step       step, active, queue_depth, pool_free, pool_cached,
            kv_corrected, kv_due, w_corrected, w_due, [step_ms]
+scrub      step, w_scanned, w_corrected, w_due, kv_scanned, kv_corrected,
+           kv_due  (one budgeted healing pass; w_due counts leaves left
+           un-written-back for repair)
+scrub_final step, w_scanned, w_corrected, w_repaired, w_due, kv_scanned,
+           kv_corrected, kv_due  (the full at-rest pass after drain;
+           w_due / kv_due here are RESIDUAL uncorrectable state)
+migrate    step, phase="start", pending | step, phase="promote", path,
+           from, to, corrected, due, pending  (rolling plan migration)
+repair     step, path, status ("repaired"|"quarantined"|"unrecoverable"),
+           scheme, rows, due_blocks, residual
 ========== =================================================================
 
-``pool_cached`` counts prefix-cache-held pages; the leak check is
+All healing events are pure functions of the logical step and the seeded
+fault stream — no wall fields — so they sit inside the deterministic
+view. ``pool_cached`` counts prefix-cache-held pages; the leak check is
 ``initial_free - final_free - final_cached == 0`` (cached pages are
 referenced on purpose, not leaked)."""
 
@@ -48,11 +61,14 @@ from typing import IO, Optional
 
 __all__ = [
     "TelemetryCollector", "deterministic_view", "percentile",
-    "summarize", "write_summary", "write_requests_csv",
-    "SUMMARY_SCHEMA",
+    "summarize", "write_summary", "load_summary", "write_requests_csv",
+    "SUMMARY_SCHEMA", "SUPPORTED_SCHEMAS",
 ]
 
-SUMMARY_SCHEMA = "burst_sim/v1"
+# v2 adds the ``healing`` roll-up (scrub / migrate / repair totals and the
+# residual at-rest DUE state); v1 summaries still load via load_summary.
+SUMMARY_SCHEMA = "burst_sim/v2"
+SUPPORTED_SCHEMAS = ("burst_sim/v1", "burst_sim/v2")
 
 _WALL_SUFFIXES = ("_s", "_ms")
 
@@ -176,6 +192,37 @@ def summarize(events) -> dict:
             "solo_pages_total": sum(a.get("n_pages_solo", a["n_pages"])
                                     for a in admits),
         },
+        "healing": _healing_rollup(by),
+    }
+
+
+def _healing_rollup(by: dict) -> dict:
+    """The v2 self-healing roll-up: scrub totals, migration progress,
+    repair outcomes, and the residual at-rest DUE state from the final
+    full pass (None when the run never scrubbed at the end)."""
+    scrubs = by.get("scrub", [])
+    repairs = by.get("repair", [])
+    promotes = [m for m in by.get("migrate", [])
+                if m.get("phase") == "promote"]
+    finals = by.get("scrub_final", [])
+    statuses = {}
+    for r in repairs:
+        statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+    return {
+        "scrub_passes": len(scrubs),
+        "w_scanned": sum(s["w_scanned"] for s in scrubs),
+        "w_corrected": sum(s["w_corrected"] for s in scrubs),
+        "kv_scanned": sum(s["kv_scanned"] for s in scrubs),
+        "kv_corrected": sum(s["kv_corrected"] for s in scrubs),
+        "due_leaves_seen": sum(s["w_due"] for s in scrubs),
+        "repairs": statuses,
+        "migrated_leaves": len(promotes),
+        "final_due": ({"w": finals[-1]["w_due"],
+                       "kv": finals[-1]["kv_due"],
+                       "w_corrected": finals[-1]["w_corrected"],
+                       "kv_corrected": finals[-1]["kv_corrected"],
+                       "w_repaired": finals[-1]["w_repaired"]}
+                      if finals else None),
     }
 
 
@@ -183,6 +230,22 @@ def write_summary(summary: dict, path: str):
     with open(path, "w") as fh:
         json.dump(summary, fh, indent=2)
         fh.write("\n")
+
+
+def load_summary(path: str) -> dict:
+    """Load a burst summary, accepting every schema in
+    ``SUPPORTED_SCHEMAS``. v1 summaries (pre-healing) are upgraded in
+    memory — ``healing`` becomes None so v2 consumers can branch on it —
+    and keep their original ``schema`` string so provenance is visible."""
+    with open(path) as fh:
+        s = json.load(fh)
+    schema = s.get("schema")
+    if schema not in SUPPORTED_SCHEMAS:
+        raise ValueError(f"unsupported burst summary schema {schema!r} "
+                         f"(supported: {SUPPORTED_SCHEMAS})")
+    if schema == "burst_sim/v1":
+        s.setdefault("healing", None)
+    return s
 
 
 def write_requests_csv(events, path: str):

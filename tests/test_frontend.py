@@ -516,6 +516,45 @@ def test_cow_on_fully_shared_prompt(burst_rig, tmp_path):
     assert s_sh["sharing"]["tokens_reused"] == 15 * (len(admits) - 1)
 
 
+def test_prefix_cache_evicts_lru_by_hit_keeping_hot_prefix(burst_rig):
+    """Eviction is LRU-by-*hit*: under pool pressure the prefix that was
+    published first but hit most recently SURVIVES, while the
+    never-re-hit one is evicted — publication order alone must not decide
+    (the regression: an insertion-order eviction would drop the hot
+    prefix here)."""
+    cfg, plan, enc, kvp, step = burst_rig
+    ps = kvp.page_size
+    fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,
+                                  max_len=2 * ps, n_pages=5,
+                                  kv_policy=kvp, serve_step=step,
+                                  prefix_sharing=True)
+    hot = tuple(range(1, ps + 1))          # published FIRST (oldest)
+    cold = tuple(range(101, 101 + ps))     # published second
+    for rid, prompt in ((0, hot), (1, cold)):
+        fe.submit(frontend.Request(rid=rid, prompt=prompt, max_new=2))
+        fe.run()
+    assert set(fe._prefix_index) == {hot, cold}
+    # re-hit the old prefix: a sharer maps its cached page
+    fe.submit(frontend.Request(rid=2, prompt=hot + (7, 8, 9), max_new=2))
+    fe.run()
+    admit = [e for e in fe.telemetry.events
+             if e["event"] == "admit" and e["rid"] == 2]
+    assert admit[0]["pages_shared"] == 1
+    # now force pressure: 2 fresh pages wanted, 1 free -> one eviction
+    assert fe.allocator.free_count == 1
+    # 15-token prompt + 4 generated spans 2 pages but never completes a
+    # page inside the prompt, so it cannot publish a prefix of its own
+    fe.submit(frontend.Request(rid=3, prompt=tuple(range(200, 200 + ps - 1)),
+                               max_new=4))
+    fe.run()
+    assert hot in fe._prefix_index         # recently hit -> survives
+    assert cold not in fe._prefix_index    # least recently hit -> evicted
+    assert len(fe._prefix_index) == 1
+    # eviction released exactly the cold page; accounting stays exact
+    assert fe.drop_prefix_cache() == 1
+    assert fe.allocator.live_count == 0
+
+
 def test_prefix_cache_drop_releases_pages(burst_rig):
     cfg, plan, enc, kvp, step = burst_rig
     fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,

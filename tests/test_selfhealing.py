@@ -1,0 +1,568 @@
+"""Self-healing serving: background scrub, MILR repair, rolling plan
+migration, and the v2 healing telemetry.
+
+Layers of coverage:
+
+* scrubber unit tests — write-back is bit-exact, clean leaves are
+  no-ops, DUE leaves are never rewritten, budget cursors cover the whole
+  tree round-robin, KV page scrub respects the busy set;
+* the error-accumulation story — correctable singles pile up into DUEs
+  without scrub, never with a per-round scrub;
+* MILR repair — bit-exact row reconstruction from pinned (x, y)
+  calibration, quarantine when the solve is under-determined, and the
+  clean-tree precondition on kit pinning;
+* plan diff / rolling migration — value-exact transcode mid-traffic with
+  recompiles bounded by the promotion count;
+* the end-to-end acceptance — a faulted serve loop (KV + weights at
+  1e-3) drains with zero residual at-rest DUE and the healed tree
+  produces logits bit-exact with the never-faulted twin;
+* telemetry v2 — the ``healing`` roll-up, wall-field-free healing
+  events, and v1 summary compatibility through ``load_summary``.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import protection
+from repro.protection import repair
+from repro.serving import frontend, kvcache, protected, scrubber, telemetry
+
+
+def _flip(pt, idx, mask=0x01):
+    """One bit-flip in a leaf's stored image (new frozen leaf)."""
+    return dataclasses.replace(
+        pt, enc=pt.enc.at[idx].set(pt.enc[idx] ^ np.uint8(mask)))
+
+
+def _small_tree(seed=0, shapes=((16, 24), (24, 16), (16, 16))):
+    """A tiny all-in-place-protected dict tree + its encoded twin."""
+    rng = np.random.default_rng(seed)
+    params = {f"w{i}": jnp.asarray(
+        rng.integers(-50, 50, size=s).astype(np.float32) / 64.0)
+        for i, s in enumerate(shapes)}
+    policy = protection.ProtectionPolicy(
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2)
+    enc = policy.encode_tree(params)
+    return params, policy, enc
+
+
+# ---------------------------------------------------------------------------
+# scrubber: write-back semantics
+# ---------------------------------------------------------------------------
+
+
+def test_scrub_corrects_single_flip_bitexact():
+    _, _, enc = _small_tree()
+    clean = np.asarray(enc["w0"].enc).copy()
+    enc["w0"] = _flip(enc["w0"], (3, 5))
+    healed, stats = scrubber.scrub_tree(enc)
+    assert stats["corrected"] >= 1 and stats["due"] == 0
+    assert stats["scanned"] == stats["wrote"] == 3
+    assert np.array_equal(np.asarray(healed["w0"].enc), clean)
+
+
+def test_scrub_clean_tree_is_bit_level_noop():
+    _, _, enc = _small_tree()
+    before = {k: np.asarray(v.enc).copy() for k, v in enc.items()}
+    healed, stats = scrubber.scrub_tree(enc)
+    assert stats["corrected"] == 0 and stats["due"] == 0
+    for k in enc:
+        assert np.array_equal(np.asarray(healed[k].enc), before[k])
+
+
+def test_scrub_never_writes_back_a_due_leaf():
+    """Two hits in one 8-byte block -> DUE; re-encoding would recompute
+    checks consistent with the corruption, so the scrubber must leave the
+    bytes EXACTLY as it found them and report the leaf instead."""
+    _, _, enc = _small_tree()
+    dirty = _flip(_flip(enc["w1"], (0, 0), 0x01), (0, 1), 0x01)
+    enc["w1"] = dirty
+    dirty_bytes = np.asarray(dirty.enc).copy()
+    healed, stats = scrubber.scrub_tree(enc)
+    assert stats["due"] > 0
+    assert stats["due_paths"] == ["w1"]
+    assert stats["wrote"] == 2                     # the other two leaves
+    assert np.array_equal(np.asarray(healed["w1"].enc), dirty_bytes)
+
+
+def test_scrub_budget_cursor_covers_tree_round_robin():
+    _, _, enc = _small_tree()
+    cleans = {k: np.asarray(v.enc).copy() for k, v in enc.items()}
+    for i, k in enumerate(enc):
+        enc[k] = _flip(enc[k], (1, i))
+    s = scrubber.Scrubber(leaves_per_step=1)
+    total = 0
+    for _ in range(3):                             # 3 calls x 1 leaf each
+        enc, stats = s.scrub_weights(enc)
+        assert stats["scanned"] == 1
+        total += stats["corrected"]
+    assert total == 3
+    for k in enc:
+        assert np.array_equal(np.asarray(enc[k].enc), cleans[k])
+
+
+# ---------------------------------------------------------------------------
+# scrubber: KV pages
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def kv_rig(smoke_params):
+    cfg, _ = smoke_params("deepseek-7b")
+    kvp = kvcache.get_kv_policy("in-place")
+    cache = kvcache.init_paged_cache(cfg, batch=2, max_len=32,
+                                     policy=kvp, n_pages=6)
+    return cfg, kvp, cache
+
+
+def test_kv_scrub_corrects_live_page_and_skips_busy(kv_rig):
+    _, kvp, cache = kv_rig
+    pid = 3
+    clean = np.asarray(cache["k_pages"][:, pid]).copy()
+    cache["k_pages"] = cache["k_pages"].at[0, pid, 0, 0, 0].set(
+        cache["k_pages"][0, pid, 0, 0, 0] ^ np.uint8(2))
+    s = scrubber.Scrubber(pages_per_step=4)
+    # busy pages are untouchable this pass
+    skipped, stats = s.scrub_kv(cache, kvp, occupied=(pid,), busy=(pid,))
+    assert stats["scanned"] == 0
+    assert np.asarray(skipped["k_pages"][0, pid, 0, 0, 0]) != clean[0, 0, 0, 0]
+    # off the busy list the flip is corrected and written back bit-exactly
+    healed, stats = s.scrub_kv(cache, kvp, occupied=(pid,))
+    assert stats["scanned"] == 1 and stats["corrected"] >= 1
+    assert stats["due"] == 0
+    assert np.array_equal(np.asarray(healed["k_pages"][:, pid]), clean)
+
+
+def test_kv_scrub_skips_due_slab(kv_rig):
+    _, kvp, cache = kv_rig
+    pid = 1
+    for d in (0, 1):                       # two hits, one 8-byte block
+        cache["k_pages"] = cache["k_pages"].at[0, pid, 0, 0, d].set(
+            cache["k_pages"][0, pid, 0, 0, d] ^ np.uint8(1))
+    dirty = np.asarray(cache["k_pages"][0, pid]).copy()
+    s = scrubber.Scrubber()
+    healed, stats = s.scrub_kv(cache, kvp, occupied=(pid,), n=-1)
+    assert stats["due"] > 0 and stats["due_slabs"] >= 1
+    assert np.array_equal(np.asarray(healed["k_pages"][0, pid]), dirty)
+
+
+def test_scrub_free_re_zeroes_even_due_patterns(kv_rig):
+    _, kvp, cache = kv_rig
+    alloc = kvcache.PageAllocator(6, reserved=2)
+    live = alloc.alloc(1)                  # one live page, rest free
+    free_pid = alloc.free_pages()[0]
+    cache["k_pages"] = cache["k_pages"].at[0, free_pid].set(
+        jnp.full_like(cache["k_pages"][0, free_pid], 255))
+    cache["v_pages"] = cache["v_pages"].at[0, live[0], 0, 0, 0].set(7)
+    s = scrubber.Scrubber()
+    healed = s.scrub_free(cache, alloc)
+    assert int(jnp.sum(healed["k_pages"][0, free_pid])) == 0
+    assert int(healed["v_pages"][0, live[0], 0, 0, 0]) == 7   # live kept
+
+
+# ---------------------------------------------------------------------------
+# error accumulation: singles become DUEs only without scrub
+# ---------------------------------------------------------------------------
+
+
+def test_correctable_faults_accumulate_to_due_without_scrub():
+    """The motivating failure mode: each round lands ONE correctable flip
+    in the same 8-byte block. Unscrubbed, round two turns the resident
+    single into a DUE; with a scrub between rounds every flip is healed
+    while it is still correctable, so a DUE never forms."""
+    flips = [((0, 0), 0x01), ((0, 1), 0x01)]      # same block, two rounds
+
+    _, policy, enc = _small_tree()
+    # without scrub: flips accumulate in memory
+    for idx, mask in flips:
+        enc["w0"] = _flip(enc["w0"], idx, mask)
+    _, stats = scrubber.scrub_tree(enc)
+    assert stats["due"] > 0 and stats["due_paths"] == ["w0"]
+
+    _, policy, enc = _small_tree()
+    # with a per-round scrub: each single is written back before the next
+    total_cor = 0
+    for idx, mask in flips:
+        enc["w0"] = _flip(enc["w0"], idx, mask)
+        enc, stats = scrubber.scrub_tree(enc)
+        assert stats["due"] == 0
+        total_cor += stats["corrected"]
+    assert total_cor == len(flips)
+    _, stats = scrubber.scrub_tree(enc)
+    assert stats["due"] == 0 and stats["corrected"] == 0
+
+
+def test_seeded_fault_stream_accumulates_without_scrub():
+    """Statistical twin of the targeted test: a seeded per-round fault
+    stream at a rate high enough to collide within 40 rounds produces
+    DUEs when left alone, while the scrubbed twin (same stream) ends its
+    run with zero residual DUE leaves."""
+    def run(scrub):
+        _, _, enc = _small_tree(seed=3)
+        s = scrubber.Scrubber(leaves_per_step=0)
+        for r in range(40):
+            enc = protection.inject_tree_device(
+                enc, 2e-4, jax.random.fold_in(jax.random.PRNGKey(17), r))
+            if scrub:
+                enc, st = s.scrub_weights(enc, n=-1)
+        _, final = scrubber.scrub_tree(enc)
+        return final["due"]
+
+    assert run(scrub=False) > 0
+    assert run(scrub=True) == 0
+
+
+# ---------------------------------------------------------------------------
+# MILR repair
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_rows(pt, rows, n_hits=2):
+    """Give each row in ``rows`` a DUE: n_hits flips in its first block."""
+    for r in rows:
+        for b in range(n_hits):
+            pt = _flip(pt, (r, b), 0x01)
+    return pt
+
+
+def test_milr_repair_reconstructs_rows_bitexact():
+    _, _, enc = _small_tree(seed=1)
+    kit = repair.build_repair_kit(enc, seed=9, n_samples=8)
+    assert "w0" in kit and kit.entries["w0"].solvable
+    clean = np.asarray(enc["w0"].enc).copy()
+    dirty = _corrupt_rows(enc["w0"], rows=(2, 11))
+    q, double = repair.due_block_mask(dirty)
+    assert double.any()
+    fixed, rep = repair.repair_leaf(dirty, kit.entries["w0"], tol=kit.tol)
+    assert rep["status"] == "repaired"
+    assert rep["rows"] == 2 and rep["due_blocks"] == 2
+    assert rep["residual"] is not None and rep["residual"] < 1e-9
+    # the reconstruction is BIT-exact, not merely close
+    assert np.array_equal(np.asarray(fixed.enc), clean)
+    assert fixed.scheme_id == "in-place"
+
+
+def test_milr_quarantines_when_underdetermined():
+    """More corrupted rows than calibration samples: the solve cannot be
+    determined, so the secded72 twin substitutes — and it decodes
+    bit-equal to the clean image."""
+    params, policy, enc = _small_tree(seed=2)
+    kit = repair.build_repair_kit(enc, seed=9, n_samples=4)
+    dirty = _corrupt_rows(enc["w2"], rows=tuple(range(6)))
+    fixed, rep = repair.repair_leaf(dirty, kit.entries["w2"], tol=kit.tol,
+                                    n_samples=4)
+    assert rep["status"] == "quarantined"
+    assert fixed.scheme_id == "secded72"
+    qc, dc = repair.due_block_mask(enc["w2"])
+    qf, df = repair.due_block_mask(fixed)
+    assert not df.any()
+    assert np.array_equal(qf, qc)
+
+
+def test_milr_unrecoverable_without_twin():
+    _, _, enc = _small_tree(seed=2)
+    kit = repair.build_repair_kit(enc, seed=9, n_samples=4, twins=False)
+    dirty = _corrupt_rows(enc["w2"], rows=tuple(range(6)))
+    same, rep = repair.repair_leaf(dirty, kit.entries["w2"], tol=kit.tol,
+                                   n_samples=4)
+    assert rep["status"] == "unrecoverable"
+    assert same is dirty
+
+
+def test_repair_kit_requires_clean_tree_and_repair_tree_reports():
+    _, _, enc = _small_tree(seed=4)
+    enc["w1"] = _corrupt_rows(enc["w1"], rows=(0,))
+    with pytest.raises(ValueError, match="clean tree"):
+        repair.build_repair_kit(enc)
+    _, _, clean_enc = _small_tree(seed=4)
+    kit = repair.build_repair_kit(clean_enc, seed=9, n_samples=8)
+    healed, reports = repair.repair_tree(enc, kit)
+    assert [r["path"] for r in reports] == ["w1"]
+    assert reports[0]["status"] == "repaired"
+    # a second pass over the healed tree finds nothing to report
+    _, again = repair.repair_tree(healed, kit)
+    assert again == []
+
+
+# ---------------------------------------------------------------------------
+# plan diff + rolling migration
+# ---------------------------------------------------------------------------
+
+
+def test_plan_diff_and_migrate_step_value_exact():
+    params, policy, enc = _small_tree(seed=6)
+    plan = policy.plan(params)
+    target = protection.ProtectionPolicy(
+        default_scheme="secded72",
+        predicate=lambda p, l: getattr(l, "ndim", 0) >= 2).plan(params)
+    diff = plan.diff(target)
+    assert set(diff.paths) == set(enc)
+    assert diff.summary()["n_scheme_changes"] == len(enc)
+    # secded72 buys its protection with stored check bytes
+    assert diff.summary()["stored_bytes_delta"] > 0
+    # promote ONE leaf; the rest keep their original scheme
+    first = diff.paths[0]
+    enc2, mixed_plan, recs = plan.migrate_step(enc, target, [first])
+    assert [r["path"] for r in recs] == [first]
+    assert recs[0]["from"] == "in-place" and recs[0]["to"] == "secded72"
+    assert recs[0]["due"] == 0
+    assert enc2[first].scheme_id == "secded72"
+    assert mixed_plan.leaves[first].scheme_id == "secded72"
+    others = [p for p in diff.paths if p != first]
+    assert all(enc2[p].scheme_id == "in-place" for p in others)
+    assert mixed_plan.diff(target).paths == tuple(others)
+    # transcode is value-exact: both trees decode to identical weights
+    dec_a = policy.decode_tree(enc, jnp.float32)
+    dec_b = policy.decode_tree(enc2, jnp.float32)
+    for k in params:
+        assert np.array_equal(np.asarray(dec_a[k]), np.asarray(dec_b[k]))
+    # unknown / non-protected paths are rejected loudly
+    with pytest.raises(KeyError):
+        plan.migrate_step(enc, target, ["nope"])
+
+
+def test_plan_diff_rejects_mismatched_leaf_sets():
+    params, policy, _ = _small_tree(seed=6)
+    plan = policy.plan(params)
+    other = policy.plan({k: params[k] for k in list(params)[:2]})
+    with pytest.raises(ValueError):
+        plan.diff(other)
+
+
+def test_migration_mid_traffic_tokens_match_and_recompiles_bounded(
+        plan_setup, smoke_params):
+    """Live in-place -> secded72 migration while serving: token streams
+    stay identical to the non-migrating twin (transcode is value-exact)
+    and the jitted serve step retraces at most once per promotion batch
+    plus the initial trace — no recompile churn beyond the planned
+    promotions."""
+    cfg, plan, enc = plan_setup(arch="deepseek-7b", backend="xla")
+    _, params = smoke_params("deepseek-7b")
+    target_policy = protection.ProtectionPolicy(default_scheme="secded72")
+    target = protected.make_plan(params, target_policy)
+    diff = plan.diff(target)
+    n_changed = len(diff.paths)
+    assert n_changed > 0
+    assert all(e.to_scheme == "secded72" for e in diff.entries
+               if e.scheme_changed)
+
+    kvp = dataclasses.replace(kvcache.get_kv_policy("in-place"),
+                              per_slot_flags=True)
+    step = jax.jit(protected.make_serve_step(cfg, plan=plan,
+                                             with_flags=True,
+                                             kv_policy=kvp))
+    waves = frontend.make_waves(seed=11, n_waves=2, wave_size=3,
+                                vocab=cfg.vocab, prompt_len=(3, 6),
+                                max_new=(2, 4), gap_steps=4)
+    _, _, r_base = frontend.run_burst(cfg, enc, plan=plan, waves=waves,
+                                      slots=2, max_len=32, kv_policy=kvp,
+                                      serve_step=step)
+    traces_before = step._cache_size()
+
+    fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,
+                                  max_len=32, kv_policy=kvp,
+                                  serve_step=step)
+    for req in waves:
+        fe.submit(dataclasses.replace(req, arrival_step=0))
+    mig = fe.start_migration(target, leaves_per_step=2, every=1)
+    fe.run()
+    assert fe.migration_done and mig.promoted == n_changed
+    assert fe.results == r_base            # migration never changes tokens
+    # every leaf of the live tree now decodes under the target scheme
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        fe.enc_params, is_leaf=protection.is_protected_tensor)
+        if protection.is_protected_tensor(l)]
+    assert leaves and all(l.scheme_id == "secded72" for l in leaves)
+    assert fe.plan.leaves[diff.paths[0]].scheme_id == "secded72"
+    # recompile bound: one retrace per promotion batch, nothing more
+    batches = -(-n_changed // 2)
+    assert step._cache_size() - traces_before <= batches
+    # telemetry: start + one promote record per leaf
+    migs = [e for e in fe.telemetry.events if e["event"] == "migrate"]
+    assert migs[0]["phase"] == "start" and migs[0]["pending"] == n_changed
+    promotes = [m for m in migs if m["phase"] == "promote"]
+    assert len(promotes) == n_changed
+    assert promotes[-1]["pending"] == 0
+    assert all(m["to"] == "secded72" for m in promotes)
+    summ = telemetry.summarize(fe.telemetry.events)
+    assert summ["healing"]["migrated_leaves"] == n_changed
+
+
+def test_migration_guard_rails(plan_setup, smoke_params):
+    cfg, plan, enc = plan_setup(arch="deepseek-7b", backend="xla")
+    _, params = smoke_params("deepseek-7b")
+    target = protected.make_plan(
+        params, protection.ProtectionPolicy(default_scheme="secded72"))
+    kvp = dataclasses.replace(kvcache.get_kv_policy("in-place"),
+                              per_slot_flags=True)
+    fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,
+                                  max_len=32, kv_policy=kvp)
+    fe.start_migration(target)
+    with pytest.raises(RuntimeError, match="already in flight"):
+        fe.start_migration(target)
+    fe2 = frontend.ServingFrontend(cfg, enc, slots=2, max_len=32,
+                                   kv_policy=kvp, serve_step=fe.serve_step)
+    with pytest.raises(ValueError, match="without a plan"):
+        fe2.start_migration(target)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: faulted serve loop heals to the bit-exact clean state
+# ---------------------------------------------------------------------------
+
+
+def _faulted_healing_run(cfg, plan, enc, kvp, step, kit, seed=5):
+    """One drained burst with KV + weight faults at 1e-3 and the full
+    healing loop on (scrub every step, MILR repair, final at-rest pass).
+    Returns (frontend, events, final-scrub stats)."""
+    col = telemetry.TelemetryCollector()
+    fe = frontend.ServingFrontend(cfg, enc, plan=plan, slots=2,
+                                  max_len=32, kv_policy=kvp,
+                                  serve_step=step, collector=col,
+                                  scrub_every=1, scrub_weight_leaves=2,
+                                  repair_kit=kit)
+    waves = frontend.make_waves(seed=11, n_waves=2, wave_size=3,
+                                vocab=cfg.vocab, prompt_len=(3, 6),
+                                max_new=(2, 4), gap_steps=4)
+    pending = sorted(waves, key=lambda r: (r.arrival_step, r.rid))
+    i = 0
+    kv_key = jax.random.PRNGKey(seed)
+    w_key = jax.random.PRNGKey(seed + 1_000_003)
+    for _ in range(10_000):
+        while i < len(pending) and pending[i].arrival_step <= fe.step_no:
+            fe.submit(pending[i])
+            i += 1
+        if i >= len(pending) and not fe.queue.peek() and fe.active == 0:
+            break
+        if fe.active > 0 and fe.step_no % 4 == 0:
+            tree = kvcache.as_protected_tree(fe.cache, fe.policy)
+            dirty = protection.inject_tree_device(
+                tree, 1e-3, jax.random.fold_in(kv_key, fe.step_no))
+            fe.cache = kvcache.from_protected_tree(fe.cache, dirty)
+            fe.enc_params = protection.inject_tree_device(
+                fe.enc_params, 1e-3, jax.random.fold_in(w_key, fe.step_no))
+        fe.step()
+    final = fe.final_scrub()
+    return fe, col.events, final
+
+
+@pytest.fixture(scope="module")
+def healing_rig(plan_setup):
+    cfg, plan, enc = plan_setup(arch="deepseek-7b", backend="xla")
+    kvp = dataclasses.replace(kvcache.get_kv_policy("in-place"),
+                              per_slot_flags=True)
+    step = jax.jit(protected.make_serve_step(cfg, plan=plan,
+                                             with_flags=True,
+                                             kv_policy=kvp))
+    kit = repair.build_repair_kit(enc, seed=5)
+    return cfg, plan, enc, kvp, step, kit
+
+
+def test_faulted_serve_loop_heals_to_bitexact_logits(healing_rig,
+                                                     plan_setup):
+    """The acceptance: with KV + weight faults injected at 1e-3
+    throughout, the serve loop drains, the final at-rest pass reports
+    ZERO residual DUE, and the healed weight tree produces logits
+    bit-exact with the never-faulted twin."""
+    cfg, plan, enc, kvp, step, kit = healing_rig
+    fe, events, final = _faulted_healing_run(cfg, plan, enc, kvp, step,
+                                             kit)
+    summ = telemetry.summarize(events)
+    assert summ["requests"]["finished"] == summ["requests"]["submitted"]
+    assert summ["pool"]["leaked_pages"] == 0
+    assert final["w_due"] == 0 and final["kv_due"] == 0
+    heal = summ["healing"]
+    assert heal["scrub_passes"] > 0
+    assert heal["w_corrected"] + final["w_corrected"] > 0
+    assert heal["final_due"] == {"w": 0, "kv": 0,
+                                 "w_corrected": final["w_corrected"],
+                                 "kv_corrected": final["kv_corrected"],
+                                 "w_repaired": final["w_repaired"]}
+    # healed tree vs clean twin: bit-exact logits through the SAME step
+    _, _, clean = plan_setup(arch="deepseek-7b", backend="xla")
+    cache = kvcache.init_paged_cache(cfg, batch=2, max_len=32,
+                                     policy=kvp,
+                                     n_pages=fe.allocator.n_pages)
+    tokens = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    logits_clean, _, _ = step(clean, cache, tokens, pos)
+    logits_healed, _, _ = step(fe.enc_params, cache, tokens, pos)
+    assert jnp.array_equal(logits_clean, logits_healed)
+
+
+def test_faulted_healing_run_is_bit_deterministic(healing_rig):
+    """Healing events are pure functions of the logical step + the seeded
+    fault streams: two identical runs agree on the FULL deterministic
+    view (scrub/repair/migrate/final events included) and every token."""
+    cfg, plan, enc, kvp, step, kit = healing_rig
+    fe1, ev1, fin1 = _faulted_healing_run(cfg, plan, enc, kvp, step, kit)
+    fe2, ev2, fin2 = _faulted_healing_run(cfg, plan, enc, kvp, step, kit)
+    assert fe1.results == fe2.results
+    assert fin1 == fin2
+    assert telemetry.deterministic_view(ev1) == \
+        telemetry.deterministic_view(ev2)
+    # the determinism contract: healing events carry NO wall fields,
+    # so they survive deterministic_view untouched
+    healing = [e for e in ev1 if e["event"] in
+               ("scrub", "scrub_final", "migrate", "repair")]
+    assert healing
+    for e in healing:
+        assert not any(k.endswith(("_s", "_ms")) for k in e)
+
+
+# ---------------------------------------------------------------------------
+# telemetry v2
+# ---------------------------------------------------------------------------
+
+
+def test_summary_schema_v2_and_v1_compat(tmp_path):
+    assert telemetry.SUMMARY_SCHEMA == "burst_sim/v2"
+    v2 = tmp_path / "v2.json"
+    summ = telemetry.summarize([])
+    assert summ["schema"] == "burst_sim/v2"
+    assert summ["healing"]["scrub_passes"] == 0
+    assert summ["healing"]["final_due"] is None
+    telemetry.write_summary(summ, str(v2))
+    assert telemetry.load_summary(str(v2)) == summ
+    # a pre-healing v1 summary still loads; healing is upgraded to None
+    v1 = tmp_path / "v1.json"
+    v1.write_text(json.dumps({"schema": "burst_sim/v1", "steps": 3}))
+    old = telemetry.load_summary(str(v1))
+    assert old["schema"] == "burst_sim/v1"
+    assert old["healing"] is None
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "burst_sim/v99"}))
+    with pytest.raises(ValueError, match="unsupported"):
+        telemetry.load_summary(str(bad))
+
+
+def test_healing_rollup_counts_events():
+    events = [
+        {"event": "scrub", "step": 0, "w_scanned": 2, "w_corrected": 3,
+         "w_due": 1, "kv_scanned": 4, "kv_corrected": 5, "kv_due": 0},
+        {"event": "scrub", "step": 2, "w_scanned": 2, "w_corrected": 0,
+         "w_due": 0, "kv_scanned": 4, "kv_corrected": 1, "kv_due": 0},
+        {"event": "repair", "step": 0, "path": "a", "status": "repaired"},
+        {"event": "repair", "step": 0, "path": "b",
+         "status": "quarantined"},
+        {"event": "migrate", "step": 1, "phase": "start", "pending": 2},
+        {"event": "migrate", "step": 1, "phase": "promote", "path": "a",
+         "pending": 1},
+        {"event": "migrate", "step": 2, "phase": "promote", "path": "b",
+         "pending": 0},
+        {"event": "scrub_final", "step": 9, "w_scanned": 9,
+         "w_corrected": 7, "w_repaired": 1, "w_due": 0, "kv_scanned": 2,
+         "kv_corrected": 0, "kv_due": 0},
+    ]
+    heal = telemetry.summarize(events)["healing"]
+    assert heal["scrub_passes"] == 2
+    assert heal["w_corrected"] == 3 and heal["kv_corrected"] == 6
+    assert heal["due_leaves_seen"] == 1
+    assert heal["repairs"] == {"repaired": 1, "quarantined": 1}
+    assert heal["migrated_leaves"] == 2
+    assert heal["final_due"] == {"w": 0, "kv": 0, "w_corrected": 7,
+                                 "kv_corrected": 0, "w_repaired": 1}

@@ -23,6 +23,15 @@ prompt and serves with the front-end's prefix cache on — the summary's
 ``sharing`` section then reports pages shared, CoW copies, and pages
 allocated vs what solo (no-sharing) admissions would have cost.
 
+``--abft`` runs a checksum-guarded twin (``plan.with_abft()`` — in-kernel
+ABFT over every protected matmul, see docs/abft.md) of every no-scrub
+cell and prices it in the summary's ``abft_slo`` section: p99 per-token
+ratio vs the unguarded twin, mismatch/clamp totals (zero here — the
+burst injects MEMORY faults, which ECC absorbs before the MXU sees
+them), and a token cross-check. The guarded cells' ``abft_mismatches`` /
+``clamp_hits`` step fields carry no wall suffix, so they sit inside the
+deterministic view and ABFT-enabled cells replay bit for bit.
+
 ``--smoke`` is the CI micro-run: 2 waves x 3 requests on the
 deepseek-7b smoke config — small enough to compile and drain on a CPU
 runner, large enough to exercise admission, queueing, eviction, and page
@@ -49,15 +58,18 @@ from repro.serving import frontend, kvcache, protected  # noqa: E402
 from repro.serving import telemetry  # noqa: E402
 
 
-def _cell_tag(policy: str, rate: float, scrub_every: int = 0) -> str:
+def _cell_tag(policy: str, rate: float, scrub_every: int = 0,
+              abft: bool = False) -> str:
     tag = f"{policy}_r{rate:g}"
-    return f"{tag}_scrub{scrub_every}" if scrub_every else tag
+    if scrub_every:
+        tag = f"{tag}_scrub{scrub_every}"
+    return f"{tag}_abft" if abft else tag
 
 
 def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
              slots, max_len, n_pages, seed, out_dir=None,
              prefix_sharing=False, scrub_every=0, repair=False,
-             weight_fault_rate=0.0):
+             weight_fault_rate=0.0, abft_plan=None):
     """(policy x rate) grid over one workload; shares one jitted serve
     step per policy across its rate axis (and across twin comparisons) so
     wall-clock cells differ by faults, not compile noise.
@@ -65,7 +77,13 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
     ``scrub_every > 0`` runs every (policy, rate) cell TWICE — a no-scrub
     baseline and a self-healing twin with the budgeted scrubber on (tag
     suffix ``_scrubN``) ending in a full at-rest pass — so the
-    ``scrub_slo`` section can price healing against its own baseline."""
+    ``scrub_slo`` section can price healing against its own baseline.
+
+    ``abft_plan`` (the plan with ``with_abft()`` applied) additionally
+    runs an ABFT-guarded twin of every no-scrub cell (tag suffix
+    ``_abft``, its own jitted step) so ``abft_slo`` can price the
+    checksum-guarded matmuls against the unguarded twin — same workload,
+    same faults, value paths identical by construction."""
     import dataclasses
     cells = {}
     for pol_name in kv_policies:
@@ -75,15 +93,24 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
         kvp = dataclasses.replace(kvp, per_slot_flags=True)
         step = jax.jit(protected.make_serve_step(
             cfg, plan=plan, with_flags=True, kv_policy=kvp))
+        step_abft = (jax.jit(protected.make_serve_step(
+            cfg, plan=abft_plan, with_flags=True, kv_policy=kvp))
+            if abft_plan is not None else None)
         for rate in fault_rates:
-            for scrub in ([0, scrub_every] if scrub_every else [0]):
-                tag = _cell_tag(pol_name, rate, scrub)
+            variants = [(s, False)
+                        for s in ([0, scrub_every] if scrub_every else [0])]
+            if abft_plan is not None:
+                variants.append((0, True))
+            for scrub, abft_on in variants:
+                tag = _cell_tag(pol_name, rate, scrub, abft_on)
                 tpath = (os.path.join(out_dir, f"telemetry_{tag}.jsonl")
                          if out_dir else None)
-                kw = dict(plan=plan, waves=waves, slots=slots,
+                kw = dict(plan=abft_plan if abft_on else plan,
+                          waves=waves, slots=slots,
                           max_len=max_len, n_pages=n_pages, kv_policy=kvp,
                           fault_rate=rate, fault_seed=seed,
-                          serve_step=step, prefix_sharing=prefix_sharing,
+                          serve_step=step_abft if abft_on else step,
+                          prefix_sharing=prefix_sharing,
                           scrub_every=scrub, repair=repair and scrub > 0,
                           # weight faults ride the cell's fault-rate axis:
                           # the rate-0 scrub twin stays fault-free so its
@@ -120,6 +147,7 @@ def run_grid(cfg, enc, plan, waves, *, kv_policies, fault_rates,
                                 "prefix_sharing": prefix_sharing,
                                 "scrub_every": scrub,
                                 "repair": repair and scrub > 0,
+                                "abft": abft_on,
                                 "weight_fault_rate": kw[
                                     "weight_fault_rate"],
                                 "bit_deterministic": deterministic}
@@ -213,6 +241,37 @@ def scrub_slo_section(cells, kv_policies, fault_rates, scrub_every):
     return rows
 
 
+def abft_slo_section(cells, kv_policies, fault_rates):
+    """Per (policy, rate): the ABFT-guarded twin priced against ITS OWN
+    unguarded baseline — p99 per-token ratio, the checksum/clamp totals
+    (both must be zero here: the burst injects MEMORY faults, which ECC
+    absorbs before the MXU ever sees them), and the token cross-check
+    (guarded and unguarded value paths are identical by construction)."""
+    rows = []
+    for pol in kv_policies:
+        for rate in fault_rates:
+            twin = cells.get(_cell_tag(pol, rate, abft=True))
+            if twin is None:
+                continue
+            base = cells[_cell_tag(pol, rate)]["summary"]
+            summ = twin["summary"]
+            b99 = base["per_token_ms"]["p99"]
+            a99 = summ["per_token_ms"]["p99"]
+            rows.append({
+                "kv_policy": pol, "fault_rate": rate,
+                "p99_per_token_ms": a99,
+                "noabft_p99_per_token_ms": b99,
+                "p99_ratio": (a99 / b99) if (a99 and b99) else None,
+                "abft_mismatches": summ["abft"]["mismatches_total"],
+                "clamp_hits": summ["abft"]["clamp_hits_total"],
+                "leaked_pages": summ["pool"]["leaked_pages"],
+                "bit_deterministic": summ["cell"]["bit_deterministic"],
+                "tokens_match_noabft":
+                    twin["results"] == cells[_cell_tag(pol, rate)]["results"],
+            })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -252,6 +311,10 @@ def main(argv=None):
     ap.add_argument("--weight-fault-rate", type=float, default=0.0,
                     help="per-bit weight fault rate injected into the "
                          "scrub twins on the KV injection cadence")
+    ap.add_argument("--abft", action="store_true",
+                    help="run an ABFT-guarded twin of every no-scrub cell "
+                         "(plan.with_abft(): in-kernel checksum-guarded "
+                         "matmuls) and price it in the abft_slo section")
     ap.add_argument("--out-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -292,7 +355,8 @@ def main(argv=None):
                      seed=args.seed, out_dir=args.out_dir,
                      prefix_sharing=sharing, scrub_every=args.scrub_every,
                      repair=args.repair,
-                     weight_fault_rate=args.weight_fault_rate)
+                     weight_fault_rate=args.weight_fault_rate,
+                     abft_plan=plan.with_abft() if args.abft else None)
     out = {
         "schema": telemetry.SUMMARY_SCHEMA,
         "arch": cfg.name,
@@ -304,11 +368,13 @@ def main(argv=None):
                      "prefix_sharing": sharing,
                      "scrub_every": args.scrub_every,
                      "repair": args.repair,
-                     "weight_fault_rate": args.weight_fault_rate},
+                     "weight_fault_rate": args.weight_fault_rate,
+                     "abft": args.abft},
         "cells": {tag: c["summary"] for tag, c in cells.items()},
         "slo": slo_section(cells, kv_policies, fault_rates),
         "scrub_slo": scrub_slo_section(cells, kv_policies, fault_rates,
                                        args.scrub_every),
+        "abft_slo": abft_slo_section(cells, kv_policies, fault_rates),
     }
     for row in out["slo"]:
         ratio = row["p99_ratio"]
@@ -324,6 +390,14 @@ def main(argv=None):
               + (f"p99 ratio {ratio:.3f}x vs no-scrub" if ratio is not None
                  else "no latency samples")
               + (f", final DUE {fd['w']}w/{fd['kv']}kv" if fd else ""))
+    for row in out["abft_slo"]:
+        ratio = row["p99_ratio"]
+        print(f"[burst] ABFT SLO {row['kv_policy']} @rate "
+              f"{row['fault_rate']}: "
+              + (f"p99 ratio {ratio:.3f}x vs unguarded" if ratio is not None
+                 else "no latency samples")
+              + f", mismatches {row['abft_mismatches']}, tokens match "
+              + str(row["tokens_match_noabft"]))
     if args.out_dir:
         path = os.path.join(args.out_dir, "summary.json")
         telemetry.write_summary(out, path)

@@ -8,7 +8,10 @@ one jit compile per (model, scheme), then the whole (trial x rate) sweep
 executes inside a single device program — Table 2 in seconds instead of one
 host round-trip per cell.  ``--batch scan`` trades the vmap grid's speed for
 constant memory; ``--json`` dumps every ``CampaignResult`` for BENCH_*.json
-artifacts.  See ``docs/table2.md`` for the full reproduction walkthrough.
+artifacts; ``--compute`` adds the ABFT compute-fault coverage rows
+(accumulator/decoded-weight corruption detected by the fused kernel's
+checksums — docs/abft.md).  See ``docs/table2.md`` for the full
+reproduction walkthrough.
 """
 from __future__ import annotations
 
@@ -27,10 +30,14 @@ SCHEMES = ("faulty", "parity-zero", "secded72", "in-place")
 
 
 def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
-        batch="scan", json_path=None, policy=None):
+        batch="scan", json_path=None, policy=None, compute=False):
     """``policy`` (a ``protection.POLICY_PRESETS`` name) adds one extra
     campaign row under that mixed-scheme preset — the per-layer
-    heterogeneous deployment the ProtectionPlan serves."""
+    heterogeneous deployment the ProtectionPlan serves. ``compute`` adds
+    the COMPUTE-fault rows (``protection.compute_campaign``, targets
+    ``acc`` and ``wdec``): instead of accuracy drop under memory faults,
+    they report the in-kernel ABFT check's detection coverage of silent
+    matmul corruption — the fault class ECC cannot see (docs/abft.md)."""
     results = {}
     campaigns = {}
     rows = list(SCHEMES)
@@ -54,6 +61,19 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
             results[(name, row_id)] = (res.space_overhead, res.row(),
                                        res.clean)
             rows = list(SCHEMES) + [row_id]
+        if compute:
+            # per-element perturb rates over the probe surface — a CNN's
+            # only matmul leaf is its tiny classifier head, so the memory
+            # grid's rates would inject ~nothing. Not merged into
+            # ``results``: these rows report detection coverage, not
+            # accuracy drop.
+            crates = (1e-3, 1e-2, 1e-1)
+            for j, tgt in enumerate(("acc", "wdec")):
+                res = protection.compute_campaign(
+                    params, rates=crates, trials=trials, batch=batch,
+                    key=jax.random.PRNGKey(100 + j), target=tgt,
+                    probe_m=64)
+                campaigns[(name, f"compute:{tgt}")] = res
         clean = campaigns[(name, SCHEMES[0])].clean
         if verbose:
             report = protection.coverage(params, eval_policy("in-place"))
@@ -75,6 +95,14 @@ def run(models=("resnet18",), trials=5, rates=RATES, verbose=True,
                                  for d, s in res.row())
                 print(f"# {scheme:11s} {res.space_overhead * 100:4.1f}%  "
                       f"{cells}")
+            if compute:
+                for tgt in ("acc", "wdec"):
+                    res = campaigns[(name, f"compute:{tgt}")]
+                    cov = " ".join(f"{r:.0e}:{m * 100:6.2f}%"
+                                   for r, m in zip(res.rates, res.mean()))
+                    print(f"# abft-coverage target={tgt}: {cov}  "
+                          f"(checksum false positives at rate 0: "
+                          f"{res.clean:.0f})")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({f"{m}/{s}": c.to_dict()
@@ -97,10 +125,15 @@ def main(argv=None):
                     choices=sorted(protection.POLICY_PRESETS),
                     help="extra row: campaign under a named mixed-scheme "
                          "ProtectionPlan preset")
+    ap.add_argument("--compute", action="store_true",
+                    help="extra rows: ABFT detection coverage of injected "
+                         "COMPUTE faults (accumulator SDCs and decoded-"
+                         "weight corruption), per target")
     args = ap.parse_args(argv)
     t0 = time.time()
     results = run(models=tuple(args.models), trials=args.trials,
-                  batch=args.batch, json_path=args.json, policy=args.policy)
+                  batch=args.batch, json_path=args.json, policy=args.policy,
+                  compute=args.compute)
     us = (time.time() - t0) * 1e6
     for (name, scheme), (ovh, row, clean) in results.items():
         drops = "/".join(f"{d * 100:.2f}" for d, _ in row)

@@ -11,8 +11,9 @@ path AND the int8 requantize-epilogue path, times fused page-attention
 (decode-at-use over the protected KV cache) against its decode-then-attend
 reference per KV scheme, times the page-chunked online-softmax kernel
 against the whole-strip kernel at long contexts (with the strip kernel's
-VMEM crossover and the chunked-vs-fp64-oracle error), and writes the
-``bench_kernels/v5`` artifact that
+VMEM crossover and the chunked-vs-fp64-oracle error), re-times each path's
+winning tiles with in-kernel ABFT checksums on (the overhead rows), and
+writes the ``bench_kernels/v6`` artifact that
 ``protection.AutotuneTable`` consumes — per-leaf backend AND tile choices
 (float ``tiles`` + ``int8_tiles``) are then reproducible from a checked-in
 file instead of call-site defaults (``--tiles-smoke`` shrinks the sweep for
@@ -127,7 +128,10 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
     sweep (``int8_tiles`` + ``fused_int8_us`` — the ``bench_kernels/v3``
     fields; the epilogue always runs full-K tiles, so only (bm, bn) sweep).
     Also times the XLA references: decode-then-matmul as ``fused_ref_us``
-    and decode-then-matmul-then-requantize as ``int8_ref_us``."""
+    and decode-then-matmul-then-requantize as ``int8_ref_us``; and the
+    ABFT-on twins at each path's winning tiles (``fused_abft_us`` /
+    ``fused_int8_abft_us`` — the ``bench_kernels/v6`` fields) so the
+    in-kernel checksum overhead is priced next to the unguarded row."""
     from repro.kernels import ref
     from repro.kernels.ecc_qmatmul import ecc_qmatmul
     rng = np.random.default_rng(11)
@@ -149,6 +153,12 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
         e["fused_us"] = round(best_us, 1)
         e["fused_ref_us"] = round(
             _time(jax.jit(ref.ecc_qmatmul_ref), a, enc, reps=reps), 1)
+        # ABFT twin at the winning tiles: same call, checksum rows/cols
+        # verified in-kernel. Return the full (out, (rows, col_mm)) tuple
+        # so XLA can't dead-code the checksum outputs away.
+        f_ab = jax.jit(lambda a_, e_, t=best_tiles: ecc_qmatmul(
+            a_, e_, bm=t[0], bn=t[1], bk=t[2], with_abft=True))
+        e["fused_abft_us"] = round(_time(f_ab, a, enc, reps=reps), 1)
         # int8 requantize epilogue: int32 acc * (a_scale*w_scale) -> bf16
         best_us, best_tiles = None, None
         for bm, bn in sorted({(t[0], t[1]) for t in tile_sweep}):
@@ -159,6 +169,10 @@ def bench_fused_tiles(entries, m=128, tile_sweep=TILE_SWEEP, reps=3):
                 best_us, best_tiles = us, (bm, bn, 0)
         e["int8_tiles"] = list(best_tiles)
         e["fused_int8_us"] = round(best_us, 1)
+        f_ab = jax.jit(lambda a_, e_, s_, t=best_tiles: ecc_qmatmul(
+            a_, e_, w_scale, a_scale=s_, bm=t[0], bn=t[1], with_abft=True))
+        e["fused_int8_abft_us"] = round(
+            _time(f_ab, a, enc, a_scale, reps=reps), 1)
         ref_int8 = jax.jit(lambda a_, e_, s_: (
             ref.ecc_qmatmul_ref(a_, e_).astype(jnp.float32) *
             (s_ * w_scale)).astype(jnp.bfloat16))
@@ -296,7 +310,7 @@ def bench_chunked_attention(lengths=ATTENTION_LONG_LENGTHS,
 def write_bench_kernels(path, entries=None, *, tile_sweep=TILE_SWEEP,
                         attention=None, attention_long=None,
                         crossover=None) -> dict:
-    """Write BENCH_kernels.json in the ``bench_kernels/v5`` schema that
+    """Write BENCH_kernels.json in the ``bench_kernels/v6`` schema that
     ``protection.AutotuneTable`` loads (validated by round-tripping through
     it before writing)."""
     platform = jax.devices()[0].platform
@@ -329,7 +343,7 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-shape xla-vs-pallas decode + "
                          "fused-tile + paged-attention table "
-                         "(BENCH_kernels.json, bench_kernels/v5)")
+                         "(BENCH_kernels.json, bench_kernels/v6)")
     ap.add_argument("--tiles-smoke", action="store_true",
                     help="tiny fused-tile sweep + short attention lengths "
                          "(CI smoke; interpret mode)")
@@ -356,8 +370,10 @@ def main(argv=None):
             print(f"autotune_decode_{e['shape'][0]}x{e['shape'][1]},"
                   f"xla={e['xla_us']:.0f}us,pallas={e['pallas_us']:.0f}us,"
                   f"best={e['best']},tiles={tiles},"
-                  f"fused={e.get('fused_us', 0):.0f}us,int8_tiles={i8},"
-                  f"fused_int8={e.get('fused_int8_us', 0):.0f}us")
+                  f"fused={e.get('fused_us', 0):.0f}us,"
+                  f"abft={e.get('fused_abft_us', 0):.0f}us,int8_tiles={i8},"
+                  f"fused_int8={e.get('fused_int8_us', 0):.0f}us,"
+                  f"int8_abft={e.get('fused_int8_abft_us', 0):.0f}us")
         for r in payload.get("attention", ()):
             shp = "x".join(str(t) for t in r["shape"])
             print(f"paged_attention_{shp}_{r['scheme']},"

@@ -44,11 +44,18 @@ def quantize_bias(b: jnp.ndarray, scale: jnp.ndarray):
     return q, scale
 
 
-def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, a_scale, w_scale,
-                preferred=jnp.int32) -> jnp.ndarray:
-    """Quantized matmul with int32 accumulation -> float output."""
-    acc = jax.lax.dot_general(
+def int8_acc(a_q: jnp.ndarray, w_q: jnp.ndarray,
+             preferred=jnp.int32) -> jnp.ndarray:
+    """The exact integer accumulator of :func:`int8_matmul` — split out so
+    ABFT checksum verification can inspect it before the rescale."""
+    return jax.lax.dot_general(
         a_q.astype(jnp.int8), w_q.astype(jnp.int8),
         dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=preferred)
+
+
+def int8_matmul(a_q: jnp.ndarray, w_q: jnp.ndarray, a_scale, w_scale,
+                preferred=jnp.int32) -> jnp.ndarray:
+    """Quantized matmul with int32 accumulation -> float output."""
+    acc = int8_acc(a_q, w_q, preferred)
     return acc.astype(jnp.float32) * (a_scale * w_scale)

@@ -45,6 +45,24 @@ Three activation paths share the kernel:
 over all weight blocks. Counting happens inside the same predicated block
 as the decode itself (first M tile only), so the flag totals double as a
 runtime witness that each weight tile decodes exactly once per (N, K) tile.
+
+``with_abft=True`` adds algorithm-based fault tolerance over the COMPUTE
+itself (FT-CNN-style checksums): for every (BM, BN) partial product the
+kernel verifies the accumulator's row sums against ``a @ rowsum(w)`` and
+its column sums against ``colsum(a) @ w`` — the classic ABFT pair, done
+per K-tile so multi-``kk`` grids verify each partial dot. On the int8 and
+requantize paths both sides live in int32 modular arithmetic, so the
+comparison is BIT-EXACT (zero false positives by construction); the float
+path is tolerance-gated (``ABFT_RTOL`` against an |a|·|w| checksum scale,
+so reordering noise never fires but exponent-scale SDCs do). Mismatch
+counts come back per output row (per-slot attributable: decode M = batch)
+plus a column-check total. ``clamp=<absmax>`` fuses Geissler-style
+activation-range supervision into the same epilogue: the f32 result is
+clipped to ``[-clamp, +clamp]`` and out-of-range hits are counted per row
+alongside the ABFT mismatches. Both knobs default off and the disabled
+kernel is bit-identical to the unguarded one. ``fault_bits`` XORs a bit
+pattern into accumulator element (0, 0) of the first tile — a
+deterministic in-kernel SDC for tests and campaign calibration.
 """
 from __future__ import annotations
 
@@ -58,22 +76,44 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import ecc
 from . import ecc_decode
 
+# float-path ABFT tolerance: checksum reordering noise is ~K * eps(f32)
+# relative to the |a|·|w| scale (~1e-5 at K=128); 1e-4 leaves a decade of
+# margin while still firing on any exponent-scale corruption.
+ABFT_RTOL = 1e-4
+ABFT_ATOL = 1e-6
 
-def _kernel(*refs, dims, path, has_bias):
+
+def _kernel(*refs, dims, path, has_bias, has_clamp, with_abft, fault_bits):
     m, n, k = dims
-    if path == "requant":
-        (a_ref, w_ref, scale_ref, ascale_ref) = refs[:4]
-        bias_ref = refs[4] if has_bias else None
-        rowmask_ref, cols_ref, out_ref, flags_ref, wdec_ref = refs[4 + has_bias:]
-    else:
-        (a_ref, w_ref, scale_ref, rowmask_ref, cols_ref,
-         out_ref, flags_ref, wdec_ref) = refs
+    track = with_abft or has_clamp
+    it = iter(refs)
+    a_ref, w_ref, scale_ref = next(it), next(it), next(it)
+    ascale_ref = next(it) if path == "requant" else None
+    bias_ref = next(it) if has_bias else None
+    clamp_ref = next(it) if has_clamp else None
+    rowmask_ref, cols_ref = next(it), next(it)
+    out_ref, flags_ref = next(it), next(it)
+    abft_rows_ref = next(it) if track else None
+    abft_cols_ref = next(it) if track else None
+    wdec_ref = next(it)
     j, i, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     bm, bk = a_ref.shape
 
     @pl.when(jnp.logical_and(i == 0, kk == 0))
     def _init_flags():
         flags_ref[...] = jnp.zeros_like(flags_ref)
+
+    if track:
+        # per-(j, i) row counters accumulate over kk; the column-check
+        # counter is per j like the decode flags (j outermost -> both
+        # revisit patterns are consecutive, TPU-legal accumulation).
+        @pl.when(kk == 0)
+        def _init_abft_rows():
+            abft_rows_ref[...] = jnp.zeros_like(abft_rows_ref)
+
+        @pl.when(jnp.logical_and(i == 0, kk == 0))
+        def _init_abft_cols():
+            abft_cols_ref[...] = jnp.zeros_like(abft_cols_ref)
 
     # decode ONCE per (N, K) tile — the first M tile fills this K-strip slot
     # of the VMEM scratch, every later M tile reuses it. Flag counting lives
@@ -103,42 +143,136 @@ def _kernel(*refs, dims, path, has_bias):
     # mask activation columns past K so edge tiles contribute nothing
     kcol = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1)
     a = jnp.where(kcol < k, a, jnp.zeros_like(a))
+    if with_abft:
+        # also zero activation rows past M: decoded weight bytes are always
+        # finite int8 so garbage columns cancel in the checksum identities,
+        # but float-path activation padding could be NaN and would poison
+        # the column check. Valid output rows are unaffected.
+        mrow = (i * bm +
+                jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)) < m
+        a = jnp.where(mrow, a, jnp.zeros_like(a))
     w_q = wdec_ref[pl.ds(kk * bk, bk), :]
+    dn = (((1,), (0,)), ((), ()))
+
+    rowv = (i * bm +
+            jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)) < m
+    bn_cur = out_ref.shape[-1]
+    colv = (j * bn_cur +
+            jax.lax.broadcasted_iota(jnp.int32, (1, bn_cur), 1)) < n
+
+    def _flip(partial):
+        """XOR fault_bits into element (0, 0) of the first tile's partial
+        product — a deterministic injected SDC for tests/calibration."""
+        hit = jnp.logical_and(
+            jax.lax.broadcasted_iota(jnp.int32, partial.shape, 0) == 0,
+            jax.lax.broadcasted_iota(jnp.int32, partial.shape, 1) == 0)
+        hit = jnp.logical_and(
+            hit, jnp.logical_and(j == 0, jnp.logical_and(i == 0, kk == 0)))
+        if partial.dtype == jnp.int32:
+            return jnp.where(hit, partial ^ jnp.int32(fault_bits), partial)
+        bits = jax.lax.bitcast_convert_type(partial, jnp.int32)
+        flipped = jax.lax.bitcast_convert_type(
+            bits ^ jnp.int32(fault_bits), partial.dtype)
+        return jnp.where(hit, flipped, partial)
+
+    def _abft(partial, a_chk, w_chk, exact):
+        """Verify this K-tile's partial product against the ABFT pair:
+        row sums vs a @ rowsum(w), column sums vs colsum(a) @ w."""
+        dt = partial.dtype
+        rs_acc = jnp.sum(partial, axis=1, keepdims=True)              # (BM,1)
+        rs_ref = jax.lax.dot_general(
+            a_chk, jnp.sum(w_chk, axis=1, keepdims=True), dn,
+            preferred_element_type=dt)
+        cs_acc = jnp.sum(partial, axis=0, keepdims=True)              # (1,BN)
+        cs_ref = jax.lax.dot_general(
+            jnp.sum(a_chk, axis=0, keepdims=True), w_chk, dn,
+            preferred_element_type=dt)
+        if exact:
+            row_bad = rs_acc != rs_ref
+            col_bad = cs_acc != cs_ref
+        else:
+            a_abs, w_abs = jnp.abs(a_chk), jnp.abs(w_chk)
+            rs_sc = jax.lax.dot_general(
+                a_abs, jnp.sum(w_abs, axis=1, keepdims=True), dn,
+                preferred_element_type=dt)
+            cs_sc = jax.lax.dot_general(
+                jnp.sum(a_abs, axis=0, keepdims=True), w_abs, dn,
+                preferred_element_type=dt)
+            row_bad = jnp.abs(rs_acc - rs_ref) > ABFT_ATOL + ABFT_RTOL * rs_sc
+            col_bad = jnp.abs(cs_acc - cs_ref) > ABFT_ATOL + ABFT_RTOL * cs_sc
+        abft_rows_ref[0, :, 0:1] += jnp.logical_and(
+            row_bad, rowv).astype(jnp.int32)
+        abft_cols_ref[0, 0] += jnp.sum(
+            jnp.logical_and(col_bad, colv).astype(jnp.int32))
+
+    def _clamp(res):
+        """Geissler-style range supervision: clip the f32 epilogue output
+        to ±clamp and count (valid-masked) out-of-range hits per row."""
+        c = clamp_ref[0, 0]
+        hit = jnp.abs(res) > c
+        hit = jnp.logical_and(hit, jnp.logical_and(rowv, colv))
+        abft_rows_ref[0, :, 1:2] += jnp.sum(
+            hit.astype(jnp.int32), axis=1, keepdims=True)
+        return jnp.clip(res, -c, c)
 
     if path == "float":
         w = (w_q.astype(jnp.float32) * scale_ref[0, 0]).astype(a.dtype)
+        partial = jax.lax.dot_general(
+            a, w, dimension_numbers=dn, preferred_element_type=jnp.float32)
+        if fault_bits:
+            partial = _flip(partial)
+        if with_abft:
+            _abft(partial, a.astype(jnp.float32), w.astype(jnp.float32),
+                  exact=False)
 
         @pl.when(kk == 0)
         def _init():
             out_ref[...] = jnp.zeros_like(out_ref)
 
-        out_ref[...] += jax.lax.dot_general(
-            a, w, dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        out_ref[...] += partial
+        if has_clamp:
+            @pl.when(kk == pl.num_programs(2) - 1)
+            def _clamp_final():
+                out_ref[...] = _clamp(out_ref[...])
     elif path == "int8":
+        partial = jax.lax.dot_general(
+            a, w_q, dimension_numbers=dn, preferred_element_type=jnp.int32)
+        if fault_bits:
+            partial = _flip(partial)
+        if with_abft:
+            _abft(partial, a.astype(jnp.int32), w_q.astype(jnp.int32),
+                  exact=True)
+
         @pl.when(kk == 0)
         def _init():
             out_ref[...] = jnp.zeros_like(out_ref)
 
-        out_ref[...] += jax.lax.dot_general(
-            a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
+        out_ref[...] += partial
     else:  # requant epilogue: full-K tile (single kk), exact int32 acc
         acc = jax.lax.dot_general(
-            a, w_q, dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
+            a, w_q, dimension_numbers=dn, preferred_element_type=jnp.int32)
+        if fault_bits:
+            acc = _flip(acc)
+        if with_abft:
+            _abft(acc, a.astype(jnp.int32), w_q.astype(jnp.int32),
+                  exact=True)
         if has_bias:
             acc = acc + bias_ref[...]  # (1, BN) int32, accumulator scale
         s = ascale_ref[...] * scale_ref[0, 0]  # (BM, 1) f32
-        out_ref[...] = (acc.astype(jnp.float32) * s).astype(out_ref.dtype)
+        res = acc.astype(jnp.float32) * s
+        if has_clamp:
+            res = _clamp(res)
+        out_ref[...] = res.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
-                                             "with_flags", "out_dtype"))
+                                             "with_flags", "out_dtype",
+                                             "with_abft", "fault_bits"))
 def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
                 a_scale=None, bias=None, out_dtype=None,
                 bm: int = 128, bn: int = 128, bk: int = 0,
-                interpret: bool = True, with_flags: bool = False):
+                interpret: bool = True, with_flags: bool = False,
+                with_abft: bool = False, clamp=None, fault_bits: int = 0):
     """``a (M,K) @ decode(w_enc (K,N) uint8)``, decode fused into the matmul.
 
     int8 ``a``   -> (M, N) int32 accumulator (``w_scale`` ignored).
@@ -155,6 +289,19 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
                     keep the accumulation order identical to one XLA dot.
     with_flags   -> also return ``flags (2,) int32``: (#single-corrected,
                     #double-detected) over all weight blocks.
+    with_abft    -> verify ABFT checksums in-kernel (bit-exact on the int8/
+                    requant paths, tolerance-gated on float). Adds a final
+                    return value ``(rows, col_mm)``: ``rows (M, 2) int32``
+                    is per-output-row (row-checksum mismatches, clamp hits)
+                    and ``col_mm`` the scalar column-checksum mismatch
+                    count.
+    clamp        -> f32 absmax bound: the requantize/float epilogue output
+                    is clipped to ``[-clamp, +clamp]`` with hits counted in
+                    the ABFT rows channel (returned even when ``with_abft``
+                    is False; the mismatch column is then all zero). Not
+                    supported on the raw int8-accumulator path.
+    fault_bits   -> nonzero XORs the pattern into accumulator element
+                    (0, 0) of the first tile (deterministic injected SDC).
 
     Tiles need not divide (M, N, K) — edge tiles are masked. N % 8 == 0 is
     structural (ECC blocks run along N). The first M tile decodes each
@@ -178,6 +325,11 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
     if bias is not None and not requant:
         raise ValueError("bias is only fused by the requantize epilogue")
     path = "float" if float_path else ("requant" if requant else "int8")
+    has_clamp = clamp is not None
+    if has_clamp and path == "int8":
+        raise ValueError("clamp guards the f32 epilogue output; the raw "
+                         "int8-accumulator path has none")
+    track = with_abft or has_clamp
     if bk == 0 or requant:
         bk = k  # full-K tile: one dot per output tile, XLA-identical order
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
@@ -192,7 +344,8 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
     else:
         out_dt = jnp.dtype(out_dtype) if out_dtype is not None else jnp.bfloat16
     kern = functools.partial(_kernel, dims=(m, n, k), path=path,
-                             has_bias=bias is not None)
+                             has_bias=bias is not None, has_clamp=has_clamp,
+                             with_abft=with_abft, fault_bits=int(fault_bits))
 
     inputs = [a, w_enc, scale]
     in_specs = [
@@ -210,29 +363,50 @@ def ecc_qmatmul(a: jnp.ndarray, w_enc: jnp.ndarray, w_scale=None, *,
         if bias is not None:
             inputs.append(jnp.asarray(bias, jnp.int32).reshape(1, n))
             in_specs.append(pl.BlockSpec((1, bn), lambda j, i, kk: (0, j)))
+    if has_clamp:
+        inputs.append(jnp.asarray(clamp, jnp.float32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda j, i, kk: (0, 0)))
     inputs += [jnp.asarray(ecc.ROWMASK64), jnp.asarray(ecc.COLS64_BYBYTE)]
     in_specs += [
         pl.BlockSpec((7, 8), lambda j, i, kk: (0, 0)),
         pl.BlockSpec((8, 8), lambda j, i, kk: (0, 0)),
     ]
 
-    out, flags = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
+        pl.BlockSpec((1, 2), lambda j, i, kk: (j, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), out_dt),
+        jax.ShapeDtypeStruct((grid[0], 2), jnp.int32),
+    ]
+    if track:
+        out_specs += [
+            pl.BlockSpec((1, bm, 2), lambda j, i, kk: (j, i, 0)),
+            pl.BlockSpec((1, 2), lambda j, i, kk: (j, 0)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((grid[0], m, 2), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0], 2), jnp.int32),
+        ]
+
+    res = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
-            pl.BlockSpec((1, 2), lambda j, i, kk: (j, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), out_dt),
-            jax.ShapeDtypeStruct((grid[0], 2), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((grid[2] * bk, bn), jnp.int8)],
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(*inputs)
+    out, flags = res[0], res[1]
+    outs = (out,)
     if with_flags:
-        return out, flags.sum(axis=0)
-    return out
+        outs += (flags.sum(axis=0),)
+    if track:
+        # per-row (mismatch, clamp-hit) counts summed over N strips, plus
+        # the column-check mismatch total (not row-attributable).
+        outs += ((res[2].sum(axis=0), res[3].sum(axis=0)[0]),)
+    return outs if len(outs) > 1 else out

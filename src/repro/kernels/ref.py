@@ -33,6 +33,53 @@ def ecc_qmatmul_ref(a_q: jnp.ndarray, w_enc: jnp.ndarray) -> jnp.ndarray:
         preferred_element_type=jnp.int32)
 
 
+def abft_counts(a: jnp.ndarray, w: jnp.ndarray, acc: jnp.ndarray, *,
+                rtol: float = 1e-4, atol: float = 1e-6):
+    """ABFT checksum verification of ``acc`` against ``a @ w`` — the XLA
+    mirror of the in-kernel check (``ecc_qmatmul(..., with_abft=True)``).
+
+    Verifies the classic pair: ``acc`` row sums vs ``a @ rowsum(w)`` and
+    column sums vs ``colsum(a) @ w``. Integer inputs compare BIT-EXACTLY
+    (int32 modular arithmetic distributes, so reassociation is free);
+    float inputs are tolerance-gated against an |a|·|w| checksum scale.
+
+    a:   (M, K), w: (K, N), acc: (M, N) = the accumulator under test.
+    -> ``(row_bad (M,) int32, col_bad (N,) int32)`` 0/1 mismatch flags.
+    """
+    dn = (((1,), (0,)), ((), ()))
+    exact = jnp.issubdtype(acc.dtype, jnp.integer)
+    dt = acc.dtype if exact else jnp.float32
+    a_c, w_c = a.astype(dt), w.astype(dt)
+    rs_acc = jnp.sum(acc, axis=1, keepdims=True)
+    rs_ref = jax.lax.dot_general(a_c, jnp.sum(w_c, axis=1, keepdims=True),
+                                 dn, preferred_element_type=dt)
+    cs_acc = jnp.sum(acc, axis=0, keepdims=True)
+    cs_ref = jax.lax.dot_general(jnp.sum(a_c, axis=0, keepdims=True), w_c,
+                                 dn, preferred_element_type=dt)
+    if exact:
+        row_bad, col_bad = rs_acc != rs_ref, cs_acc != cs_ref
+    else:
+        a_abs, w_abs = jnp.abs(a_c), jnp.abs(w_c)
+        rs_sc = jax.lax.dot_general(
+            a_abs, jnp.sum(w_abs, axis=1, keepdims=True), dn,
+            preferred_element_type=dt)
+        cs_sc = jax.lax.dot_general(
+            jnp.sum(a_abs, axis=0, keepdims=True), w_abs, dn,
+            preferred_element_type=dt)
+        row_bad = jnp.abs(rs_acc - rs_ref) > atol + rtol * rs_sc
+        col_bad = jnp.abs(cs_acc - cs_ref) > atol + rtol * cs_sc
+    return (row_bad[:, 0].astype(jnp.int32), col_bad[0, :].astype(jnp.int32))
+
+
+def clamp_counts(y: jnp.ndarray, clamp):
+    """Activation-range supervision oracle: clip ``y`` to ``[-c, +c]`` and
+    count out-of-range hits per row. -> ``(clipped, hits (M,) int32)``."""
+    c = jnp.asarray(clamp, jnp.float32)
+    hits = jnp.sum((jnp.abs(y.astype(jnp.float32)) > c).astype(jnp.int32),
+                   axis=-1)
+    return jnp.clip(y, -c.astype(y.dtype), c.astype(y.dtype)), hits
+
+
 def throttle_ref(q_blocks: jnp.ndarray) -> jnp.ndarray:
     """(nblk, 8) int8 -> WOT-throttled (positions 0..6 clamped to [-64, 63])."""
     pos = jnp.arange(ecc.BLOCK_BYTES)

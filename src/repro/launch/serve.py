@@ -7,7 +7,15 @@ batched requests — faults are corrected on the fly.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
       --fault-rate 1e-4 --tokens 32 [--scheme in-place] [--backend xla] \
-      [--policy attn-inplace-mlp-secded] [--autotune BENCH_kernels.json]
+      [--policy attn-inplace-mlp-secded] [--autotune BENCH_kernels.json] \
+      [--abft] [--act-clamp]
+
+``--abft`` turns on in-kernel ABFT checksum verification for every
+protected matmul (compute-fault detection next to the memory-fault ECC
+flags; see docs/abft.md); ``--act-clamp`` calibrates per-leaf activation
+absmax bounds from a seeded batch and fuses the Geissler-style range
+clamps into the same epilogue. Both report through the ``*_abft`` flags
+channel after the run.
 
 ``--policy`` serves under a named mixed-scheme preset: the materialized
 ``ProtectionPlan`` decides scheme and backend per leaf (``--autotune``
@@ -186,6 +194,16 @@ def main():
     ap.add_argument("--repair", action="store_true",
                     help="pin a MILR repair kit from the clean tree and "
                          "repair/quarantine scrub-detected weight DUEs")
+    ap.add_argument("--abft", action="store_true",
+                    help="verify ABFT checksums inside every protected "
+                         "matmul (row/col sums vs the accumulator, same "
+                         "kernel pass); mismatches surface on the "
+                         "*_abft flags channel")
+    ap.add_argument("--act-clamp", action="store_true",
+                    help="calibrate per-leaf activation absmax bounds from "
+                         "a seeded batch and fuse the range clamps into "
+                         "the matmul epilogue; clamp hits ride the *_abft "
+                         "flags channel")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -210,6 +228,20 @@ def main():
     print(f"[serve] plan: schemes {{{schemes}}}, backends {s['by_backend']}, "
           f"{s['n_flat_padded']} flat-padded leaves")
     enc = plan.encode_tree(params)
+    if args.abft or args.act_clamp:
+        clamps = None
+        if args.act_clamp:
+            from repro.core import quant
+            cal = jax.random.randint(jax.random.PRNGKey(args.seed + 7),
+                                     (2, 16), 0, cfg.vocab, jnp.int32)
+            scales = protected.calibrate_act_scales(cfg, enc, cal, plan=plan,
+                                                    backend=args.backend)
+            clamps = {p: s * quant.QMAX for p, s in scales.items()}
+        # use-time knobs only — the encoded images above stay valid
+        plan = plan.with_abft(args.abft, clamps=clamps)
+        s = plan.summary()
+        print(f"[serve] ABFT guard: {s['n_abft']} checksum-verified leaves, "
+              f"{s['n_clamped']} activation-clamped")
     kit = None
     if args.repair:
         from repro.protection import repair as repair_mod
@@ -277,10 +309,14 @@ def main():
         step_flags.append(flags)  # device arrays; summed after the timer
     dt = time.time() - t0
     corrected = due = kv_corrected = kv_due = 0
+    abft_mm = clamp_hits = 0
     for flags in step_flags:
         for k, v in flags.items():
             pair = jnp.sum(jnp.asarray(v).reshape(-1, 2), axis=0)
-            if k == "layers_kv":
+            if k.endswith("_abft"):  # (mismatches, clamp hits), not ECC
+                abft_mm += int(pair[0])
+                clamp_hits += int(pair[1])
+            elif k == "layers_kv":
                 kv_corrected += int(pair[0])
                 kv_due += int(pair[1])
             else:
@@ -293,6 +329,9 @@ def main():
     if kvp is not None:
         print(f"[serve] KV decode-at-use accounting: {kv_corrected} "
               f"corrected, {kv_due} DUE")
+    if args.abft or args.act_clamp:
+        print(f"[serve] ABFT compute-fault accounting: {abft_mm} checksum "
+              f"mismatches, {clamp_hits} activation clamp hits")
     if scrubber_obj is not None:
         from repro.serving.scrubber import scrub_tree
         enc, fin = scrub_tree(enc)

@@ -119,6 +119,49 @@ def drain_kv_flags():
 
 
 # --------------------------------------------------------------------------
+# ABFT sink: when a plan turns on compute-fault detection
+# (``plan.with_abft``) every guarded matmul records its (checksum
+# mismatches, activation-clamp hits) pair here — kept separate from the
+# (corrected, due) memory-fault sinks because it witnesses a different
+# fault domain (MXU/SDC compute faults and out-of-range activations, not
+# stored bytes). Same trace-time contract as the KV sink, including the
+# per-slot variant: entries are scalars -> (2,), or (B,) rows -> (2, B).
+# --------------------------------------------------------------------------
+
+_ABFT_SINK: list | None = None
+
+
+def set_abft_sink(sink: list | None):
+    global _ABFT_SINK
+    _ABFT_SINK = sink
+
+
+def abft_sink() -> list | None:
+    return _ABFT_SINK
+
+
+def record_abft(mismatches, clamp_hits):
+    if _ABFT_SINK is not None:
+        _ABFT_SINK.append((mismatches, clamp_hits))
+
+
+def drain_abft():
+    """Sum and clear the recorded (mismatches, clamp-hits) pairs.
+
+    Scalar entries -> (2,) int32; per-slot (B,) rows -> (2, B) int32 (the
+    shape flows through the layer scan, so ``flags["layers_abft"]`` becomes
+    (n_layers, 2, B) under per-slot attribution).
+    """
+    if _ABFT_SINK:
+        pairs = [jnp.stack([jnp.asarray(m, jnp.int32),
+                            jnp.asarray(h, jnp.int32)])
+                 for m, h in _ABFT_SINK]
+        _ABFT_SINK.clear()
+        return sum(pairs[1:], pairs[0])
+    return jnp.zeros((2,), jnp.int32)
+
+
+# --------------------------------------------------------------------------
 # activation-stats sink: the int8 calibration pass sets a dict sink; every
 # decode-at-use matmul records its float activation absmax keyed by the
 # leaf's plan path, and lm.forward drains per scanned layer so the scan

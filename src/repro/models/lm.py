@@ -244,6 +244,7 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
     values."""
     flags: dict = {}
     acts: dict = {}
+    collect_abft = collect_flags and L.abft_sink() is not None
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family == "vlm" and prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
@@ -254,16 +255,19 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
 
     def drain():
         return (L.drain_flags() if collect_flags else None,
-                L.drain_acts() if collect_acts else None)
+                L.drain_acts() if collect_acts else None,
+                L.drain_abft() if collect_abft else None)
 
     enc_out = None
     if cfg.family == "encdec":
-        enc_out, enc_flags, enc_acts = _encode(
+        enc_out, enc_flags, enc_acts, enc_abft = _encode(
             cfg, params, enc_embeds, wt=wt, dtype=dtype,
             layer_transform=layer_transform, collect_flags=collect_flags,
-            collect_acts=collect_acts)
+            collect_acts=collect_acts, collect_abft=collect_abft)
         if collect_flags:
             flags["enc_layers"] = enc_flags
+            if collect_abft:
+                flags["enc_layers_abft"] = enc_abft
         if collect_acts:
             acts["enc_layers"] = enc_acts
 
@@ -282,9 +286,12 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
         return x, drain()
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, (layer_flags, layer_acts) = jax.lax.scan(blk_fn, x, params["layers"])
+    x, (layer_flags, layer_acts, layer_abft) = jax.lax.scan(
+        blk_fn, x, params["layers"])
     if collect_flags:
         flags["layers"] = layer_flags
+        if collect_abft:
+            flags["layers_abft"] = layer_abft
     if collect_acts:
         acts["layers"] = layer_acts
 
@@ -298,11 +305,13 @@ def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
             x = x + L.swiglu(lp["rg0_mlp"], L.apply_norm(x, lp["rg0_ln2"],
                                                          cfg.norm), wt)
             return x, drain()
-        x, (tail_flags, tail_acts) = jax.lax.scan(
+        x, (tail_flags, tail_acts, tail_abft) = jax.lax.scan(
             jax.checkpoint(tail_blk) if cfg.remat else tail_blk,
             x, params["tail"])
         if collect_flags:
             flags["tail"] = tail_flags
+            if collect_abft:
+                flags["tail_abft"] = tail_abft
         if collect_acts:
             acts["tail"] = tail_acts
 
@@ -330,7 +339,7 @@ def _decoder_block(cfg, lp, x, positions, enc_out, wt, chunk):
 
 
 def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None,
-            collect_flags=False, collect_acts=False):
+            collect_flags=False, collect_acts=False, collect_abft=False):
     x = enc_embeds.astype(dtype)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -344,12 +353,14 @@ def _encode(cfg, params, enc_embeds, *, wt, dtype, layer_transform=None,
                                 cfg, positions=positions, wt=wt, causal=False)
         x = x + L.gelu_mlp(lp["mlp"], L.apply_norm(x, lp["ln2"], cfg.norm), wt)
         return x, (L.drain_flags() if collect_flags else None,
-                   L.drain_acts() if collect_acts else None)
+                   L.drain_acts() if collect_acts else None,
+                   L.drain_abft() if collect_abft else None)
 
     blk_fn = jax.checkpoint(blk) if cfg.remat else blk
-    x, (enc_flags, enc_acts) = jax.lax.scan(blk_fn, x, params["enc_layers"])
+    x, (enc_flags, enc_acts, enc_abft) = jax.lax.scan(blk_fn, x,
+                                                      params["enc_layers"])
     return (L.apply_norm(x, params["enc_final_norm"], cfg.norm), enc_flags,
-            enc_acts)
+            enc_acts, enc_abft)
 
 
 def loss_fn(cfg: ArchConfig, params, batch, *, wt=Identity,
@@ -438,7 +449,13 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
     (``serving.kvcache.init_paged_cache``; marked by its "k_pages" pools),
     attention routes through the decode-at-use paged path under
     ``kv_policy`` and collect_flags additionally returns a "layers_kv" row
-    of per-layer KV (corrected, due) counts."""
+    of per-layer KV (corrected, due) counts.
+
+    When an ABFT sink is installed (``layers.set_abft_sink`` — the serve
+    step does this for ABFT/clamp-enabled plans), collect_flags also
+    returns a "layers_abft" row of per-layer (checksum mismatches,
+    clamp hits) counts, drained per scanned layer exactly like the
+    memory-fault channels."""
     flags: dict = {}
     x = L.embed(tokens, params["embed"], dtype)
     if cfg.family in ("vlm", "hybrid"):
@@ -519,17 +536,19 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
 
     layer_cache = {k_: v for k_, v in cache.items() if not k_.startswith("tail")}
     collect_kv = collect_flags and kv_paged
+    collect_abft = collect_flags and L.abft_sink() is not None
 
     def scan_blk(x, lp_lc):
         x, nc = blk(x, lp_lc)
         return x, (nc, L.drain_flags() if collect_flags else None,
-                   L.drain_kv_flags() if collect_kv else None)
+                   L.drain_kv_flags() if collect_kv else None,
+                   L.drain_abft() if collect_abft else None)
 
     prev_kv_sink = L.kv_flags_sink()
     if collect_kv:
         L.set_kv_flags_sink([])
     try:
-        x, (new_cache, layer_flags, layer_kv_flags) = jax.lax.scan(
+        x, (new_cache, layer_flags, layer_kv_flags, layer_abft) = jax.lax.scan(
             scan_blk, x, (params["layers"], layer_cache))
     finally:
         if collect_kv:
@@ -538,6 +557,8 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, *,
         flags["layers"] = layer_flags
         if collect_kv:
             flags["layers_kv"] = layer_kv_flags
+        if collect_abft:
+            flags["layers_abft"] = layer_abft
 
     out_cache = dict(new_cache)
     if f == "hybrid" and "tail" in params:
@@ -615,13 +636,15 @@ def prefill_with_cache(cfg: ArchConfig, params, cache, tokens, *, wt=Identity,
         else:
             x = x + L.swiglu(lp["mlp"], h2, wt)
         return x, (newkv, L.drain_flags() if collect_flags else None,
-                   L.drain_kv_flags() if collect_flags else None)
+                   L.drain_kv_flags() if collect_flags else None,
+                   L.drain_abft() if collect_abft else None)
 
+    collect_abft = collect_flags and L.abft_sink() is not None
     prev_kv_sink = L.kv_flags_sink()
     if collect_flags:
         L.set_kv_flags_sink([])
     try:
-        x, (new_cache, layer_flags, layer_kv_flags) = jax.lax.scan(
+        x, (new_cache, layer_flags, layer_kv_flags, layer_abft) = jax.lax.scan(
             blk, x, (params["layers"], cache))
     finally:
         if collect_flags:
@@ -629,6 +652,8 @@ def prefill_with_cache(cfg: ArchConfig, params, cache, tokens, *, wt=Identity,
     if collect_flags:
         flags["layers"] = layer_flags
         flags["layers_kv"] = layer_kv_flags
+        if collect_abft:
+            flags["layers_abft"] = layer_abft
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]

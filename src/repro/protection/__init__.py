@@ -27,11 +27,11 @@ import jax.numpy as jnp
 from .backends import (BACKENDS, BENCH_KERNELS_SCHEMA,
                        BENCH_KERNELS_SCHEMA_V1, BENCH_KERNELS_SCHEMA_V2,
                        BENCH_KERNELS_SCHEMA_V3, BENCH_KERNELS_SCHEMA_V4,
-                       AutotuneTable, Backend, PallasBackend, XlaBackend,
-                       get_backend)
-from .campaign import (CampaignResult, accuracy_eval, due_campaign, due_eval,
-                       fidelity_campaign, fidelity_eval, run_campaign,
-                       run_campaign_host)
+                       BENCH_KERNELS_SCHEMA_V5, AutotuneTable, Backend,
+                       PallasBackend, XlaBackend, get_backend)
+from .campaign import (CampaignResult, accuracy_eval, compute_campaign,
+                       due_campaign, due_eval, fidelity_campaign,
+                       fidelity_eval, run_campaign, run_campaign_host)
 from .fused import ProtectedWeight, can_fuse
 from .host import HostScheme, Stored, get_host_scheme, run_fault_trial
 from .plan import (POLICY_PRESETS, LeafPlan, ProtectionPlan,
@@ -57,10 +57,11 @@ __all__ = [
     "Backend", "XlaBackend", "PallasBackend", "BACKENDS", "get_backend",
     "AutotuneTable", "BENCH_KERNELS_SCHEMA", "BENCH_KERNELS_SCHEMA_V1",
     "BENCH_KERNELS_SCHEMA_V2", "BENCH_KERNELS_SCHEMA_V3",
-    "BENCH_KERNELS_SCHEMA_V4",
+    "BENCH_KERNELS_SCHEMA_V4", "BENCH_KERNELS_SCHEMA_V5",
     "HostScheme", "Stored", "get_host_scheme", "run_fault_trial",
     "CampaignResult", "run_campaign", "run_campaign_host",
-    "fidelity_campaign", "due_campaign", "accuracy_eval", "fidelity_eval",
+    "fidelity_campaign", "due_campaign", "compute_campaign", "accuracy_eval",
+    "fidelity_eval",
     "due_eval",
     "default_policy", "encode_tree", "coverage", "qmatmul",
 ]

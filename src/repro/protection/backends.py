@@ -27,7 +27,8 @@ from repro.core import ecc
 __all__ = ["Backend", "XlaBackend", "PallasBackend", "get_backend",
            "BACKENDS", "AutotuneTable", "BENCH_KERNELS_SCHEMA",
            "BENCH_KERNELS_SCHEMA_V1", "BENCH_KERNELS_SCHEMA_V2",
-           "BENCH_KERNELS_SCHEMA_V3", "BENCH_KERNELS_SCHEMA_V4"]
+           "BENCH_KERNELS_SCHEMA_V3", "BENCH_KERNELS_SCHEMA_V4",
+           "BENCH_KERNELS_SCHEMA_V5"]
 
 
 class Backend:
@@ -117,7 +118,8 @@ BENCH_KERNELS_SCHEMA_V1 = "bench_kernels/v1"
 BENCH_KERNELS_SCHEMA_V2 = "bench_kernels/v2"
 BENCH_KERNELS_SCHEMA_V3 = "bench_kernels/v3"
 BENCH_KERNELS_SCHEMA_V4 = "bench_kernels/v4"
-BENCH_KERNELS_SCHEMA = "bench_kernels/v5"
+BENCH_KERNELS_SCHEMA_V5 = "bench_kernels/v5"
+BENCH_KERNELS_SCHEMA = "bench_kernels/v6"
 
 
 class AutotuneTable:
@@ -142,9 +144,13 @@ class AutotuneTable:
     footprint and chunked-vs-fp64-oracle error) and ``"crossover"`` (the
     structural strip-VMEM crossover: the first sequence length whose
     gathered strip no longer fits the per-core VMEM budget, where the
-    chunked kernel becomes the only honest route). v1–v4 artifacts still
-    load — their entries simply have no (int8) tile opinion and empty
-    :attr:`attention` / :attr:`attention_long`.
+    chunked kernel becomes the only honest route). ``bench_kernels/v6``
+    entries add the ABFT overhead rows ``"fused_abft_us"`` and
+    ``"fused_int8_abft_us"``: the same winning tiles re-timed with
+    in-kernel checksum verification on (see docs/abft.md) — reporting
+    only, the lookups never consult them. v1–v5 artifacts still load —
+    their entries simply have no (int8) tile opinion, no ABFT timings,
+    and empty :attr:`attention` / :attr:`attention_long`.
 
     :meth:`lookup` (backend choice) resolves an exact shape match first,
     then the nearest entry by 64-bit-block count within a 4x factor, else
@@ -253,9 +259,9 @@ class AutotuneTable:
     @classmethod
     def from_dict(cls, d: dict, *, source: str = "") -> "AutotuneTable":
         schema = d.get("schema", "")
-        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V4,
-                 BENCH_KERNELS_SCHEMA_V3, BENCH_KERNELS_SCHEMA_V2,
-                 BENCH_KERNELS_SCHEMA_V1)
+        known = (BENCH_KERNELS_SCHEMA, BENCH_KERNELS_SCHEMA_V5,
+                 BENCH_KERNELS_SCHEMA_V4, BENCH_KERNELS_SCHEMA_V3,
+                 BENCH_KERNELS_SCHEMA_V2, BENCH_KERNELS_SCHEMA_V1)
         if schema and schema not in known:
             raise ValueError(
                 f"unsupported autotune schema {schema!r} (expected one of "

@@ -33,12 +33,12 @@ import numpy as np
 
 from .policy import (ProtectionPolicy, decode_leaf, decode_tree,
                      decode_tree_with_flags, inject_tree,
-                     inject_tree_device, space_overhead)
+                     inject_tree_device, path_str, space_overhead)
 from .tensor import is_protected_tensor
 
 __all__ = ["CampaignResult", "run_campaign", "run_campaign_host",
-           "fidelity_campaign", "due_campaign", "accuracy_eval",
-           "fidelity_eval", "due_eval"]
+           "fidelity_campaign", "due_campaign", "compute_campaign",
+           "accuracy_eval", "fidelity_eval", "due_eval"]
 
 RATES = (1e-6, 1e-5, 1e-4, 1e-3, 3e-3)
 
@@ -71,9 +71,12 @@ class CampaignResult:
     backend: str               # protection backend ("xla" | "pallas")
     platform: str              # jax device platform ("cpu", "tpu", ...)
     device: str                # jax device kind string
-    target: str = "weights"    # what the faults hit: "weights" | "kv" | "both"
+    target: str = "weights"    # what the faults hit: "weights" | "kv" |
+    #                            "both" | "compute" (ABFT campaign)
     layer_rows: tuple = ()     # (n_layers, 2) per-layer KV (corrected, due)
     #                            at max(rates) — () unless target covers KV
+    coverage_rows: tuple = ()  # per-leaf (path, detected, injected) at
+    #                            max(rates) — compute campaigns only
 
     # -- derived views -------------------------------------------------------
 
@@ -100,6 +103,7 @@ class CampaignResult:
         d["rates"] = list(self.rates)
         d["grid"] = [list(row) for row in self.grid]
         d["layer_rows"] = [list(row) for row in self.layer_rows]
+        d["coverage_rows"] = [list(row) for row in self.coverage_rows]
         d["derived"] = {"mean": list(self.mean()), "std": list(self.std()),
                         "drop": list(self.drop())}
         return d
@@ -112,6 +116,9 @@ class CampaignResult:
         kw["grid"] = tuple(tuple(row) for row in kw["grid"])
         kw["layer_rows"] = tuple(tuple(int(v) for v in row)
                                  for row in kw.get("layer_rows", ()))
+        kw["coverage_rows"] = tuple(
+            (str(p), int(det), int(inj))
+            for p, det, inj in kw.get("coverage_rows", ()))
         return cls(**kw)
 
     def to_json(self, **kw) -> str:
@@ -373,6 +380,161 @@ def due_campaign(tree, policy=None, rates=(1e-4,), trials=2, key=None,
         res = dataclasses.replace(
             res, layer_rows=tuple(tuple(int(v) for v in r) for r in rows))
     return res
+
+
+def compute_campaign(tree, policy=None, rates=(1e-3,), trials=2, key=None,
+                     batch="vmap", *, target="acc", probe_m=8,
+                     probe_seed=777) -> CampaignResult:
+    """COMPUTE-fault campaign: how much silent data corruption in the
+    matmuls themselves does the in-kernel ABFT check catch?
+
+    Memory campaigns (:func:`due_campaign`) flip bits in the stored image
+    and let ECC account for them. This one flips bits in the *arithmetic* —
+    the fault classes ECC cannot see and the fused kernel's checksum pair
+    (``ecc_qmatmul(..., with_abft=True)``) exists for. Per protected >=2-D
+    leaf, a fixed int8 probe activation drives the leaf's exact int32
+    accumulator (``quant.int8_acc`` — the same accumulator the requantize
+    epilogue checks); each (rate, trial) cell then
+
+    * ``target="acc"``: XORs a random bit (position 0..30) into each
+      accumulator element selected by a Bernoulli(rate) mask — MXU/
+      datapath SDCs; a fault is DETECTED when its row or column checksum
+      fires;
+    * ``target="wdec"``: flips a random bit of each selected decoded-weight
+      byte *in the main dot only* (the checksum references keep the clean
+      tile, exactly the kernel situation where the MXU reads a corrupted
+      operand) — detected when the fault's column check or any affected
+      row's check fires.
+
+    The fault rate is traced and the whole (rate x trial) grid runs as ONE
+    compiled program, like every other campaign here. Returns a
+    :class:`CampaignResult` with ``metric="abft_coverage"``: ``grid`` cells
+    are detected/injected coverage fractions, ``clean`` is the total number
+    of checksum firings at rate 0 (the false-positive count — 0 by
+    construction: the int8 path compares int32 modular sums bit-exactly),
+    and ``coverage_rows`` carries per-leaf (path, detected, injected)
+    counts from one representative injection at ``max(rates)``.
+    """
+    if target not in ("acc", "wdec"):
+        raise ValueError(f"target {target!r}; one of ('acc', 'wdec')")
+    if batch not in ("vmap", "scan"):
+        raise ValueError(f"batch must be 'vmap' or 'scan', got {batch!r}")
+    from repro.core import quant
+    from repro.kernels import ref as kref
+    policy = _as_policy(policy if policy is not None else "in-place")
+    key = jax.random.PRNGKey(0) if key is None else key
+    enc = tree if _is_encoded(tree) else policy.encode_tree(tree)
+    rates = tuple(float(r) for r in rates)
+    n_rates = len(rates)
+
+    # stage per-leaf (probe, int8 weights) once — the campaign operands
+    flat = jax.tree_util.tree_flatten_with_path(
+        enc, is_leaf=is_protected_tensor)[0]
+    paths, probes = [], []
+    pk = jax.random.PRNGKey(probe_seed)
+    for path, leaf in flat:
+        if not (is_protected_tensor(leaf) and len(leaf.orig_shape) == 2):
+            continue
+        w = decode_leaf(leaf, jnp.float32, backend=policy.backend)
+        w_q, _ = quant.quantize(w)
+        pk, sub = jax.random.split(pk)
+        x_q = jax.random.randint(sub, (probe_m, w.shape[0]), -127, 128,
+                                 jnp.int32).astype(jnp.int8)
+        paths.append(path_str(path))
+        probes.append((x_q, w_q))
+    if not probes:
+        raise ValueError("compute_campaign: no protected >=2-D leaves "
+                         "(did the policy's predicate select anything?)")
+
+    def leaf_counts(x_q, w_q, rate, k):
+        """-> (detected, injected, fired) int32 for one leaf/cell."""
+        acc = quant.int8_acc(x_q, w_q)
+        k1, k2 = jax.random.split(k)
+        if target == "acc":
+            mask = jax.random.bernoulli(k1, rate, acc.shape)
+            bit = jnp.int32(1) << jax.random.randint(k2, acc.shape, 0, 31)
+            faulty = jnp.where(mask, acc ^ bit, acc)
+            row_bad, col_bad = kref.abft_counts(x_q, w_q, faulty)
+            hit = jnp.logical_or(row_bad[:, None] > 0, col_bad[None, :] > 0)
+            det = jnp.sum(jnp.logical_and(mask, hit).astype(jnp.int32))
+        else:  # wdec: corrupt the dot's operand, checksums keep the clean w
+            mask = jax.random.bernoulli(k1, rate, w_q.shape)
+            bit = (jnp.uint8(1) << jax.random.randint(
+                k2, w_q.shape, 0, 8, jnp.uint8))
+            w_f = jnp.where(
+                mask,
+                jax.lax.bitcast_convert_type(
+                    jax.lax.bitcast_convert_type(w_q, jnp.uint8) ^ bit,
+                    jnp.int8),
+                w_q)
+            faulty = quant.int8_acc(x_q, w_f)
+            row_bad, col_bad = kref.abft_counts(x_q, w_q, faulty)
+            # fault at (k0, j): the rows it perturbs are those with
+            # x[:, k0] != 0; detected when one of them fires, or column j
+            rdet = jnp.any(jnp.logical_and(row_bad[:, None] > 0, x_q != 0),
+                           axis=0)                                     # (K,)
+            hit = jnp.logical_or(rdet[:, None], col_bad[None, :] > 0)
+            det = jnp.sum(jnp.logical_and(mask, hit).astype(jnp.int32))
+        inj = jnp.sum(mask.astype(jnp.int32))
+        fired = jnp.sum(row_bad) + jnp.sum(col_bad)
+        return det, inj, fired
+
+    def cell(rate, k):
+        det = inj = fired = jnp.int32(0)
+        for idx, (x_q, w_q) in enumerate(probes):
+            d, i, f = leaf_counts(x_q, w_q, rate, jax.random.fold_in(k, idx))
+            det, inj, fired = det + d, inj + i, fired + f
+        return jnp.stack([det, inj, fired])
+
+    if batch == "vmap":
+        def grid_fn(rates_v, keys_v):
+            per_rate = jax.vmap(cell, in_axes=(None, 0))
+            return jax.vmap(per_rate, in_axes=(0, 0))(rates_v, keys_v)
+    else:
+        def grid_fn(rates_v, keys_v):
+            flat_r = jnp.repeat(rates_v, trials)
+            flat_k = keys_v.reshape((n_rates * trials,) + keys_v.shape[2:])
+
+            def step(carry, rk):
+                return carry, cell(*rk)
+
+            _, out = jax.lax.scan(step, (), (flat_r, flat_k))
+            return out.reshape(n_rates, trials, 3)
+
+    rates_arr = jnp.asarray(rates, jnp.float32)
+    keys = jax.random.split(key, max(n_rates * trials, 1))
+    keys = keys[: n_rates * trials].reshape((n_rates, trials) + keys.shape[1:])
+
+    t0 = time.perf_counter()
+    compiled = jax.jit(grid_fn).lower(rates_arr, keys).compile()
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = np.asarray(jax.block_until_ready(compiled(rates_arr, keys)))
+    wall = time.perf_counter() - t0
+
+    # rate-0 cell: every checksum firing would be a false positive
+    clean = float(np.asarray(jax.jit(cell)(
+        jnp.float32(0.0), jax.random.fold_in(key, 2**31)))[2])
+    # per-leaf attribution at max(rates), one representative key
+    rows = []
+    rk = jax.random.fold_in(key, 2**31 + 1)
+    for idx, ((x_q, w_q), p) in enumerate(zip(probes, paths)):
+        d, i, _ = jax.jit(leaf_counts)(x_q, w_q, jnp.float32(max(rates)),
+                                       jax.random.fold_in(rk, idx))
+        rows.append((p, int(d), int(i)))
+
+    grid = tuple(tuple(float(out[r, t, 0]) / max(float(out[r, t, 1]), 1.0)
+                       for t in range(trials)) for r in range(n_rates))
+    dev = jax.devices()[0]
+    return CampaignResult(
+        scheme=_scheme_label(enc), metric="abft_coverage", rates=rates,
+        trials=trials, clean=clean, grid=grid,
+        space_overhead=float(space_overhead(enc)), compile_s=compile_s,
+        wall_clock_s=wall, batch=batch,
+        backend=getattr(policy.backend, "name", str(policy.backend)),
+        platform=dev.platform,
+        device=getattr(dev, "device_kind", dev.platform),
+        target="compute", coverage_rows=tuple(rows))
 
 
 def run_campaign_host(params, fwd, tmpl, policy, rates=RATES, trials=5,

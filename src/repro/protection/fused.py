@@ -33,6 +33,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import quant
@@ -77,6 +78,16 @@ class ProtectedWeight:
     a_scale:    calibrated static activation scale (float).
     observe:    ``observe(absmax)`` callback fed each float activation's
                 absmax (the calibration hook; no-op when None).
+    abft:       verify ABFT checksums on every matmul (in-kernel on the
+                fused route, the ``kernels.ref.abft_counts`` mirror on the
+                XLA route — same math, backend parity).
+    clamp:      per-leaf activation absmax: epilogue output clipped to
+                ``[-clamp, +clamp]``, hits counted (Geissler-style range
+                supervision).
+    record_abft: ``record_abft(mismatches, clamp_hits)`` callback; scalars,
+                or per-output-row (M,) vectors when ``abft_per_slot`` (the
+                column-check count is not row-attributable and then rides
+                only the scalar channel).
     """
 
     decode_at_use = True  # the marker layers._proj dispatches on
@@ -87,7 +98,11 @@ class ProtectedWeight:
                  record: Optional[Callable] = None,
                  act_quant: Optional[str] = None,
                  a_scale: Optional[float] = None,
-                 observe: Optional[Callable] = None):
+                 observe: Optional[Callable] = None,
+                 abft: bool = False,
+                 clamp: Optional[float] = None,
+                 record_abft: Optional[Callable] = None,
+                 abft_per_slot: bool = False):
         if act_quant not in (None, "static", "dynamic"):
             raise ValueError(f"act_quant {act_quant!r}; one of "
                              f"(None, 'static', 'dynamic')")
@@ -100,7 +115,11 @@ class ProtectedWeight:
         self.int8_tiles = int8_tiles
         self.act_quant = act_quant
         self.a_scale = a_scale
+        self.abft = bool(abft)
+        self.clamp = None if clamp is None else float(clamp)
+        self.abft_per_slot = abft_per_slot
         self._record = record
+        self._record_abft = record_abft
         self._observe = observe
 
     # -- array-protocol surface (enough for every call site in layers.py) ----
@@ -116,6 +135,22 @@ class ProtectedWeight:
     def record(self, corrected, due):
         if self._record is not None:
             self._record(corrected, due)
+
+    @property
+    def _track(self):
+        """ABFT and/or clamp accounting active for this leaf."""
+        return self.abft or self.clamp is not None
+
+    def record_abft(self, row_mm, clamp_hits, col_mm):
+        """Report (mismatches, clamp hits) — per-row vectors when the serve
+        step wants per-slot attribution, else scalars (the scalar mismatch
+        total additionally includes the column-check count)."""
+        if self._record_abft is None:
+            return
+        if self.abft_per_slot:
+            self._record_abft(row_mm, clamp_hits)
+        else:
+            self._record_abft(jnp.sum(row_mm) + col_mm, jnp.sum(clamp_hits))
 
     def astype(self, dtype):
         """Decode just this leaf (recording flags) -> dequantized array."""
@@ -155,18 +190,43 @@ class ProtectedWeight:
             from repro.kernels.ecc_qmatmul import ecc_qmatmul
             interpret = getattr(self.backend, "interpret", True)
             bm, bn, _bk = (self.int8_tiles or self.tiles or (128, 128, 0))
-            out, flags = ecc_qmatmul(q_x, self.pt.enc, self.pt.scale,
-                                     a_scale=a_scale, out_dtype=out_dtype,
-                                     bm=bm, bn=bn, interpret=interpret,
-                                     with_flags=True)
+            res = ecc_qmatmul(q_x, self.pt.enc, self.pt.scale,
+                              a_scale=a_scale, out_dtype=out_dtype,
+                              bm=bm, bn=bn, interpret=interpret,
+                              with_flags=True, with_abft=self.abft,
+                              clamp=self.clamp)
+            if self._track:
+                out, flags, (rows, col_mm) = res
+                self.record_abft(rows[:, 0], rows[:, 1], col_mm)
+            else:
+                out, flags = res
             self.record(flags[0], flags[1])
             return out
         q_w, corrected, due = self._decode_q()
         self.record(corrected, due)
-        # quant.int8_matmul is the single source of the epilogue's value
-        # path: exact int32 accumulator * (a_scale * w_scale) in f32
-        return quant.int8_matmul(q_x, q_w, a_scale,
-                                 self.pt.scale).astype(out_dtype)
+        if not self._track:
+            # quant.int8_matmul is the single source of the epilogue's value
+            # path: exact int32 accumulator * (a_scale * w_scale) in f32
+            return quant.int8_matmul(q_x, q_w, a_scale,
+                                     self.pt.scale).astype(out_dtype)
+        # XLA mirror of the guarded epilogue: the same int32 accumulator
+        # (quant.int8_acc IS int8_matmul's accumulator) checked by the
+        # same ABFT pair, then the identical rescale.
+        from repro.kernels import ref
+        acc = quant.int8_acc(q_x, q_w)
+        if self.abft:
+            row_mm, col_bad = ref.abft_counts(q_x, q_w, acc)
+            col_mm = jnp.sum(col_bad)
+        else:
+            row_mm = jnp.zeros((q_x.shape[0],), jnp.int32)
+            col_mm = jnp.int32(0)
+        out = acc.astype(jnp.float32) * (a_scale * self.pt.scale)
+        if self.clamp is not None:
+            out, hits = ref.clamp_counts(out, self.clamp)
+        else:
+            hits = jnp.zeros_like(row_mm)
+        self.record_abft(row_mm, hits, col_mm)
+        return out.astype(out_dtype)
 
     # -- the projection entry point ------------------------------------------
 
@@ -199,16 +259,43 @@ class ProtectedWeight:
             out = self._int8_matmul(q_x, a_scale, x.dtype)
             return out.astype(x.dtype).reshape(*lead, n_out)
         if not self.fuse:
-            return x @ self.astype(x.dtype)
+            if not self._track:
+                return x @ self.astype(x.dtype)
+            from repro.kernels import ref
+            w = self.astype(x.dtype)
+            # check the f32 accumulator, as the kernel does — a bf16 dot's
+            # rounded output would trip the float tolerance spuriously; the
+            # value path stays identical (f32 accumulate, one final round)
+            acc = jax.lax.dot_general(
+                a2, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            if self.abft:
+                row_mm, col_bad = ref.abft_counts(a2, w, acc)
+                col_mm = jnp.sum(col_bad)
+            else:
+                row_mm = jnp.zeros((a2.shape[0],), jnp.int32)
+                col_mm = jnp.int32(0)
+            if self.clamp is not None:
+                acc, hits = ref.clamp_counts(acc, self.clamp)
+            else:
+                hits = jnp.zeros_like(row_mm)
+            self.record_abft(row_mm, hits, col_mm)
+            return acc.astype(x.dtype).reshape(*lead, n_out)
         from repro.kernels.ecc_qmatmul import ecc_qmatmul
         interpret = getattr(self.backend, "interpret", True)
         # serving keeps full-K tiles (bk=0): one f32 dot per output tile, so
         # the accumulation order — and hence every logit — is bit-identical
         # to decode-then-matmul. The autotune bk only tunes the int8 path.
         bm, bn, _bk = self.tiles or (128, 128, 0)
-        out, flags = ecc_qmatmul(a2, self.pt.enc, self.pt.scale,
-                                 bm=bm, bn=bn, bk=0, interpret=interpret,
-                                 with_flags=True)
+        res = ecc_qmatmul(a2, self.pt.enc, self.pt.scale,
+                          bm=bm, bn=bn, bk=0, interpret=interpret,
+                          with_flags=True, with_abft=self.abft,
+                          clamp=self.clamp)
+        if self._track:
+            out, flags, (rows, col_mm) = res
+            self.record_abft(rows[:, 0], rows[:, 1], col_mm)
+        else:
+            out, flags = res
         self.record(flags[0], flags[1])
         return out.astype(x.dtype).reshape(*lead, self.pt.enc.shape[1])
 

@@ -84,6 +84,13 @@ class LeafPlan:
                  "static" (calibrated ``a_scale``). Set via
                  :meth:`ProtectionPlan.with_act_quant`.
     a_scale:     calibrated static activation scale (float) or None.
+    abft:        verify ABFT checksums on this leaf's matmuls (compute-fault
+                 detection inside the epilogue). Set via
+                 :meth:`ProtectionPlan.with_abft`.
+    clamp:       per-leaf activation-range bound (absmax): the epilogue
+                 output is clipped to ``[-clamp, +clamp]`` with out-of-range
+                 hits counted. None disables (the default — bit-identical
+                 to an unguarded epilogue).
     """
 
     path: str
@@ -106,6 +113,8 @@ class LeafPlan:
     tiles_src: str = ""
     act_quant: Optional[str] = None
     a_scale: Optional[float] = None
+    abft: bool = False
+    clamp: Optional[float] = None
 
     @property
     def protected(self) -> bool:
@@ -299,6 +308,8 @@ class ProtectionPlan:
             "n_flat_sharded": sum(lp.flat_sharded for lp in prot),
             "tiles_src": self._count(prot, "tiles_src"),
             "act_quant": self._count(prot, "act_quant"),
+            "n_abft": sum(lp.abft for lp in prot),
+            "n_clamped": sum(lp.clamp is not None for lp in prot),
             "kv_policy": ({"scheme": self.kv_policy.scheme,
                            "fused": self.kv_policy.fused,
                            "attention_impl": self.kv_policy.attention_impl,
@@ -319,7 +330,8 @@ class ProtectionPlan:
     # -- activation quantization ---------------------------------------------
 
     def with_act_quant(self, mode: str = "dynamic",
-                       scales: Optional[dict] = None) -> "ProtectionPlan":
+                       scales: Optional[dict] = None, *,
+                       clamp: bool = False) -> "ProtectionPlan":
         """A new plan whose protected matmul leaves carry activation-quant
         decisions for the int8 serve path.
 
@@ -332,13 +344,25 @@ class ProtectionPlan:
                          scales``); exactly the calibrated leaves go static,
                          everything else keeps float activations — the
                          calibration run defines the quantized set.
+        clamp=True:      (static mode only) additionally carry each
+                         calibrated leaf's activation-range bound — the
+                         absmax the scale was derived from
+                         (``a_scale * quant.QMAX``) — so the epilogue clips
+                         out-of-range outputs and counts hits
+                         (Geissler-style range supervision). Off by
+                         default: without it the epilogue is bit-identical
+                         to the unguarded one.
         """
+        from repro.core import quant
         if mode not in ("static", "dynamic"):
             raise ValueError(f"act-quant mode {mode!r}; one of "
                              f"('static', 'dynamic')")
         if mode == "static" and not scales:
             raise ValueError("static activation quantization needs calibrated"
                              " scales — run calibrate_act_scales() first")
+        if clamp and mode != "static":
+            raise ValueError("clamp ranges come from calibrated absmax — use "
+                             "mode='static' with calibrate_act_scales()")
         scales = scales or {}
         leaves = {}
         for p, lp in self.leaves.items():
@@ -346,10 +370,39 @@ class ProtectionPlan:
                 leaves[p] = lp
             elif mode == "static":
                 leaves[p] = dataclasses.replace(
-                    lp, act_quant="static", a_scale=float(scales[p])) \
+                    lp, act_quant="static", a_scale=float(scales[p]),
+                    clamp=(float(scales[p]) * quant.QMAX if clamp
+                           else lp.clamp)) \
                     if p in scales else lp
             else:
                 leaves[p] = dataclasses.replace(lp, act_quant="dynamic")
+        return ProtectionPlan(self.policy, leaves, mesh_axes=self.mesh_axes,
+                              kv_policy=self.kv_policy)
+
+    # -- compute-fault detection (ABFT) ---------------------------------------
+
+    def with_abft(self, enabled: bool = True, *,
+                  clamps: Optional[dict] = None) -> "ProtectionPlan":
+        """A new plan whose protected matmul leaves verify ABFT checksums
+        at every use: the epilogue checks the accumulator's row/column sums
+        against activation/weight checksums in the same kernel invocation
+        (bit-exact on the int8 path), so MXU/SDC compute faults surface as
+        a ``flags["layers_abft"]`` channel next to the memory-fault flags.
+
+        ``clamps`` optionally maps leaf paths to activation-range bounds
+        (absmax, e.g. ``{p: s * quant.QMAX for p, s in
+        calibrate_act_scales(...).items()}``) fused into the same epilogue;
+        leaves absent from the map keep their current clamp. Leaves
+        consumed elementwise (conv kernels) ignore the marker."""
+        clamps = clamps or {}
+        leaves = {}
+        for p, lp in self.leaves.items():
+            if not lp.protected or len(lp.shape) < 2:
+                leaves[p] = lp
+            else:
+                leaves[p] = dataclasses.replace(
+                    lp, abft=bool(enabled),
+                    clamp=(float(clamps[p]) if p in clamps else lp.clamp))
         return ProtectionPlan(self.policy, leaves, mesh_axes=self.mesh_axes,
                               kv_policy=self.kv_policy)
 

@@ -29,7 +29,12 @@ Design points
   ``per_slot_flags`` on EVERY KV policy — the fused and chunked Pallas
   kernels reduce (corrected, DUE) per batch row in-grid — so
   ``flags["layers_kv"]`` is (n_layers, 2, B) and each finish event
-  carries the counts *that request's* cached tokens saw.
+  carries the counts *that request's* cached tokens saw. When the plan
+  guards matmuls (``plan.with_abft`` / activation clamps) the same
+  per-slot routing applies to the compute channel: a decode step's
+  output rows ARE the batch slots, so ``flags["layers_abft"]`` comes
+  back (n_layers, 2, B) and finish events carry ``abft_mismatches`` /
+  ``clamp_hits`` per request.
 * **Prefix sharing + copy-on-write.** With ``prefix_sharing=True`` the
   front-end keeps an index of published full-page prompt prefixes
   (key = the ENTIRE token prefix through that page, since cached K/V at
@@ -140,7 +145,7 @@ class _Slot:
 
     __slots__ = ("req", "consumed", "generated", "pages", "enqueue_step",
                  "admit_step", "first_step", "enqueue_s", "first_s",
-                 "kv_corrected", "kv_due")
+                 "kv_corrected", "kv_due", "abft_mismatches", "clamp_hits")
 
     def __init__(self, req: Request, pages, step: int,
                  enqueue_step: int, enqueue_s: float):
@@ -155,6 +160,8 @@ class _Slot:
         self.first_s: Optional[float] = None
         self.kv_corrected = 0
         self.kv_due = 0
+        self.abft_mismatches = 0
+        self.clamp_hits = 0
 
 
 class ServingFrontend:
@@ -484,6 +491,9 @@ class ServingFrontend:
               "n_generated": n_gen, "kv_corrected": int(s.kv_corrected),
               "kv_due": int(s.kv_due),
               "pool_free": self.allocator.free_count}
+        if s.abft_mismatches or s.clamp_hits:
+            ev["abft_mismatches"] = int(s.abft_mismatches)
+            ev["clamp_hits"] = int(s.clamp_hits)
         if s.first_s is not None:
             ev["ttft_s"] = s.first_s - s.enqueue_s
             ev["tpot_ms"] = ((now - s.first_s) / max(1, n_gen - 1)) * 1e3
@@ -512,6 +522,13 @@ class ServingFrontend:
         sampled = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         kv = np.asarray(flags["layers_kv"]).sum(axis=0)   # (2,) | (2, B)
         w = np.asarray(flags["top"]) + np.asarray(flags["layers"]).sum(0)
+        # ABFT channel (only present when the plan guards some leaves):
+        # layer rows (L, 2) or per-slot (L, 2, B), plus the top row — the
+        # decode step's output rows ARE the batch slots, so per-slot rows
+        # attribute compute faults to requests exactly
+        ab = flags.get("layers_abft")
+        if ab is not None:
+            ab = np.asarray(ab).sum(axis=0) + np.asarray(flags["top_abft"])
         t1 = time.perf_counter()
 
         per_slot = kv.ndim == 2
@@ -524,6 +541,13 @@ class ServingFrontend:
             else:                # fused: batch totals as upper bound
                 s.kv_corrected += int(kv[0])
                 s.kv_due += int(kv[1])
+            if ab is not None:
+                if ab.ndim == 2:
+                    s.abft_mismatches += int(ab[0, i])
+                    s.clamp_hits += int(ab[1, i])
+                else:            # scalar channel: batch totals
+                    s.abft_mismatches += int(ab[0])
+                    s.clamp_hits += int(ab[1])
             s.consumed += 1
             if self.prefix_sharing:
                 self._maybe_publish(s)
@@ -540,15 +564,18 @@ class ServingFrontend:
                 self._finish(i)
         # emitted after finishes so pool_free reflects this step's frees —
         # summarize() reads the last step's pool_free as the leak check
-        self.telemetry.emit(
-            "step", step=self.step_no, active=self.active,
+        ev = dict(
+            step=self.step_no, active=self.active,
             queue_depth=len(self.queue),
             pool_free=self.allocator.free_count,
             pool_cached=len(self._prefix_index),
             kv_corrected=int(kv.sum(axis=-1)[0] if per_slot else kv[0]),
             kv_due=int(kv.sum(axis=-1)[1] if per_slot else kv[1]),
-            w_corrected=int(w[0]), w_due=int(w[1]),
-            step_ms=(t1 - t0) * 1e3)
+            w_corrected=int(w[0]), w_due=int(w[1]))
+        if ab is not None:
+            ev["abft_mismatches"] = int(ab[0].sum())
+            ev["clamp_hits"] = int(ab[1].sum())
+        self.telemetry.emit("step", **ev, step_ms=(t1 - t0) * 1e3)
         self.step_no += 1
 
     def run(self, max_steps: int = 10_000):

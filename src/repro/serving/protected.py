@@ -92,7 +92,8 @@ class _Router:
     but wires each matmul's activation absmax into the layers act sink.
     """
 
-    def __init__(self, plan, backend, *, act_quant=None, calibrate=False):
+    def __init__(self, plan, backend, *, act_quant=None, calibrate=False,
+                 abft_per_slot=False):
         if act_quant not in (None, "static", "dynamic", "plan"):
             raise ValueError(f"act_quant {act_quant!r}; one of "
                              f"(None, 'static', 'dynamic', 'plan')")
@@ -102,6 +103,23 @@ class _Router:
                                 "autotune", None)
         self.act_quant = act_quant
         self.calibrate = calibrate
+        self.abft_per_slot = abft_per_slot
+
+    @property
+    def any_abft(self) -> bool:
+        """True when any planned leaf carries an ABFT or clamp decision —
+        the serve step installs the ABFT sink only then, so guarded and
+        unguarded plans trace to different (but each fixed) programs."""
+        if self.plan is None:
+            return False
+        return any(lp.abft or lp.clamp is not None for lp in self.plan)
+
+    def abft_for(self, path: str) -> tuple:
+        """-> (abft enabled, clamp bound | None) for one leaf."""
+        lp = self.plan.leaves.get(path) if self.plan is not None else None
+        if lp is None:
+            return False, None
+        return bool(lp.abft), lp.clamp
 
     def backend_for(self, path: str):
         """Resolved backend for a leaf by its FULL plan path (the scoped
@@ -154,9 +172,12 @@ class _Router:
                       if lp is not None and lp.int8_tiles is not None
                       else self.tiles_for(shape, key="int8_tiles"))
         aq, a_scale = self.act_for(path)
+        abft, clamp = self.abft_for(path)
         return ProtectedWeight(
             pt, be, tiles=tiles, int8_tiles=int8_tiles,
             record=L.record_flags, act_quant=aq, a_scale=a_scale,
+            abft=abft, clamp=clamp, record_abft=L.record_abft,
+            abft_per_slot=self.abft_per_slot,
             observe=(functools.partial(L.record_act, path)
                      if self.calibrate else None))
 
@@ -265,6 +286,15 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
     and ``plan.with_act_quant``), or "plan" (follow each leaf's plan
     decision). Decode-at-use only.
 
+    When the plan marks leaves for ABFT / activation clamps
+    (``plan.with_abft`` / ``with_act_quant(..., clamp=True)``) and
+    ``with_flags=True``, the flags dict additionally carries the
+    (checksum mismatches, clamp hits) channel: "layers_abft" /
+    "tail_abft" / "top_abft" rows, shaped like the (corrected, DUE)
+    rows — per-slot vectors instead of scalars when the KV policy has
+    ``per_slot_flags`` so the front-end can attribute compute faults to
+    requests.
+
     ``kv_policy`` (a :class:`~repro.serving.kvcache.KVProtectionPolicy` or
     preset name) serves against a paged protected KV cache from
     :func:`~repro.serving.kvcache.init_paged_cache`; with ``with_flags`` the
@@ -291,12 +321,16 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
         raise ValueError("act_quant needs the decode-at-use serve step (the "
                          "whole-tree decode paths serve float weights)")
     if decode_at_use and decode_per_step:
-        router = _Router(plan, backend, act_quant=act_quant)
+        per_slot = bool(kvp is not None and kvp.per_slot_flags)
+        router = _Router(plan, backend, act_quant=act_quant,
+                         abft_per_slot=per_slot)
         lt = _layer_transform(router, dtype)
+        track_abft = with_flags and router.any_abft
 
         def serve_step(enc_params, cache, tokens, pos):
             sink: list = []
             L.set_flags_sink(sink if with_flags else None)
+            L.set_abft_sink([] if track_abft else None)
             try:
                 params = _use_tree(enc_params, router, dtype)
                 top_flags = L.drain_flags() if with_flags else None
@@ -306,12 +340,20 @@ def make_serve_step(cfg: ArchConfig, *, plan=None,
                                      kv_policy=kvp)
                 if with_flags:  # the output head decodes after the scans
                     top_flags = top_flags + L.drain_flags()
+                # no matmul runs before the model call, so one post-step
+                # drain captures every top-level ABFT record (pre-draining
+                # zeros (2,) would not broadcast against per-slot (2, B))
+                top_abft = L.drain_abft() if track_abft else None
             finally:
                 L.set_flags_sink(None)
+                L.set_abft_sink(None)
             if not with_flags:
                 return out
             logits, new_cache, flags = out
-            return logits, new_cache, {"top": top_flags, **flags}
+            extra = {"top": top_flags, **flags}
+            if track_abft:
+                extra["top_abft"] = top_abft
+            return logits, new_cache, extra
 
         return serve_step
 
@@ -372,11 +414,13 @@ def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
     if decode_at_use:
         router = _Router(plan, backend, act_quant=act_quant)
         lt = _layer_transform(router, dtype)
+        track_abft = with_flags and router.any_abft
 
         def prefill(enc_params, *args, extras=None):
             cache, tokens, extras = parse_args(args, extras)
             sink: list = []
             L.set_flags_sink(sink if with_flags else None)
+            L.set_abft_sink([] if track_abft else None)
             try:
                 params = _use_tree(enc_params, router, dtype)
                 top_flags = L.drain_flags() if with_flags else None
@@ -391,15 +435,19 @@ def make_prefill(cfg: ArchConfig, *, plan=None, dtype=jnp.bfloat16,
                                      collect_flags=with_flags, **extras)
                 if with_flags:  # the output head decodes after the scans
                     top_flags = top_flags + L.drain_flags()
+                top_abft = L.drain_abft() if track_abft else None
             finally:
                 L.set_flags_sink(None)
+                L.set_abft_sink(None)
             if not with_flags:
                 return out
+            extra_top = ({"top": top_flags, "top_abft": top_abft}
+                         if track_abft else {"top": top_flags})
             if kvp is not None:
                 logits, new_cache, flags = out
-                return logits, new_cache, {"top": top_flags, **flags}
+                return logits, new_cache, {**extra_top, **flags}
             logits, flags = out
-            return logits, {"top": top_flags, **flags}
+            return logits, {**extra_top, **flags}
 
         return prefill
 

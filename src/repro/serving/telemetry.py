@@ -31,9 +31,15 @@ admit      rid, step, slot, n_pages, queue_depth, pool_free; with prefix
 cow        rid, step, slot, src, dst  (a shared page got a private clone)
 first_token rid, step, slot, ttft_steps, [ttft_s]
 finish     rid, step, slot, n_generated, kv_corrected, kv_due, pool_free,
-           [ttft_s, tpot_ms]
+           [ttft_s, tpot_ms]; when the plan guards matmuls (ABFT /
+           clamps) and the request saw hits, also abft_mismatches,
+           clamp_hits
 step       step, active, queue_depth, pool_free, pool_cached,
-           kv_corrected, kv_due, w_corrected, w_due, [step_ms]
+           kv_corrected, kv_due, w_corrected, w_due, [step_ms]; with an
+           ABFT/clamp-guarded plan also abft_mismatches, clamp_hits
+           (integer counts from the compute-fault channel — no wall
+           suffix, so they sit INSIDE the deterministic view and seeded
+           replays must reproduce them bit for bit)
 scrub      step, w_scanned, w_corrected, w_due, kv_scanned, kv_corrected,
            kv_due  (one budgeted healing pass; w_due counts leaves left
            un-written-back for repair)
@@ -67,6 +73,9 @@ __all__ = [
 
 # v2 adds the ``healing`` roll-up (scrub / migrate / repair totals and the
 # residual at-rest DUE state); v1 summaries still load via load_summary.
+# The ``abft`` roll-up (compute-fault mismatches + clamp hits) extends v2
+# ADDITIVELY — abft-less event streams roll up to all-zero counts, so v2
+# consumers keep working and no v3 fork is needed.
 SUMMARY_SCHEMA = "burst_sim/v2"
 SUPPORTED_SCHEMAS = ("burst_sim/v1", "burst_sim/v2")
 
@@ -193,6 +202,23 @@ def summarize(events) -> dict:
                                     for a in admits),
         },
         "healing": _healing_rollup(by),
+        "abft": _abft_rollup(steps, finishes),
+    }
+
+
+def _abft_rollup(steps, finishes) -> dict:
+    """Additive v2 extension: the compute-fault (ABFT) channel. Step
+    events carry per-step mismatch/clamp totals; finish events carry the
+    per-request attribution. Streams from abft-less runs roll up to all
+    zeros — same summary shape either way, no schema fork."""
+    mm_req = [f.get("abft_mismatches", 0) for f in finishes]
+    return {
+        "mismatches_total": sum(s.get("abft_mismatches", 0) for s in steps),
+        "clamp_hits_total": sum(s.get("clamp_hits", 0) for s in steps),
+        "max_per_request": max(mm_req, default=0),
+        "requests_with_mismatch": sum(1 for m in mm_req if m > 0),
+        "requests_with_clamp": sum(
+            1 for f in finishes if f.get("clamp_hits", 0) > 0),
     }
 
 
@@ -245,6 +271,8 @@ def load_summary(path: str) -> dict:
                          f"(supported: {SUPPORTED_SCHEMAS})")
     if schema == "burst_sim/v1":
         s.setdefault("healing", None)
+    # pre-ABFT summaries (either schema) lack the additive abft roll-up
+    s.setdefault("abft", None)
     return s
 
 
@@ -276,12 +304,15 @@ def write_requests_csv(events, path: str):
         elif ev == "finish":
             row.update(finish_step=e["step"], n_generated=e["n_generated"],
                        kv_corrected=e["kv_corrected"], kv_due=e["kv_due"],
+                       abft_mismatches=e.get("abft_mismatches"),
+                       clamp_hits=e.get("clamp_hits"),
                        tpot_ms=e.get("tpot_ms"))
     fields = ["rid", "enqueue_step", "prompt_len", "max_new", "rejected",
               "reject_reason", "admit_step", "slot", "n_pages",
               "pages_shared", "tokens_reused", "cow_copied",
               "first_token_step", "ttft_steps", "ttft_s", "finish_step",
-              "n_generated", "kv_corrected", "kv_due", "tpot_ms"]
+              "n_generated", "kv_corrected", "kv_due", "abft_mismatches",
+              "clamp_hits", "tpot_ms"]
     with open(path, "w", newline="") as fh:
         w = csv.DictWriter(fh, fieldnames=fields, restval="")
         w.writeheader()

@@ -1,0 +1,348 @@
+"""ABFT in the fused kernel: zero false positives at fault rate 0 on both
+backends, guaranteed detection of injected accumulator flips on the exact
+int8 paths, activation-range clamp semantics, the flags channel through the
+serve step, and the compute-fault campaign."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, protection
+from repro.core import ecc, quant
+from repro.kernels import ref
+from repro.kernels.ecc_qmatmul import ecc_qmatmul
+from repro.models import lm
+from repro.serving import protected
+
+
+def _wot_weights(rng, shape):
+    w = rng.integers(-64, 64, size=shape).astype(np.int8)
+    flat = w.reshape(-1)
+    flat[7::8] = rng.integers(-128, 128, size=flat[7::8].size)
+    return flat.reshape(shape)
+
+
+def _enc(wq):
+    k, n = wq.shape
+    return np.asarray(ecc.encode64(jnp.asarray(
+        wq.view(np.uint8).reshape(k, n // 8, 8)))).reshape(k, n)
+
+
+# ---------------------------------------------------------------------------
+# kernel: zero false positives at fault rate 0
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (32, 64, 128, 16, 64, 0),    # clean tiles, full-K
+    (45, 100, 72, 16, 32, 0),    # ragged everything (edge-tile masking)
+    (16, 256, 64, 16, 32, 64),   # decode-once multi-K-strip grid
+])
+def test_float_abft_zero_false_positives(m, k, n, bm, bn, bk):
+    """Clean weights, clean accumulator: the float-path tolerance check
+    never fires, and the guarded kernel's output is bit-identical to the
+    unguarded one (the checksums are extra outputs, not a value change)."""
+    rng = np.random.default_rng(m + n)
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (k, n))))
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w_scale = jnp.float32(0.01)
+    out, (rows, col_mm) = ecc_qmatmul(a, wenc, w_scale, bm=bm, bn=bn, bk=bk,
+                                      with_abft=True)
+    assert rows.shape == (m, 2)
+    assert int(rows.sum()) == 0 and int(col_mm) == 0
+    plain = ecc_qmatmul(a, wenc, w_scale, bm=bm, bn=bn, bk=bk)
+    assert np.array_equal(np.asarray(out), np.asarray(plain))
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn", [
+    (32, 64, 128, 16, 64),
+    (45, 100, 72, 16, 32),       # masked edge tiles
+])
+def test_int8_paths_abft_zero_false_positives(m, k, n, bm, bn):
+    """The int8 accumulator and requantize-epilogue checks compare int32
+    modular sums bit-exactly — zero false positives by construction, and
+    the guarded outputs equal the unguarded ones bit for bit."""
+    rng = np.random.default_rng(m * n)
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (k, n))))
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+    out, (rows, col_mm) = ecc_qmatmul(a, wenc, bm=bm, bn=bn, with_abft=True)
+    assert int(rows[:, 0].sum()) == 0 and int(col_mm) == 0
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(ecc_qmatmul(a, wenc, bm=bm, bn=bn)))
+    a_scale = jnp.asarray(rng.uniform(0.005, 0.05, size=(m, 1))
+                          .astype(np.float32))
+    w_scale = jnp.float32(0.013)
+    out, (rows, col_mm) = ecc_qmatmul(a, wenc, w_scale, a_scale=a_scale,
+                                      bm=bm, bn=bn, with_abft=True)
+    assert int(rows[:, 0].sum()) == 0 and int(col_mm) == 0
+    plain = ecc_qmatmul(a, wenc, w_scale, a_scale=a_scale, bm=bm, bn=bn)
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(plain, np.float32))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("mode", [None, "dynamic", "static"])
+def test_protected_weight_abft_clean_on_both_backends(backend, mode):
+    """ProtectedWeight's guarded routes — fused kernel AND the XLA
+    ``ref.abft_counts`` mirror, float AND int8 — record (0, 0) on clean
+    weights, and the value path is bit-identical to the unguarded view."""
+    from repro.protection.fused import ProtectedWeight
+    rng = np.random.default_rng(17)
+    k, n = 64, 128
+    w = jnp.asarray(_wot_weights(rng, (k, n)).astype(np.float32) * 0.01)
+    pt = protection.ProtectionPolicy().encode_leaf(w, "in-place")
+    x = jnp.asarray(rng.normal(size=(3, k)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    seen = []
+
+    def record_abft(mm, hits):
+        seen.append((int(np.asarray(mm).sum()), int(np.asarray(hits).sum())))
+
+    kw = dict(act_quant=mode, a_scale=0.02 if mode == "static" else None)
+    guarded = ProtectedWeight(pt, backend, abft=True,
+                              record_abft=record_abft, **kw).matmul(x)
+    plain = ProtectedWeight(pt, backend, **kw).matmul(x)
+    assert seen and all(s == (0, 0) for s in seen)
+    assert np.array_equal(np.asarray(guarded, np.float32),
+                          np.asarray(plain, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# kernel: injected accumulator faults are detected
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bit", [0, 1, 7, 15, 23, 30])
+def test_single_flip_accumulator_fault_always_detected_int8(bit):
+    """A single bit flipped into the int32 accumulator (any position) must
+    trip the bit-exact checksums on BOTH exact paths — raw int8 and the
+    requantize epilogue — and land on the faulted row."""
+    rng = np.random.default_rng(bit)
+    m, k, n = 16, 64, 64
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (k, n))))
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+    _, (rows, col_mm) = ecc_qmatmul(a, wenc, bm=8, bn=32, with_abft=True,
+                                    fault_bits=1 << bit)
+    assert int(rows[0, 0]) >= 1, "row checksum missed the (0,0) flip"
+    assert int(col_mm) >= 1, "column checksum missed the (0,0) flip"
+    assert int(rows[1:, 0].sum()) == 0, "mismatch attributed to clean rows"
+    _, (rows, col_mm) = ecc_qmatmul(a, wenc, jnp.float32(0.01),
+                                    a_scale=jnp.float32(0.02), bm=8, bn=32,
+                                    with_abft=True, fault_bits=1 << bit)
+    assert int(rows[0, 0]) >= 1 and int(col_mm) >= 1
+
+
+@pytest.mark.parametrize("bit", [23, 27, 30])
+def test_high_bit_float_accumulator_fault_detected(bit):
+    """Float-path detection is tolerance-gated, so only magnitude-visible
+    corruption is promised: exponent-region flips must fire."""
+    rng = np.random.default_rng(bit)
+    m, k, n = 16, 64, 64
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (k, n))))
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    _, (rows, col_mm) = ecc_qmatmul(a, wenc, jnp.float32(0.01), bm=8, bn=32,
+                                    with_abft=True, fault_bits=1 << bit)
+    assert int(rows[:, 0].sum()) + int(col_mm) >= 1
+
+
+def test_fault_injection_is_a_test_hook_not_a_value_change():
+    """fault_bits corrupts the accumulator the checksums watch — the
+    returned product must carry the fault (that's what detection means)."""
+    rng = np.random.default_rng(5)
+    m, k, n = 8, 64, 64
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (k, n))))
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+    clean = np.asarray(ecc_qmatmul(a, wenc, bm=8, bn=32))
+    dirty, _ = ecc_qmatmul(a, wenc, bm=8, bn=32, with_abft=True,
+                           fault_bits=1 << 7)
+    dirty = np.asarray(dirty)
+    assert dirty[0, 0] == clean[0, 0] ^ (1 << 7)
+    assert np.array_equal(dirty.reshape(-1)[1:], clean.reshape(-1)[1:])
+
+
+# ---------------------------------------------------------------------------
+# activation-range clamps
+# ---------------------------------------------------------------------------
+
+
+def test_clamp_matches_reference_and_counts_hits():
+    """The fused epilogue's clamp equals ``ref.clamp_counts`` on the f32
+    epilogue output — same clipped values, same per-row hit counts — and
+    rides the ABFT rows channel even with the checksums off."""
+    rng = np.random.default_rng(21)
+    m, k, n = 16, 64, 64
+    wq = _wot_weights(rng, (k, n))
+    wenc = jnp.asarray(_enc(wq))
+    a = jnp.asarray(rng.integers(-127, 128, size=(m, k)).astype(np.int8))
+    a_scale, w_scale = jnp.float32(0.02), jnp.float32(0.013)
+    y = (ref.ecc_qmatmul_ref(a, wenc).astype(jnp.float32)
+         * (a_scale * w_scale))
+    c = float(np.quantile(np.abs(np.asarray(y)), 0.9))  # force real hits
+    out, (rows, col_mm) = ecc_qmatmul(a, wenc, w_scale, a_scale=a_scale,
+                                      bm=8, bn=32, clamp=c)
+    want, hits = ref.clamp_counts(y, c)
+    assert int(np.asarray(hits).sum()) > 0
+    assert np.array_equal(np.asarray(rows[:, 1]), np.asarray(hits))
+    assert int(rows[:, 0].sum()) == 0 and int(col_mm) == 0
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(want.astype(jnp.bfloat16), np.float32))
+
+
+def test_clamp_rejected_on_raw_int8_path():
+    rng = np.random.default_rng(22)
+    wenc = jnp.asarray(_enc(_wot_weights(rng, (64, 64))))
+    a = jnp.zeros((4, 64), jnp.int8)
+    with pytest.raises(ValueError, match="clamp"):
+        ecc_qmatmul(a, wenc, clamp=1.0)
+
+
+def test_plan_with_abft_knobs_and_summary():
+    """plan.with_abft marks exactly the >=2-D protected leaves, carries
+    per-leaf clamp bounds, and the summary counts both."""
+    cfg = configs.get_smoke("minitron-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    plan = protected.make_plan(params, protection.ProtectionPolicy())
+    assert plan.summary()["n_abft"] == 0
+    guarded = plan.with_abft()
+    s = guarded.summary()
+    n_mat = sum(1 for lp in guarded if lp.protected and len(lp.shape) >= 2)
+    assert s["n_abft"] == n_mat > 0 and s["n_clamped"] == 0
+    some = next(p for p, lp in guarded.leaves.items() if lp.abft)
+    clamped = guarded.with_abft(clamps={some: 3.5})
+    assert clamped.leaves[some].clamp == 3.5
+    assert clamped.summary()["n_clamped"] == 1
+    off = clamped.with_abft(False)
+    assert off.summary()["n_abft"] == 0
+    assert off.leaves[some].clamp == 3.5  # clamps survive the abft toggle
+
+
+# ---------------------------------------------------------------------------
+# serve step: the flags channel
+# ---------------------------------------------------------------------------
+
+
+def test_serve_step_abft_flags_channel_and_identity():
+    """An ABFT-guarded serve step emits the ``layers_abft``/``top_abft``
+    flags channel (all zeros at fault rate 0), its logits are bit-identical
+    to the unguarded step, and an unguarded plan emits NO abft keys."""
+    cfg = configs.get_smoke("minitron-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    plan = protected.make_plan(params, protection.ProtectionPolicy())
+    enc = plan.encode_tree(params)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    base = jax.jit(protected.make_serve_step(cfg, plan=plan,
+                                             with_flags=True))
+    logits0, _, flags0 = base(enc, lm.init_cache(cfg, 2, 32), tok, pos)
+    assert not any(k.endswith("_abft") for k in flags0)
+    step = jax.jit(protected.make_serve_step(cfg, plan=plan.with_abft(),
+                                             with_flags=True))
+    logits, _, flags = step(enc, lm.init_cache(cfg, 2, 32), tok, pos)
+    ab, top = flags["layers_abft"], flags["top_abft"]
+    assert ab.ndim == 2 and ab.shape[1] == 2  # (L, 2) scalar channel
+    assert top.shape == (2,)
+    assert int(jnp.sum(ab)) == 0 and int(jnp.sum(top)) == 0
+    assert np.array_equal(np.asarray(logits, np.float32),
+                          np.asarray(logits0, np.float32))
+
+
+def test_prefill_abft_flags_channel():
+    cfg = configs.get_smoke("minitron-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    plan = protected.make_plan(params, protection.ProtectionPolicy())
+    enc = plan.encode_tree(params)
+    pre = jax.jit(protected.make_prefill(cfg, plan=plan.with_abft(),
+                                         chunk=16, with_flags=True))
+    toks = jnp.zeros((2, 16), jnp.int32)
+    _, flags = pre(enc, toks)
+    assert "top_abft" in flags and int(jnp.sum(flags["top_abft"])) == 0
+    assert int(jnp.sum(flags["layers_abft"])) == 0
+
+
+# ---------------------------------------------------------------------------
+# compute-fault campaign
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target", ["acc", "wdec"])
+def test_compute_campaign_coverage_and_zero_false_positives(target):
+    """Injected compute faults are detected (full coverage on the exact
+    int8 path for accumulator flips; >0 for decoded-weight corruption) and
+    the rate-0 cell fires NO checksums — the CI acceptance."""
+    cfg = configs.get_smoke("minitron-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    res = protection.compute_campaign(params, rates=(1e-3, 1e-2), trials=2,
+                                      key=jax.random.PRNGKey(7),
+                                      target=target)
+    assert res.metric == "abft_coverage" and res.target == "compute"
+    assert float(res.clean) == 0.0, "checksum false positives at rate 0"
+    means = res.mean()
+    assert all(m > 0 for m in means), means
+    if target == "acc":
+        assert all(m == 1.0 for m in means), "accumulator flip escaped"
+    # tiny leaves may draw zero injections at the sampled rate; whatever
+    # WAS injected must be accounted (and fully caught on the exact path)
+    assert res.coverage_rows
+    assert any(inj > 0 for _, _, inj in res.coverage_rows)
+    assert all(det <= inj for _, det, inj in res.coverage_rows)
+    if target == "acc":
+        assert all(det == inj for _, det, inj in res.coverage_rows)
+    d = res.to_dict()
+    rt = protection.CampaignResult.from_dict(d)
+    assert rt.coverage_rows == res.coverage_rows
+    assert rt.mean() == res.mean() and rt.clean == res.clean
+
+
+def test_compute_campaign_scan_matches_vmap_grid_shape():
+    cfg = configs.get_smoke("minitron-4b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(4))
+    a = protection.compute_campaign(params, rates=(1e-3,), trials=2,
+                                    key=jax.random.PRNGKey(9), batch="vmap")
+    b = protection.compute_campaign(params, rates=(1e-3,), trials=2,
+                                    key=jax.random.PRNGKey(9), batch="scan")
+    assert np.asarray(a.grid).shape == np.asarray(b.grid).shape
+    assert a.clean == b.clean == 0.0
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the additive abft roll-up
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_abft_rollup_additive():
+    from repro.serving import telemetry
+    t = telemetry.TelemetryCollector()
+    base_s = dict(pool_free=8, queue_depth=0)
+    base_f = dict(n_generated=4, kv_due=0, kv_corrected=0)
+    t.emit("step", step=0, abft_mismatches=2, clamp_hits=1, step_ms=1.0,
+           **base_s)
+    t.emit("step", step=1, step_ms=1.0, **base_s)  # abft-less steps roll up
+    t.emit("finish", rid=0, abft_mismatches=2, clamp_hits=1, **base_f)
+    t.emit("finish", rid=1, **base_f)
+    s = telemetry.summarize(t.events)
+    ab = s["abft"]
+    assert ab["mismatches_total"] == 2 and ab["clamp_hits_total"] == 1
+    assert ab["max_per_request"] == 2
+    assert ab["requests_with_mismatch"] == 1
+    assert ab["requests_with_clamp"] == 1
+    # the two count fields carry no wall-clock suffix: deterministic view
+    dv = telemetry.deterministic_view(t.events)
+    assert any("abft_mismatches" in e for e in dv)
+
+
+def test_telemetry_v2_summary_without_abft_still_loads(tmp_path):
+    """Older summary.json files predate the roll-up: load_summary must
+    surface abft=None instead of KeyError — the additive-extension rule."""
+    import json
+
+    from repro.serving import telemetry
+    t = telemetry.TelemetryCollector()
+    t.emit("step", step=0, step_ms=1.0, pool_free=8, queue_depth=0)
+    s = telemetry.summarize(t.events)
+    s.pop("abft")
+    p = tmp_path / "summary.json"
+    p.write_text(json.dumps(s))
+    loaded = telemetry.load_summary(p)
+    assert loaded["abft"] is None

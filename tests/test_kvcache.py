@@ -488,11 +488,11 @@ def test_plan_kv_policy_drives_serving(smoke_params):
 
 
 # ---------------------------------------------------------------------------
-# bench artifact: bench_kernels/v5 attention + long-context rows
+# bench artifact: bench_kernels/v6 attention + long-context + ABFT rows
 # ---------------------------------------------------------------------------
 
 
-def test_autotune_v5_attention_rows():
+def test_autotune_attention_rows():
     entry = {"shape": [256, 256], "xla_us": 1.0, "pallas_us": 2.0,
              "best": "xla"}
     row = {"shape": [2, 128, 2, 32], "scheme": "in-place",
@@ -508,7 +508,7 @@ def test_autotune_v5_attention_rows():
         {"schema": "bench_kernels/v5", "platform": "cpu",
          "entries": [entry], "attention": [row],
          "attention_long": [long_row], "crossover": xo})
-    assert t.schema == protection.BENCH_KERNELS_SCHEMA == "bench_kernels/v5"
+    assert t.schema == protection.BENCH_KERNELS_SCHEMA_V5 == "bench_kernels/v5"
     assert t.attention == [row]
     assert t.attention_long == [long_row] and t.crossover == xo
     rt = protection.AutotuneTable.from_dict(t.to_dict())
@@ -532,8 +532,12 @@ def test_autotune_v5_attention_rows():
     checked_in = os.path.join(os.path.dirname(__file__), os.pardir,
                               "BENCH_kernels.json")
     shipped = protection.AutotuneTable.from_json(checked_in)
-    assert shipped.schema == "bench_kernels/v5"
+    assert shipped.schema == protection.BENCH_KERNELS_SCHEMA == "bench_kernels/v6"
     assert shipped.attention and all(r["bitexact"] for r in shipped.attention)
     assert shipped.attention_long and shipped.crossover
     assert all(r["within_tol"] for r in shipped.attention_long)
     assert any(r["over_budget"] for r in shipped.attention_long)
+    # v6 ABFT twin rows: priced at the winning tiles for reporting, never
+    # consulted by the lookups
+    assert all(e.get("fused_abft_us") and e.get("fused_int8_abft_us")
+               for e in shipped.entries)
